@@ -1,0 +1,91 @@
+"""Subprocess body for the measured benchmarks: 8 virtual CPU devices,
+times real train-step iterations across a grid of (model config x TMP
+degree x schedule) points and prints one JSON dict.
+
+Used by fig6 (cost-model Spearman).  On this single-core container the
+wall-clock signal across *sharding layouts alone* is flat (total FLOPs are
+constant and the core is shared), so the grid also varies the model config
+— the cost model must rank the full grid correctly, which is the property
+the Oases planner relies on (Appendix C)."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, GLOBAL_ATTN, TrainHParams
+from repro.core.axes import mesh_info
+from repro.launch import steps as steps_mod
+from repro.models import params as prm
+from repro.optim import adamw
+
+
+def make_cfg(d_model, layers, d_ff):
+    return ArchConfig(
+        name=f"bench-d{d_model}-l{layers}-f{d_ff}", family="dense",
+        num_layers=layers, d_model=d_model, num_heads=max(d_model // 64, 2),
+        num_kv_heads=max(d_model // 128, 1), d_ff=d_ff, vocab_size=8192,
+        head_dim=64, layer_pattern=(GLOBAL_ATTN,), dtype="float32")
+
+
+# (cfg, seq, batch) grid — spans ~20x in FLOPs
+GRID = [
+    (make_cfg(256, 2, 1024), 128, 8),
+    (make_cfg(256, 4, 1024), 256, 8),
+    (make_cfg(384, 4, 1536), 256, 8),
+    (make_cfg(512, 4, 2048), 256, 8),
+    (make_cfg(512, 6, 2048), 256, 8),
+    (make_cfg(512, 4, 2048), 512, 8),
+    (make_cfg(768, 4, 3072), 256, 8),
+    (make_cfg(768, 6, 3072), 512, 8),
+]
+STRATS = [(8, "megatron", False), (8, "oases", True), (4, "oases", True),
+          (2, "oases", True)]
+BASE_CFG = make_cfg(512, 4, 2048)
+
+
+def measure(cfg, seq, batch, tmp_degree, schedule, fine, iters=3):
+    dp = 8 // tmp_degree
+    mesh = jax.make_mesh((dp, tmp_degree), ("data", "model"))
+    hp = TrainHParams(schedule=schedule, fine_remat=fine, microbatch=1)
+    fn, specs = steps_mod.build_train_step(cfg, mesh, hp,
+                                           global_batch=batch, seq_len=seq)
+    info = mesh_info(mesh)
+    params = prm.init_params(specs, jax.random.PRNGKey(0))
+    opt = adamw.init_opt_state(params, specs, info)
+    k = jax.random.PRNGKey(1)
+    b = {"tokens": jax.random.randint(k, (batch, seq), 0, cfg.vocab_size,
+                                      jnp.int32),
+         "labels": jax.random.randint(k, (batch, seq), 0, cfg.vocab_size,
+                                      jnp.int32)}
+    step = jax.jit(fn)
+    with jax.set_mesh(mesh):
+        params, opt, m = step(params, opt, b)
+        jax.block_until_ready(m["loss"])
+        t0 = time.time()
+        for _ in range(iters):
+            params, opt, m = step(params, opt, b)
+        jax.block_until_ready(m["loss"])
+    return (time.time() - t0) / iters
+
+
+def main():
+    out = {}
+    for cfg, seq, batch in GRID:
+        key = f"{cfg.name}|s{seq}|b{batch}|tmp4|oases"
+        out[key] = measure(cfg, seq, batch, 4, "oases", True)
+        print(f"# {key}: {out[key]*1e3:.0f} ms", file=sys.stderr, flush=True)
+    for tmp, schedule, fine in STRATS:
+        key = (f"{BASE_CFG.name}|s256|b8|tmp{tmp}|{schedule}"
+               + ("" if fine else "-coarse"))
+        out[key] = measure(BASE_CFG, 256, 8, tmp, schedule, fine)
+        print(f"# {key}: {out[key]*1e3:.0f} ms", file=sys.stderr, flush=True)
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

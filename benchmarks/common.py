@@ -1,0 +1,53 @@
+"""Shared benchmark plumbing: the paper's model table, cost-model helpers,
+and the measured-on-CPU calibration path (the paper's 'offline profiling',
+§4.2) used by the cost-model-accuracy figure."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict, List
+
+from repro.configs.base import ShapeConfig, TrainHParams
+from repro.configs.gpt_oases import PAPER_TABLE4, PAPER_TABLE5, paper_shape
+from repro.configs.registry import get_config
+from repro.core.planner import V5E, estimate_iteration, plan
+from repro.core.planner.costmodel import HWConfig
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+SCHEDULES = ["megatron", "wang", "merak", "oases"]
+
+
+def hp_for(schedule: str, fine: bool = None, planner: bool = False):
+    fine = (schedule == "oases") if fine is None else fine
+    return TrainHParams(schedule=schedule, fine_remat=fine,
+                        use_planner=planner)
+
+
+def model_rows():
+    """(name, cfg, tmp_degree, dp, global_batch) from paper Table 4."""
+    return [(k, *v) for k, v in PAPER_TABLE4.items()]
+
+
+def estimate(cfg, shape, hp, degrees, hw=V5E):
+    return estimate_iteration(cfg, shape, hp, degrees, hw)
+
+
+def tokens_per_s(cfg, shape, hp, degrees, hw=V5E) -> float:
+    return estimate(cfg, shape, hp, degrees, hw)["tokens_per_s"]
+
+
+def paper_hw(n_chips: int = 32) -> HWConfig:
+    """A '32 accelerators, commodity interconnect' stand-in used to
+    reproduce the paper's *relative* numbers: low link bandwidth makes TMP
+    comm the bottleneck exactly as on the 3090/PCIe clusters."""
+    return HWConfig(n_chips=n_chips, peak_flops=71e12, hbm_bw=936e9,
+                    link_bw=8e9, hbm_cap=24e9)
+
+
+def ensure_results_dir():
+    os.makedirs(RESULTS, exist_ok=True)
+    return RESULTS

@@ -1,0 +1,32 @@
+"""Figure 2: TMP training iteration breakdown (exposed comm share),
+Megatron-LM vs Oases, on the two motivating model settings."""
+from __future__ import annotations
+
+from benchmarks.common import hp_for, paper_hw
+from repro.configs.gpt_oases import PAPER_TABLE4, paper_shape
+from repro.core.planner import estimate_iteration
+
+
+def run():
+    hw = paper_hw()
+    rows = []
+    for key in ("gpt-h2048", "gpt-h4096"):
+        cfg, tmp, dp, gb = PAPER_TABLE4[key]
+        shape = paper_shape(gb)
+        for sched in ("megatron", "oases"):
+            hp = hp_for(sched)
+            est = estimate_iteration(cfg, shape, hp,
+                                     [tmp] * cfg.num_layers, hw)
+            # exposed comm = iteration - pure-compute iteration
+            hp0 = hp_for(sched)
+            est_nocomm = estimate_iteration(
+                cfg, shape, hp0, [tmp] * cfg.num_layers,
+                type(hw)(**{**hw.__dict__, "link_bw": 1e18}))
+            exposed = max(est["iter_s"] - est_nocomm["iter_s"], 0.0)
+            rows.append({
+                "model": key, "schedule": sched,
+                "iter_ms": round(est["iter_s"] * 1e3, 2),
+                "exposed_comm_ms": round(exposed * 1e3, 2),
+                "comm_share": round(exposed / est["iter_s"], 3),
+            })
+    return rows

@@ -1,0 +1,47 @@
+"""Figure 4: end-to-end training throughput on the paper's seven model
+settings, normalized to Megatron-LM, for all four schedules (+ Oases
+planner).  Evaluated with the overlap-aware cost model on the
+commodity-interconnect hardware profile (paper cluster analogue)."""
+from __future__ import annotations
+
+from benchmarks.common import (SCHEDULES, hp_for, model_rows, paper_hw,
+                               tokens_per_s)
+from repro.configs.gpt_oases import paper_shape
+from repro.core.planner import plan
+
+
+def run():
+    hw = paper_hw()
+    rows = []
+    for name, cfg, tmp, dp, gb in model_rows():
+        shape = paper_shape(gb)
+        base = None
+        per = {}
+        for sched in SCHEDULES:
+            hp = hp_for(sched)
+            tps = tokens_per_s(cfg, shape, hp, [tmp] * cfg.num_layers, hw)
+            per[sched] = tps
+            if sched == "megatron":
+                base = tps
+        # + planner on top of the oases schedule
+        hp = hp_for("oases", planner=True)
+        pr = plan(cfg, shape, hp, hw, mem_cap=hw.hbm_cap)
+        per["oases+planner"] = tokens_per_s(cfg, shape, hp, pr.degrees, hw)
+        row = {"model": name, "tmp": tmp, "batch": gb,
+               "tokens_per_s": {k: round(v, 1) for k, v in per.items()},
+               "normalized": {k: round(v / base, 3) for k, v in per.items()}}
+        rows.append(row)
+    return rows
+
+
+def summarize(rows):
+    best_base = []
+    for r in rows:
+        n = r["normalized"]
+        bb = max(n["megatron"], n["wang"], n["merak"])
+        best_base.append(n["oases+planner"] / bb)
+    return {
+        "speedup_over_megatron": [r["normalized"]["oases+planner"]
+                                  for r in rows],
+        "speedup_over_best_baseline": [round(x, 3) for x in best_base],
+    }

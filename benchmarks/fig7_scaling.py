@@ -1,0 +1,35 @@
+"""Figure 7 / Appendix E: weak scaling (global batch grows with chips) vs
+ideal linear, Megatron vs Oases."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import hp_for, paper_hw
+from repro.configs.base import ShapeConfig
+from repro.configs.gpt_oases import PAPER_TABLE4
+from repro.core.planner import estimate_iteration
+
+
+def run():
+    rows = []
+    for key in ("gpt-h2048", "gpt-h3072"):
+        cfg, tmp, dp, gb = PAPER_TABLE4[key]
+        base_tps = {}
+        for chips in (8, 16, 32, 64, 128, 256, 512):
+            hw = dataclasses.replace(paper_hw(), n_chips=chips)
+            shape = ShapeConfig(f"weak_{chips}", 1024,
+                                gb * chips // 32, "train")
+            opts = tuple(o for o in (2, 4, 8, 16) if o <= chips)
+            for sched in ("megatron", "oases"):
+                est = estimate_iteration(cfg, shape, hp_for(sched),
+                                         [tmp] * cfg.num_layers, hw,
+                                         options=opts)
+                tps = est["tokens_per_s"]
+                if chips == 8:
+                    base_tps[sched] = tps / 8
+                rows.append({
+                    "model": key, "chips": chips, "schedule": sched,
+                    "tokens_per_s": round(tps, 1),
+                    "scaling_eff": round(tps / (base_tps[sched] * chips), 3),
+                })
+    return rows

@@ -1,0 +1,71 @@
+"""Regenerate the EXPERIMENTS.md roofline/dry-run tables from
+results/*.jsonl (run after a sweep)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(path):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    return recs
+
+
+def dryrun_table(recs, mesh):
+    seen = {}
+    for r in recs:
+        if r.get("mesh") == mesh:
+            seen[(r["arch"], r["shape"])] = r   # last wins
+    lines = ["| arch | shape | status | chips | compile_s | args GB | temp GB"
+             " | fits 16GB | collectives |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s), r in sorted(seen.items()):
+        if r["status"] != "OK":
+            lines.append(f"| {a} | {s} | {r['status']} | | | | | | |")
+            continue
+        m = r["mem"]
+        cc = r["hlo"]["collective_counts"]
+        cstr = " ".join(f"{k.split('-')[-1]}:{int(v)}" for k, v in
+                        sorted(cc.items()))
+        lines.append(
+            f"| {a} | {s} | OK | {r['n_chips']} | {r['compile_s']} | "
+            f"{m['argument_bytes']/1e9:.2f} | {m['temp_bytes']/1e9:.2f} | "
+            f"{'Y' if m['fits_16GB'] else 'N'} | {cstr} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    seen = {}
+    for r in recs:
+        if r.get("mesh") == "single":
+            seen[(r["arch"], r["shape"])] = r
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | dominant"
+             " | 6ND/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for (a, s), r in sorted(seen.items()):
+        if r["status"] != "OK":
+            lines.append(f"| {a} | {s} | {r['status']} | | | | | |")
+            continue
+        t = r["terms_s"]
+        lines.append(
+            f"| {a} | {s} | {t['compute_s']:.3f} | {t['memory_s']:.3f} | "
+            f"{t['collective_s']:.3f} | {r['dominant'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    recs = load("results/dryrun.jsonl")
+    print("## single-pod dry-run\n")
+    print(dryrun_table(recs, "single"))
+    print("\n## multi-pod dry-run\n")
+    print(dryrun_table(recs, "multi"))
+    print("\n## roofline (single-pod)\n")
+    print(roofline_table(recs))

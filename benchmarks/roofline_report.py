@@ -1,0 +1,51 @@
+"""§Roofline deliverable: per (arch x shape x mesh) the three roofline terms
+from the compiled dry-run, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs,
+and the roofline fraction.  Reads results/dryrun.jsonl (produced by
+``python -m repro.launch.dryrun --sweep``)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS
+
+
+def load(path=None):
+    path = path or os.path.join(RESULTS, "dryrun.jsonl")
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            recs[(r["arch"], r["shape"], r["mesh"],
+                  r.get("schedule", "oases"))] = r
+    return recs
+
+
+def run():
+    recs = load()
+    rows = []
+    for (arch, shape, mesh, sched), r in sorted(recs.items()):
+        if mesh != "single":      # roofline table is single-pod only
+            continue
+        if r["status"] != "OK":
+            rows.append({"arch": arch, "shape": shape,
+                         "status": r["status"],
+                         "note": r.get("reason", "")[:60]})
+            continue
+        t = r["terms_s"]
+        rows.append({
+            "arch": arch, "shape": shape, "status": "OK",
+            "compute_s": round(t["compute_s"], 4),
+            "memory_s": round(t["memory_s"], 4),
+            "collective_s": round(t["collective_s"], 4),
+            "dominant": r["dominant"].replace("_s", ""),
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+            "roofline_fraction": round(r["roofline_fraction"], 4),
+            "fits_16GB": r["mem"]["fits_16GB"],
+        })
+    return rows

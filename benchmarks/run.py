@@ -1,0 +1,93 @@
+"""Benchmark harness entrypoint — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = the primary latency
+of the row where defined, else the modeled iteration time), then a readable
+JSON dump per table to results/bench_report.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import (fig2_breakdown, fig4_end_to_end, fig6_costmodel,
+                            fig7_scaling, roofline_report, table2_device_eff,
+                            table3_ablation, table6_planner)
+    from benchmarks.common import ensure_results_dir
+
+    report = {}
+    print("name,us_per_call,derived")
+
+    rows = fig2_breakdown.run()
+    report["fig2_breakdown"] = rows
+    for r in rows:
+        print(f"fig2/{r['model']}/{r['schedule']},{r['iter_ms']*1e3:.0f},"
+              f"comm_share={r['comm_share']}")
+
+    rows = fig4_end_to_end.run()
+    report["fig4_end_to_end"] = rows
+    report["fig4_summary"] = fig4_end_to_end.summarize(rows)
+    for r in rows:
+        for sched, norm in r["normalized"].items():
+            tps = r["tokens_per_s"][sched]
+            us = 1e6 * r["batch"] * 1024 / max(tps, 1e-9)
+            print(f"fig4/{r['model']}/{sched},{us:.0f},norm={norm}")
+
+    rows = table2_device_eff.run()
+    report["table2_device_eff"] = rows
+    for r in rows:
+        print(f"table2/{r['model']},0,meg={r['megatron']}"
+              f";oases={r['oases']};ratio={r['ratio']}")
+
+    rows = table3_ablation.run()
+    report["table3_ablation"] = rows
+    for r in rows:
+        s = r["speedup_vs_megatron"]
+        print(f"table3/{r['model']},0," + ";".join(
+            f"{k}={v}" for k, v in s.items()))
+
+    rows = table6_planner.run()
+    report["table6_planner"] = rows
+    for r in rows:
+        print(f"table6/{r['model']},{r['optim_time_ms']*1e3:.0f},"
+              f"plan={r['planned'].replace(',', ' ')}")
+
+    rows = fig7_scaling.run()
+    report["fig7_scaling"] = rows
+    for r in rows:
+        print(f"fig7/{r['model']}/{r['schedule']}/{r['chips']},0,"
+              f"eff={r['scaling_eff']}")
+
+    try:
+        f6 = fig6_costmodel.run()
+        report["fig6_costmodel"] = f6
+        print(f"fig6/spearman,0,rho={f6['spearman']}")
+        for p in f6["points"]:
+            print(f"fig6/{p['strategy'].replace(',', ' ')},"
+                  f"{p['measured_ms']*1e3:.0f},pred_ms={p['predicted_ms']}")
+    except Exception as e:      # measured path needs the 8-dev subprocess
+        report["fig6_costmodel"] = {"error": str(e)[:500]}
+        print("fig6/spearman,0,ERROR")
+
+    rows = roofline_report.run()
+    report["roofline"] = rows
+    for r in rows:
+        if r["status"] != "OK":
+            print(f"roofline/{r['arch']}/{r['shape']},0,{r['status']}")
+            continue
+        dom_us = 1e6 * max(r["compute_s"], r["memory_s"], r["collective_s"])
+        print(f"roofline/{r['arch']}/{r['shape']},{dom_us:.0f},"
+              f"dom={r['dominant']};frac={r['roofline_fraction']}")
+
+    d = ensure_results_dir()
+    with open(os.path.join(d, "bench_report.json"), "w") as f:
+        json.dump(report, f, indent=1)
+    print("# wrote results/bench_report.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Table 2: device efficiency (busy fraction) during TMP training —
+compute-time / iteration-time from the overlap-aware cost model."""
+from __future__ import annotations
+
+from benchmarks.common import hp_for, model_rows, paper_hw
+from repro.core.planner import estimate_iteration
+from repro.core.planner.costmodel import HWConfig
+
+
+def run():
+    hw = paper_hw()
+    rows = []
+    for name, cfg, tmp, dp, gb in model_rows():
+        from repro.configs.gpt_oases import paper_shape
+        shape = paper_shape(gb)
+        out = {"model": name}
+        for sched in ("megatron", "oases"):
+            hp = hp_for(sched)
+            est = estimate_iteration(cfg, shape, hp,
+                                     [tmp] * cfg.num_layers, hw)
+            comp_only = estimate_iteration(
+                cfg, shape, hp, [tmp] * cfg.num_layers,
+                HWConfig(**{**hw.__dict__, "link_bw": 1e18,
+                            "comm_latency": 0.0}))
+            out[sched] = round(comp_only["iter_s"] / est["iter_s"], 3)
+        out["ratio"] = round(out["oases"] / out["megatron"], 2)
+        rows.append(out)
+    return rows

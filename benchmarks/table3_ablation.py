@@ -1,0 +1,37 @@
+"""Table 3: ablation — Megatron-LM -> Merak -> +cross-pass -> +fine-grained
+recomputation -> +planner, throughput (k tokens/s) and speedups."""
+from __future__ import annotations
+
+from benchmarks.common import hp_for, paper_hw, tokens_per_s
+from repro.configs.base import TrainHParams
+from repro.configs.gpt_oases import PAPER_TABLE4, paper_shape
+from repro.core.planner import plan
+
+
+def run():
+    hw = paper_hw()
+    rows = []
+    for key in ("gpt-h2048", "gpt-h4096", "gpt-h8192"):
+        cfg, tmp, dp, gb = PAPER_TABLE4[key]
+        shape = paper_shape(gb)
+        d = [tmp] * cfg.num_layers
+        variants = {
+            "megatron": TrainHParams(schedule="megatron", fine_remat=False),
+            "merak": TrainHParams(schedule="merak", fine_remat=False),
+            "cross_pass": TrainHParams(schedule="oases", fine_remat=False),
+            "fine_remat": TrainHParams(schedule="oases", fine_remat=True),
+        }
+        tps = {k: tokens_per_s(cfg, shape, hp, d, hw)
+               for k, hp in variants.items()}
+        hp = variants["fine_remat"]
+        pr = plan(cfg, shape, hp, hw, mem_cap=hw.hbm_cap)
+        tps["planner"] = tokens_per_s(cfg, shape, hp, pr.degrees, hw)
+        base = tps["megatron"]
+        rows.append({
+            "model": key,
+            "ktok_per_s": {k: round(v / 1e3, 1) for k, v in tps.items()},
+            "speedup_vs_megatron": {k: round(v / base, 2)
+                                    for k, v in tps.items()},
+            "planner_strategy": pr.summary(),
+        })
+    return rows

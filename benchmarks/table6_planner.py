@@ -1,0 +1,30 @@
+"""Table 6: per-layer parallel strategies found by the Oases planner and
+the ILP optimization time."""
+from __future__ import annotations
+
+from benchmarks.common import hp_for, paper_hw
+from repro.configs.gpt_oases import PAPER_TABLE4, paper_shape
+from repro.core.planner import plan, estimate_iteration
+
+
+def run():
+    hw = paper_hw()
+    rows = []
+    for key in ("gpt-h2048", "gpt-h4096", "gpt-h8192"):
+        cfg, tmp, dp, gb = PAPER_TABLE4[key]
+        shape = paper_shape(gb)
+        hp = hp_for("oases")
+        uni = estimate_iteration(cfg, shape, hp, [tmp] * cfg.num_layers, hw)
+        pr = plan(cfg, shape, hp, hw, mem_cap=hw.hbm_cap)
+        rows.append({
+            "model": key,
+            "uniform": f"[[{tmp}] * {cfg.num_layers}]",
+            "uniform_tok_s": round(uni["tokens_per_s"], 1),
+            "planned": " + ".join(f"[{d}] * {n}" for d, n in pr.groups),
+            "planned_tok_s": round(
+                estimate_iteration(cfg, shape, hp, pr.degrees,
+                                   hw)["tokens_per_s"], 1),
+            "optim_time_ms": round(pr.solve_ms, 1),
+            "ilp_status": pr.status,
+        })
+    return rows

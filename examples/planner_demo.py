@@ -1,0 +1,27 @@
+"""Oases planner demo (deliverable b): per-layer TMP degrees from the ILP
+for the paper's model table, plus the cost model's view of each schedule.
+
+    PYTHONPATH=src python examples/planner_demo.py
+"""
+from repro.configs.base import TrainHParams
+from repro.configs.gpt_oases import PAPER_TABLE4, paper_shape
+from repro.core.planner import estimate_iteration, plan
+from repro.core.planner.costmodel import HWConfig
+
+HW = HWConfig(n_chips=32, peak_flops=71e12, hbm_bw=936e9, link_bw=8e9,
+              hbm_cap=24e9)
+
+for key in ("gpt-h2048", "gpt-h4096", "gpt-h8192"):
+    cfg, tmp, dp, gb = PAPER_TABLE4[key]
+    shape = paper_shape(gb)
+    print(f"\n== {key} (paper strategy: TMP={tmp}, DP={dp}, batch={gb}) ==")
+    for sched in ("megatron", "merak", "oases"):
+        hp = TrainHParams(schedule=sched, fine_remat=sched == "oases")
+        est = estimate_iteration(cfg, shape, hp, [tmp] * cfg.num_layers, HW)
+        print(f"  {sched:10s} uniform[{tmp:2d}]: "
+              f"{est['tokens_per_s']/1e3:7.1f} k tok/s")
+    hp = TrainHParams(schedule="oases", fine_remat=True)
+    pr = plan(cfg, shape, hp, HW, mem_cap=HW.hbm_cap)
+    est = estimate_iteration(cfg, shape, hp, pr.degrees, HW)
+    print(f"  oases+ILP  {pr.summary()}")
+    print(f"             -> {est['tokens_per_s']/1e3:7.1f} k tok/s")

@@ -1,0 +1,148 @@
+"""Sharded checkpointing with async writes, atomic commit, keep-last-k GC,
+and reshard-on-load (elastic restarts).
+
+Layout:
+  <dir>/step_<n>.tmp/            while writing
+  <dir>/step_<n>/                after atomic rename (commit point)
+      manifest.json              step, tree structure, leaf shapes/dtypes
+      shard_<i>.npz              leaf arrays (host's addressable shards)
+
+On a multi-host cluster each host writes its addressable shards; this
+container is single-host, so the full arrays land in one shard file.  The
+restore path re-shards to whatever mesh the restarted job brings — pods can
+be dropped/added between runs (elastic scaling).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(kp), v) for kp, v in leaves], treedef
+
+
+def save(ckpt_dir: str, step: int, tree, *, metadata: Optional[dict] = None,
+         keep_last: int = 3) -> str:
+    """Synchronous sharded save with atomic rename."""
+    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    leaves, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": [], "metadata": metadata or {},
+                "time": time.time()}
+    arrays = {}
+    for i, (key, v) in enumerate(leaves):
+        if v is None:
+            manifest["leaves"].append({"key": key, "none": True})
+            continue
+        arr = np.asarray(jax.device_get(v))
+        arrays[f"a{i}"] = arr
+        manifest["leaves"].append(
+            {"key": key, "name": f"a{i}", "shape": list(arr.shape),
+             "dtype": str(arr.dtype)})
+    np.savez(os.path.join(tmp, "shard_0.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # commit point
+    _gc(ckpt_dir, keep_last)
+    return final
+
+
+def _gc(ckpt_dir: str, keep_last: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep_last] if keep_last else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp") \
+                and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            out.append(int(d.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree, *,
+            shardings=None) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like_tree``; device_put with the
+    (possibly different) target shardings — the elastic reshard path."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "shard_0.npz"))
+    by_key = {}
+    for leaf in manifest["leaves"]:
+        by_key[leaf["key"]] = None if leaf.get("none") else data[leaf["name"]]
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        like_tree, is_leaf=lambda x: x is None)
+    shard_leaves = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: x is None) if shardings is not None
+        else [None] * len(leaves))
+    out = []
+    for (kp, like), sh in zip(leaves, shard_leaves):
+        key = jax.tree_util.keystr(kp)
+        arr = by_key.get(key)
+        if arr is None:
+            out.append(None)
+            continue
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        elif hasattr(like, "sharding"):
+            out.append(jax.device_put(arr, like.sharding))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["metadata"]
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: snapshot to host, return immediately."""
+
+    def __init__(self, ckpt_dir: str, keep_last: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep_last = keep_last
+        self._pending: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, metadata: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(
+            lambda v: None if v is None else np.asarray(jax.device_get(v)),
+            tree, is_leaf=lambda x: x is None)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, metadata=metadata,
+                     keep_last=self.keep_last)
+            except BaseException as e:      # surfaced on next wait()
+                self._error = e
+
+        self._pending = threading.Thread(target=work, daemon=True)
+        self._pending.start()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e

@@ -1,0 +1,25 @@
+from repro.configs.base import (
+    ArchConfig,
+    MoEConfig,
+    ShapeConfig,
+    TrainHParams,
+    SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+    applicable_shapes,
+)
+
+__all__ = [
+    "ArchConfig",
+    "MoEConfig",
+    "ShapeConfig",
+    "TrainHParams",
+    "SHAPES",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "applicable_shapes",
+]

@@ -1,0 +1,216 @@
+"""Architecture and shape configuration dataclasses.
+
+Every assigned architecture is a frozen ``ArchConfig``; every assigned input
+shape is a ``ShapeConfig``.  The dry-run sweeps the cross product.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# Layer kinds used in ``layer_pattern`` (repeating cycle over the stack).
+GLOBAL_ATTN = "global"      # full causal self attention
+LOCAL_ATTN = "local"        # sliding-window causal self attention
+RGLRU = "rglru"             # RG-LRU recurrent block (Griffin / RecurrentGemma)
+SSD = "ssd"                 # Mamba2 state-space-duality mixer
+CROSS_ATTN = "cross"        # self-attn + cross-attn to encoder/vision states
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    # 'ep'  -> experts sharded over the model axis (needs E % tp == 0)
+    # 'tmp' -> all experts on every chip, expert d_ff sharded over model axis
+    sharding: str = "ep"
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | hybrid | vlm | audio | moe | ssm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    layer_pattern: Tuple[str, ...] = (GLOBAL_ATTN,)
+    window: int = 4096               # local attention window
+    attn_softcap: float = 0.0        # gemma2 attention logit softcap
+    final_softcap: float = 0.0       # gemma2 final logit softcap
+    rope_theta: float = 10000.0
+    moe: Optional[MoEConfig] = None
+    # SSM (mamba2) params
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    # RG-LRU params
+    rglru_width: int = 0             # 0 -> d_model
+    # encoder/decoder (whisper) — decoder uses num_layers
+    encoder_layers: int = 0
+    # cross-attn context (vision/audio frontend stub)
+    context_len: int = 0             # number of frontend embedding tokens
+    context_dim: int = 0             # frontend embedding dim (0 -> d_model)
+    tie_embeddings: bool = False
+    post_norms: bool = False         # gemma2 sandwich norms
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    source: str = ""
+
+    # ---- derived ----
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    def padded_vocab(self, multiple: int = 256) -> int:
+        return _round_up(self.vocab_size, multiple)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(k in (RGLRU, SSD) for k in self.layer_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when no layer is full (global/cross) attention -> can run 500k."""
+        return all(k in (RGLRU, SSD, LOCAL_ATTN) for k in self.layer_pattern)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def param_count(self) -> int:
+        """Approximate total parameter count (used for 6ND MODEL_FLOPS)."""
+        hd = self.resolved_head_dim
+        d = self.d_model
+        per_layer = 0
+        n_pattern = len(self.layer_pattern)
+        for kind in self.layer_pattern:
+            p = 2 * d  # two norms
+            if kind in (GLOBAL_ATTN, LOCAL_ATTN, CROSS_ATTN):
+                p += d * self.num_heads * hd           # q
+                p += 2 * d * self.num_kv_heads * hd    # k, v
+                p += self.num_heads * hd * d           # o
+                if kind == CROSS_ATTN:
+                    p *= 2  # extra cross-attention projections
+            elif kind == RGLRU:
+                w = self.rglru_width or d
+                p += 2 * d * w + w * d   # in (x,gate) + out proj
+                p += 3 * w               # recurrent gates (a, input gate, diag)
+                p += 2 * w * self.window // self.window  # conv-ish, negligible
+            elif kind == SSD:
+                dinner = self.ssm_expand * d
+                nheads = dinner // self.ssm_headdim
+                p += d * (2 * dinner + 2 * self.ssm_state + nheads)  # in_proj
+                p += dinner * d                                       # out_proj
+                p += dinner + 2 * self.ssm_state                      # conv/dt
+            if self.moe is not None:
+                p += d * self.moe.num_experts                         # router
+                p += self.moe.num_experts * 3 * d * self.d_ff         # experts
+            elif kind != SSD or self.d_ff:
+                p += 3 * d * self.d_ff                                # swiglu
+            per_layer += p
+        total = self.num_layers * per_layer // n_pattern * n_pattern
+        # handle non-divisible stacks: scale per-layer average
+        total = round(self.num_layers * per_layer / n_pattern)
+        total += self.padded_vocab() * d            # embedding
+        if not self.tie_embeddings:
+            total += self.padded_vocab() * d        # lm head
+        if self.encoder_layers:
+            enc_per = 2 * d + 2 * (d * self.num_heads * hd
+                                   + d * self.num_kv_heads * hd) // 1
+            enc_per += self.num_heads * hd * d + 3 * d * self.d_ff
+            total += self.encoder_layers * enc_per
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE uses top_k of num_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        expert_p = self.num_layers * self.moe.num_experts * 3 * self.d_model * self.d_ff
+        active_expert_p = self.num_layers * self.moe.top_k * 3 * self.d_model * self.d_ff
+        return int(full - expert_p + active_expert_p)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw = dict(
+            name=self.name + "-smoke",
+            num_layers=min(self.num_layers, 2 * len(self.layer_pattern)),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            d_ff=256,
+            vocab_size=512,
+            head_dim=32,
+            window=64,
+            context_len=min(self.context_len, 16) if self.context_len else 0,
+            context_dim=64 if self.context_dim else 0,
+            encoder_layers=min(self.encoder_layers, 2),
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_headdim=32,
+            rglru_width=128 if self.rglru_width else 0,
+        )
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(self.moe, num_experts=4, top_k=2)
+            kw["d_ff"] = 64
+        return self.replace(**kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def applicable_shapes(arch: ArchConfig):
+    """Shapes that are well-defined for this arch; others are recorded SKIPs."""
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if arch.sub_quadratic:
+        out.append(LONG_500K)
+    return out
+
+
+@dataclass(frozen=True)
+class TrainHParams:
+    """Run-level hyper-parameters (config system for the launcher)."""
+    schedule: str = "oases"          # megatron | wang | merak | oases
+    fine_remat: bool = True          # §3.2 fine-grained recomputation
+    use_planner: bool = False        # per-layer TMP degrees from the ILP
+    split: int = 2                   # sub-batch split factor (paper: 2)
+    seq_parallel: bool = False       # beyond-paper: AG/RS sequence-parallel TMP
+    remat: bool = True
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    grad_clip: float = 1.0
+    zero1: bool = True
+    grad_compress: bool = False       # int8 + error feedback on cross-pod axis
+    microbatch: int = 0               # 0 = no accumulation
+    use_pallas: bool = False          # swap in TPU Pallas kernels
+    loss_chunk: int = 512             # chunked vocab-parallel xent seq chunk

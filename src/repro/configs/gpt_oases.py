@@ -1,0 +1,46 @@
+"""The paper's own model table (Appendix B, Tables 4–5), used by the
+benchmark harness to reproduce Figures 2/4/5 and Tables 2/3/6.
+
+The end-to-end models are decoder-only transformers denoted H<hidden>-L<layers>;
+seq_len 1024; 32 GPUs. GPT-18.4B / GPT-39.1B are the PMP experiments.
+"""
+from repro.configs.base import ArchConfig, GLOBAL_ATTN, ShapeConfig
+
+
+def _gpt(name, hidden, layers, heads):
+    return ArchConfig(
+        name=name,
+        family="dense",
+        num_layers=layers,
+        d_model=hidden,
+        num_heads=heads,
+        num_kv_heads=heads,           # paper models are MHA
+        d_ff=4 * hidden,
+        vocab_size=50304,             # GPT-2 vocab padded
+        layer_pattern=(GLOBAL_ATTN,),
+        source="Oases paper, Appendix B Table 4/5",
+    )
+
+
+# Table 4: (hidden, layers, heads, TMP, DP, global batch)
+PAPER_TABLE4 = {
+    "gpt-h1024": (_gpt("gpt-h1024", 1024, 24, 16), 2, 16, 256),
+    "gpt-h2048": (_gpt("gpt-h2048", 2048, 24, 32), 4, 8, 128),
+    "gpt-h3072": (_gpt("gpt-h3072", 3072, 24, 48), 4, 8, 32),
+    "gpt-h4096": (_gpt("gpt-h4096", 4096, 16, 64), 4, 8, 32),
+    "gpt-h6144": (_gpt("gpt-h6144", 6144, 16, 96), 8, 4, 8),
+    "gpt-h8192": (_gpt("gpt-h8192", 8192, 8, 128), 8, 4, 8),
+    "gpt-h12288": (_gpt("gpt-h12288", 12288, 4, 192), 8, 4, 8),
+}
+
+# Table 5: complete-model PMP experiments.
+PAPER_TABLE5 = {
+    "gpt-18.4b": (_gpt("gpt-18.4b", 6144, 40, 48), 4, 4, 2),   # (cfg, PMP, TMP, DP)
+    "gpt-39.1b": (_gpt("gpt-39.1b", 8192, 48, 64), 4, 8, 1),
+}
+
+PAPER_SEQ_LEN = 1024
+
+
+def paper_shape(global_batch: int) -> ShapeConfig:
+    return ShapeConfig(f"paper_b{global_batch}", PAPER_SEQ_LEN, global_batch, "train")

@@ -1,0 +1,116 @@
+"""Mesh-axis bookkeeping.
+
+Two mesh flavours exist:
+
+* uniform meshes — ``('data','model')`` / ``('pod','data','model')`` — used for
+  the 40 baseline dry-run cells (TMP degree = |model| everywhere), and
+* the planner (factored) mesh — ``('data','t1','t2','t3','t4')`` — where the
+  16-way model axis is split into binary sub-axes so a per-layer TMP degree
+  ``n = 2^k`` is "shard over the first k t-axes, data-parallel over the rest"
+  (paper §4.2: partitioning schemes limited to powers of two).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+T_AXES: Tuple[str, ...] = ("t1", "t2", "t3", "t4")
+
+
+@dataclass(frozen=True)
+class MeshInfo:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...]   # ('pod','data') ∩ mesh axes
+    model_axes: Tuple[str, ...]   # ('model',) or a prefix-factorable T_AXES
+
+    @property
+    def tp(self) -> int:
+        s = dict(self.mesh.shape)
+        return math.prod(s[a] for a in self.model_axes) if self.model_axes else 1
+
+    @property
+    def dp(self) -> int:
+        s = dict(self.mesh.shape)
+        return math.prod(s[a] for a in self.batch_axes) if self.batch_axes else 1
+
+    @property
+    def factored(self) -> bool:
+        return self.model_axes and self.model_axes[0] != "model"
+
+    # ---- per-degree axis algebra (planner / factored mesh only) ----
+    def tp_axes(self, degree: Optional[int] = None) -> Tuple[str, ...]:
+        """Model axes carrying TMP sharding for a layer of given degree."""
+        if degree is None or degree == self.tp:
+            return self.model_axes
+        if not self.factored:
+            raise ValueError(
+                f"degree {degree} != mesh tp {self.tp} requires the factored mesh")
+        if degree == 1:
+            return ()
+        k = int(math.log2(degree))
+        if 2 ** k != degree or degree > self.tp:
+            raise ValueError(f"TMP degree must be a power of two <= {self.tp}")
+        return self.model_axes[:k]
+
+    def extra_dp_axes(self, degree: Optional[int] = None) -> Tuple[str, ...]:
+        """Model axes a lower-degree layer reuses as extra data parallelism."""
+        used = self.tp_axes(degree)
+        return tuple(a for a in self.model_axes if a not in used)
+
+    def all_batch_axes(self, degree: Optional[int] = None) -> Tuple[str, ...]:
+        return self.batch_axes + self.extra_dp_axes(degree)
+
+    def axes_not_in(self, pspec: P) -> Tuple[str, ...]:
+        """Mesh axes a tensor with this PartitionSpec is *replicated* over.
+
+        Used to derive the gradient all-reduce group of each parameter.
+        """
+        used = set()
+        for entry in pspec:
+            if entry is None:
+                continue
+            if isinstance(entry, (tuple, list)):
+                used.update(entry)
+            else:
+                used.add(entry)
+        return tuple(a for a in self.mesh.axis_names if a not in used)
+
+
+def mesh_info(mesh: Mesh) -> MeshInfo:
+    names = tuple(mesh.axis_names)
+    batch = tuple(a for a in ("pod", "data") if a in names)
+    if "model" in names:
+        model: Tuple[str, ...] = ("model",)
+    else:
+        model = tuple(a for a in T_AXES if a in names)
+    return MeshInfo(mesh=mesh, batch_axes=batch, model_axes=model)
+
+
+def batch_pspec(info: MeshInfo, global_batch: int,
+                degree: Optional[int] = None) -> P:
+    """Sharding of the batch dim; falls back gracefully when not divisible
+    (e.g. long_500k has global_batch=1 -> replicated batch)."""
+    axes = []
+    s = dict(info.mesh.shape)
+    rem = global_batch
+    for a in info.all_batch_axes(degree):
+        if rem % s[a] == 0:
+            axes.append(a)
+            rem //= s[a]
+    return P(tuple(axes) if axes else None)
+
+
+def local_batch(info: MeshInfo, global_batch: int,
+                degree: Optional[int] = None) -> int:
+    spec = batch_pspec(info, global_batch, degree)
+    s = dict(info.mesh.shape)
+    div = 1
+    entry = spec[0] if len(spec) else None
+    if entry:
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            div *= s[a]
+    return global_batch // div

@@ -1,0 +1,6 @@
+from repro.core.planner.costmodel import (HWConfig, V5E, estimate_iteration,
+                                          layer_blocks, node_costs)
+from repro.core.planner.ilp import PlanResult, plan
+
+__all__ = ["HWConfig", "V5E", "estimate_iteration", "layer_blocks",
+           "node_costs", "PlanResult", "plan"]

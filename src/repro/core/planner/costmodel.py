@@ -1,0 +1,268 @@
+"""Oases planner cost model (paper §4.2), adapted to TPU roofline terms.
+
+The model graph is blocks = (computation sequence, trailing collective) —
+for a transformer layer that is [attn-block, mlp-block].  For each block and
+each candidate TMP degree n ∈ {2,4,8,16} (powers of two, paper §4.2) we
+compute:
+
+* d(F), d(B)   — per-sub-batch compute seconds (bwd ≈ 2x fwd + recompute),
+* c(F), c(B)   — per-sub-batch AllReduce seconds, volume 2K(n-1)/n (paper
+                 §4 observation i), K = per-chip activation bytes; with
+                 coarse remat the *recompute* collectives are added to c(B)
+                 — this is how the planner "models the overlapping schedule"
+                 (fine-grained recomputation removes them, §3.2),
+* m_s, m_t, m_r — Eq. 6 memory terms (param+optimizer state, saved tensors,
+                 backward runtime), per chip.
+
+Eq. 3 node costs use max{compute, comm} overlap; Eq. 4 edge costs charge the
+batch-resharding AllGather between degree groups plus the overlap destroyed
+by that blocking gather.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+from repro.configs.base import (ArchConfig, CROSS_ATTN, GLOBAL_ATTN,
+                                LOCAL_ATTN, RGLRU, SSD, ShapeConfig,
+                                TrainHParams)
+
+
+@dataclass(frozen=True)
+class HWConfig:
+    n_chips: int = 256
+    peak_flops: float = 197e12       # bf16
+    hbm_bw: float = 819e9
+    link_bw: float = 50e9
+    hbm_cap: float = 16e9
+    mxu_base_eff: float = 0.6        # achievable fraction at healthy shapes
+    bytes_act: int = 2               # bf16 activations
+    # calibration scale (CPU measurements use different constants)
+    comm_latency: float = 5e-6       # per-collective latency floor
+
+
+V5E = HWConfig()
+
+
+def _mxu_eff(hw: HWConfig, *dims: int) -> float:
+    """Efficiency discount for narrow per-chip matmul dims (the paper's
+    arithmetic-density caveat, §5.6)."""
+    eff = hw.mxu_base_eff
+    for d in dims:
+        if d < 512:
+            eff *= max(d, 16) / 512.0
+    return max(eff, 0.02 * hw.mxu_base_eff)
+
+
+@dataclass
+class BlockCost:
+    name: str
+    flops_fwd: float          # total fwd flops for the whole global batch
+    comm_bytes_k: float       # K: per-*replica-group* AllReduce payload bytes
+    n_collectives: int        # collectives in this block's forward
+    params: int               # parameters in this block
+    act_saved: float          # bytes saved for bwd per chip (fine remat)
+
+
+def _attn_flops(cfg: ArchConfig, tokens: int, seq: int, window=None) -> float:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    proj = 2.0 * tokens * d * (cfg.num_heads * hd + 2 * cfg.num_kv_heads * hd
+                               + cfg.num_heads * hd)
+    ctx = min(window or seq, seq)
+    attn = 2.0 * 2.0 * tokens * ctx * cfg.num_heads * hd
+    return proj + attn
+
+
+def _block_costs(cfg: ArchConfig, kind: str, tokens: int, seq: int) -> List[BlockCost]:
+    """Blocks for one layer; flops are global-batch totals."""
+    d = cfg.d_model
+    out = []
+    if kind in (GLOBAL_ATTN, LOCAL_ATTN, CROSS_ATTN):
+        window = cfg.window if kind == LOCAL_ATTN else None
+        fl = _attn_flops(cfg, tokens, seq, window)
+        p = d * cfg.resolved_head_dim * (2 * cfg.num_heads
+                                         + 2 * cfg.num_kv_heads)
+        out.append(BlockCost("attn", fl, tokens * d, 1, p, 2 * tokens * d))
+        if kind == CROSS_ATTN:
+            out.append(BlockCost("xattn", fl, tokens * d, 1, p,
+                                 2 * tokens * d))
+    elif kind == RGLRU:
+        w = cfg.rglru_width or d
+        fl = 2.0 * tokens * d * 3 * w + 10.0 * tokens * w
+        out.append(BlockCost("rglru", fl, tokens * d, 1, 3 * d * w,
+                             2 * tokens * d))
+    elif kind == SSD:
+        d_inner = cfg.ssm_expand * d
+        nh = d_inner // cfg.ssm_headdim
+        n = cfg.ssm_state
+        fl = (2.0 * tokens * d * (3 * d_inner + 2 * n + nh)
+              + 2.0 * tokens * d_inner * n * 4)
+        out.append(BlockCost("ssd", fl, 0.0, 0, 3 * d * d_inner,
+                             2 * tokens * d))
+    if kind != SSD and cfg.d_ff:
+        if cfg.moe is not None:
+            fl = 2.0 * tokens * 3 * d * cfg.d_ff * cfg.moe.top_k
+            p = cfg.moe.num_experts * 3 * d * cfg.d_ff
+        else:
+            fl = 2.0 * tokens * 3 * d * cfg.d_ff
+            p = 3 * d * cfg.d_ff
+        out.append(BlockCost("mlp", fl, tokens * d, 1, p, 2 * tokens * d))
+    return out
+
+
+def layer_blocks(cfg: ArchConfig, shape: ShapeConfig) -> List[List[BlockCost]]:
+    """Per layer: its blocks (the planner's graph nodes), for all layers."""
+    tokens = shape.global_batch * shape.seq_len
+    pat = cfg.layer_pattern
+    return [_block_costs(cfg, pat[i % len(pat)], tokens, shape.seq_len)
+            for i in range(cfg.num_layers)]
+
+
+@dataclass
+class NodeCosts:
+    """Per (block, degree-option): everything Eq. 3/6 needs (seconds/bytes
+    per chip, per sub-batch)."""
+    d_f: List[float]
+    c_f: List[float]
+    d_b: List[float]
+    c_b: List[float]
+    mem_s: List[float]
+    mem_t: List[float]
+
+
+def node_costs(cfg: ArchConfig, blk: BlockCost, shape: ShapeConfig,
+               hp: TrainHParams, hw: HWConfig,
+               options: Sequence[int]) -> NodeCosts:
+    split = max(hp.split, 1)
+    out = NodeCosts([], [], [], [], [], [])
+    tokens = shape.global_batch * shape.seq_len
+    for n in options:
+        dp = max(hw.n_chips // n, 1)
+        t_chip = tokens / dp                    # tokens on this chip / iter
+        # gradient accumulation bounds live activations (auto ~8k tok/chip)
+        micro = hp.microbatch if hp.microbatch > 0 else \
+            max(1, int(math.ceil(t_chip / 8192.0)))
+        t_live = t_chip / micro
+        width = max(cfg.d_ff, cfg.num_heads * cfg.resolved_head_dim) // n
+        eff = _mxu_eff(hw, width, int(t_live // split))
+        d_f = blk.flops_fwd / hw.n_chips / (hw.peak_flops * eff) / split / micro
+        # AllReduce of the block output: per-chip payload K(n) (per micro,
+        # per sub-batch; the totals below are multiplied back by micro)
+        k_bytes = (t_live / split) * (blk.comm_bytes_k / max(tokens, 1)) \
+            * hw.bytes_act if blk.comm_bytes_k else 0.0
+        ring = 2.0 * (n - 1) / n if n > 1 else 0.0
+        c_f = (k_bytes * ring / hw.link_bw + hw.comm_latency) \
+            if blk.n_collectives else 0.0
+        # NOTE: d/c are per (micro x sub-batch) slot; Eq. 3 sums over slots.
+        # Scale both by micro so node costs stay per-iteration.
+        d_f *= micro
+        c_f *= micro
+        # backward: 2x fwd compute (+1x recompute when remat)
+        recompute = 1.0 if hp.remat else 0.0
+        d_b = d_f * (2.0 + recompute)
+        c_b = c_f  # grad-side AllReduce
+        if hp.remat and not hp.fine_remat:
+            c_b += c_f  # coarse remat re-executes the forward collective
+        # memory per chip (Eq. 6): bf16 weights /n, f32 master+m+v ZeRO'd /dp
+        zdp = dp if hp.zero1 else 1
+        mem_s = blk.params * (2.0 / n + 12.0 / (n * zdp))
+        # saved tensors live only for one microbatch; fine remat additionally
+        # keeps each block's collective output (the §3.2 memory<->comm trade)
+        mem_t = (t_live * cfg.d_model * hw.bytes_act
+                 * (1.5 if hp.fine_remat else 0.5))
+        out.d_f.append(d_f)
+        out.c_f.append(c_f)
+        out.d_b.append(d_b)
+        out.c_b.append(c_b)
+        out.mem_s.append(mem_s)
+        out.mem_t.append(mem_t)
+    return out
+
+
+def edge_cost(cfg: ArchConfig, shape: ShapeConfig, hw: HWConfig,
+              n_from: int, n_to: int, node_from: NodeCosts, i_from: int,
+              i_to: int) -> float:
+    """Eq. 4: resharding AllGather + destroyed overlap."""
+    if n_from == n_to:
+        return 0.0
+    tokens = shape.global_batch * shape.seq_len
+    d = cfg.d_model
+    if n_to > n_from:
+        # batch gathered over ratio r on the way in (forward AllGather)
+        dp_to = max(hw.n_chips // n_to, 1)
+        r = n_to // n_from
+        gathered = tokens / dp_to * d * hw.bytes_act
+        t_ag = gathered * (r - 1) / r / hw.link_bw + hw.comm_latency
+    else:
+        # degree decrease: free local slice fwd, AllGather in backward
+        dp_from = max(hw.n_chips // n_from, 1)
+        r = n_from // n_to
+        gathered = tokens / dp_from * d * hw.bytes_act
+        t_ag = gathered * (r - 1) / r / hw.link_bw + hw.comm_latency
+    # destroyed overlap: the blocking gather serializes what the last
+    # collective of `from` could have hidden (min term of Eq. 4)
+    lost = min(node_from.c_f[i_from], node_from.d_f[i_to])
+    return t_ag + lost
+
+
+def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
+                       degrees: Sequence[int], hw: HWConfig = V5E,
+                       options: Sequence[int] = (2, 4, 8, 16)) -> Dict:
+    """Evaluate f(s) (Eq. 3–5) for a concrete per-layer strategy.  Also the
+    cost model used by benchmarks/fig6 (Spearman vs measured)."""
+    blocks = layer_blocks(cfg, shape)
+    opt_index = {n: i for i, n in enumerate(options)}
+    seq = []   # (NodeCosts, option_idx, degree)
+    for layer, degree in zip(blocks, degrees):
+        for blk in layer:
+            nc = node_costs(cfg, blk, shape, hp, hw, options)
+            seq.append((nc, opt_index[degree], degree))
+
+    split = max(hp.split, 1)
+    overlap = hp.schedule in ("oases", "merak")
+
+    def pass_time(dkey, ckey):
+        total = 0.0
+        prev_c = 0.0
+        for nc, j, n in seq:
+            d = getattr(nc, dkey)[j]
+            c = getattr(nc, ckey)[j]
+            if split > 1 and overlap:
+                # Eq. 3: sub-batch 0 compute overlaps previous comm; sub-batch
+                # 1 compute overlaps own sub-batch-0 comm
+                total += max(d, prev_c) + max(d, c)
+                prev_c = c
+            elif hp.schedule == "wang":
+                # intra-op decomposition hides all but one chunk
+                total += split * d + c / max(hp.split * 2, 1) + c * 0.1
+            else:
+                total += split * d + split * c
+                prev_c = 0.0
+        total += prev_c   # cool-down: last collective exposed
+        return total
+
+    t_f = pass_time("d_f", "c_f")
+    t_b = pass_time("d_b", "c_b")
+    # edges
+    t_e = 0.0
+    for a in range(len(seq) - 1):
+        n1, n2 = seq[a][2], seq[a + 1][2]
+        if n1 != n2:
+            t_e += edge_cost(cfg, shape, hw, n1, n2, seq[a][0], seq[a][1],
+                             seq[a + 1][1]) * 2  # fwd + bwd reshard
+    # memory (Eq. 6)
+    mem = 0.0
+    for nc, j, n in seq:
+        mem += nc.mem_s[j] + nc.mem_t[j]
+    vp = cfg.padded_vocab()
+    head = vp * cfg.d_model * (2.0 / max(degrees[-1], 1)) * (1 if cfg.tie_embeddings else 2)
+    mem += head + head * 6.0    # embed/head + optimizer states
+    m_r = 4.0 * shape.global_batch * shape.seq_len * cfg.d_model \
+        * hw.bytes_act / (hw.n_chips / max(degrees[-1], 1))
+    mem += m_r
+    total = t_f + t_b + t_e
+    return {"iter_s": total, "fwd_s": t_f, "bwd_s": t_b, "edge_s": t_e,
+            "mem_bytes": mem, "fits": mem < hw.hbm_cap,
+            "tokens_per_s": shape.global_batch * shape.seq_len / total}

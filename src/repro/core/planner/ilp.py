@@ -1,0 +1,181 @@
+"""Oases planner ILP (paper §4, Eq. 2–6), solved with scipy HiGHS.
+
+Decision: one-hot s_{i,j} over TMP-degree options per graph node (block).
+Eq. 3's max{} terms are linearized with auxiliary continuous u-variables;
+Eq. 5's quadratic edge term s_v^T R s_u with per-edge product binaries
+y_{jk} >= s_vj + s_uk - 1.  Eq. 6 memory is a single linear constraint.
+
+Same-layer blocks share one degree (the paper plans per layer, Table 6), so
+s is per-LAYER and the per-block costs are summed within a layer.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+from scipy.optimize import LinearConstraint, milp
+from scipy.sparse import lil_matrix
+
+from repro.configs.base import ArchConfig, ShapeConfig, TrainHParams
+from repro.core.planner import costmodel as cm
+
+
+@dataclass
+class PlanResult:
+    degrees: List[int]
+    predicted_s: float
+    solve_ms: float
+    status: str
+    groups: List[Tuple[int, int]]          # (degree, count) runs
+
+    def summary(self) -> str:
+        runs = " + ".join(f"[{d}] * {n}" for d, n in self.groups)
+        return (f"[{runs}] predicted {self.predicted_s*1e3:.1f} ms/iter "
+                f"(ILP {self.solve_ms:.1f} ms, {self.status})")
+
+
+def _runs(degrees: Sequence[int]) -> List[Tuple[int, int]]:
+    out = []
+    for d in degrees:
+        if out and out[-1][0] == d:
+            out[-1] = (d, out[-1][1] + 1)
+        else:
+            out.append((d, 1))
+    return out
+
+
+def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
+         hw: cm.HWConfig = cm.V5E,
+         options: Sequence[int] = (2, 4, 8, 16),
+         mem_cap: Optional[float] = None,
+         time_limit: float = 20.0) -> PlanResult:
+    t0 = time.time()
+    L = cfg.num_layers
+    P = len(options)
+    mem_cap = mem_cap if mem_cap is not None else hw.hbm_cap
+
+    # per-layer aggregated cost vectors (blocks within a layer summed;
+    # overlap structure handled via per-layer fwd/bwd exposed-cost upper
+    # bound below)
+    blocks = cm.layer_blocks(cfg, shape)
+    d_f = np.zeros((L, P)); c_f = np.zeros((L, P))
+    d_b = np.zeros((L, P)); c_b = np.zeros((L, P))
+    mem = np.zeros((L, P))
+    for i, layer in enumerate(blocks):
+        for blk in layer:
+            nc = cm.node_costs(cfg, blk, shape, hp, hw, options)
+            d_f[i] += nc.d_f; c_f[i] += nc.c_f
+            d_b[i] += nc.d_b; c_b[i] += nc.c_b
+            mem[i] += np.array(nc.mem_s) + np.array(nc.mem_t)
+
+    split = max(hp.split, 1)
+    overlap = hp.schedule in ("oases", "merak") and split > 1
+
+    # Eq. 3 per layer, both passes:
+    #   overlap: cost >= split*d   and cost >= (split-1)*d + c   (comm hidden
+    #            behind the other sub-batch's compute, cool-down exposed)
+    #   no overlap: cost = split*(d + c)
+    # Variables: x = [s(0,0)..s(L-1,P-1), uF_0..uF_{L-1}, uB_..., y_edges]
+    nS = L * P
+    nU = 2 * L
+    # edges between consecutive layers with product binaries
+    edges = [(i, i + 1) for i in range(L - 1)]
+    nY = len(edges) * P * P
+    N = nS + nU + nY
+
+    cost = np.zeros(N)
+    integrality = np.zeros(N)
+    integrality[:nS] = 1
+    integrality[nS + nU:] = 1
+    lb = np.zeros(N)
+    ub = np.ones(N)
+    ub[nS:nS + nU] = np.inf
+
+    # objective: sum of u variables + edge costs via y
+    cost[nS:nS + nU] = 1.0
+
+    rows = []
+    lo = []
+    hi = []
+
+    def add(coefs: Dict[int, float], lo_v, hi_v):
+        rows.append(coefs)
+        lo.append(lo_v)
+        hi.append(hi_v)
+
+    # one-hot rows
+    for i in range(L):
+        add({i * P + j: 1.0 for j in range(P)}, 1.0, 1.0)
+
+    # u constraints
+    for i in range(L):
+        uf = nS + i
+        ubk = nS + L + i
+        if overlap:
+            add({uf: 1.0, **{i * P + j: -split * d_f[i, j]
+                             for j in range(P)}}, 0.0, np.inf)
+            add({uf: 1.0, **{i * P + j: -((split - 1) * d_f[i, j] + c_f[i, j])
+                             for j in range(P)}}, 0.0, np.inf)
+            add({ubk: 1.0, **{i * P + j: -split * d_b[i, j]
+                              for j in range(P)}}, 0.0, np.inf)
+            add({ubk: 1.0, **{i * P + j: -((split - 1) * d_b[i, j] + c_b[i, j])
+                              for j in range(P)}}, 0.0, np.inf)
+        else:
+            add({uf: 1.0, **{i * P + j: -split * (d_f[i, j] + c_f[i, j])
+                             for j in range(P)}}, 0.0, np.inf)
+            add({ubk: 1.0, **{i * P + j: -split * (d_b[i, j] + c_b[i, j])
+                              for j in range(P)}}, 0.0, np.inf)
+
+    # edge products + costs
+    for e, (a, b) in enumerate(edges):
+        nca = None
+        for j in range(P):
+            for k in range(P):
+                yi = nS + nU + e * P * P + j * P + k
+                if options[j] == options[k]:
+                    ub[yi] = 1.0
+                else:
+                    # y >= s_a,j + s_b,k - 1
+                    add({yi: 1.0, a * P + j: -1.0, b * P + k: -1.0},
+                        -1.0, np.inf)
+                # cost of choosing (j, k) across this edge
+                if options[j] != options[k]:
+                    nc_from = cm.NodeCosts(
+                        [d_f[a, j]], [c_f[a, j]], [d_b[a, j]], [c_b[a, j]],
+                        [0], [0])
+                    cost[yi] = cm.edge_cost(
+                        cfg, shape, hw, options[j], options[k],
+                        nc_from, 0, 0) * 2.0
+
+    # Eq. 6 memory: sum_i s_i . mem_i + fixed <= cap
+    vp = cfg.padded_vocab()
+    fixed = vp * cfg.d_model * 2.0 / max(options) * (2 if not cfg.tie_embeddings else 1)
+    fixed *= 7.0  # + f32 optimizer states
+    add({i * P + j: mem[i, j] for i in range(L) for j in range(P)},
+        -np.inf, mem_cap - fixed)
+
+    A = lil_matrix((len(rows), N))
+    for r, coefs in enumerate(rows):
+        for c_idx, v in coefs.items():
+            A[r, c_idx] = v
+    con = LinearConstraint(A.tocsc(), np.array(lo), np.array(hi))
+    res = milp(c=cost, constraints=con, integrality=integrality,
+               bounds=(lb, ub),
+               options={"time_limit": time_limit, "presolve": True})
+    solve_ms = (time.time() - t0) * 1e3
+
+    if res.x is None:
+        # infeasible (e.g. memory cap too tight at low degrees): fall back
+        # to uniform max degree
+        degrees = [max(options)] * L
+        est = cm.estimate_iteration(cfg, shape, hp, degrees, hw, options)
+        return PlanResult(degrees, est["iter_s"], solve_ms,
+                          f"fallback:{res.status}", _runs(degrees))
+
+    s = res.x[:nS].reshape(L, P)
+    degrees = [int(options[int(np.argmax(s[i]))]) for i in range(L)]
+    est = cm.estimate_iteration(cfg, shape, hp, degrees, hw, options)
+    return PlanResult(degrees, est["iter_s"], solve_ms,
+                      str(res.status), _runs(degrees))

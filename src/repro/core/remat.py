@@ -1,0 +1,31 @@
+"""Recomputation policies (paper §3.2).
+
+* coarse  — Megatron/Merak default: save only block inputs; recomputation
+  re-executes everything **including the TMP collectives**.
+* fine    — Oases fine-grained recomputation: additionally save every TMP
+  collective *output* (they are tagged ``checkpoint_name(.., COLLECTIVE_NAME)``
+  in :func:`repro.core.tmp.tmp_reduce`).  The rematerialized subgraph then
+  contains zero TMP collectives — Eq. (1) says their gradient contribution is
+  identity, and the forward values are residuals, so the AllReduce is dead
+  code in recompute.  ``tests/test_remat.py`` asserts this on real HLO.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.core.tmp import COLLECTIVE_NAME
+
+
+def remat_policy(fine: bool):
+    if fine:
+        return jax.checkpoint_policies.save_only_these_names(COLLECTIVE_NAME)
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def maybe_checkpoint(fn, *, remat: bool, fine: bool, prevent_cse: bool = True):
+    if not remat:
+        return fn
+    return jax.checkpoint(fn, policy=remat_policy(fine),
+                          prevent_cse=prevent_cse)

@@ -1,0 +1,136 @@
+"""The four TMP training schedules (paper §3, Fig. 3, Alg. 1–2).
+
+All schedules are expressed as *program structure*; on TPU the XLA
+latency-hiding scheduler turns the admitted independence into actual
+comm/compute overlap (DESIGN.md §2):
+
+* ``megatron`` — Fig. 3a: one batch, strictly sequential blocked AllReduce.
+* ``wang``     — Wang et al. [53]: decompose each row-parallel matmul into
+  chunks so chunk i's AllReduce overlaps chunk i+1's matmul (intra-op).
+* ``merak``    — Fig. 3b: two sub-batches pipelined, but pass barriers remain
+  (emulated with an optimization_barrier on layer gradients) and
+  recomputation re-executes collectives (coarse remat).
+* ``oases``    — Fig. 3c/d: two sub-batches, cross-pass (barrier-free; the
+  transposed backward interleaves recompute and backward the same way), and
+  with ``fine_remat`` the recompute contains no collectives at all.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tmp as tmpc
+from repro.core.axes import MeshInfo
+
+SCHEDULES = ("megatron", "wang", "merak", "oases")
+
+
+@dataclass(frozen=True)
+class TmpCtx:
+    """Per-layer TMP context: axes + communication scheme.
+
+    ``seq_parallel`` (beyond-paper, Megatron-SP): activations between TMP
+    blocks are sharded along the sequence dim; the block entry all-gathers
+    and the block exit reduce-scatters (same link bytes as the AllReduce,
+    but rematerialization residuals shrink by tp — see EXPERIMENTS §Perf).
+    """
+    info: MeshInfo
+    degree: Optional[int] = None      # None -> full model axis
+    schedule: str = "oases"
+    wang_chunks: int = 4
+    use_pallas: bool = False
+    seq_parallel: bool = False
+
+    @property
+    def tp_axes(self) -> Tuple[str, ...]:
+        return self.info.tp_axes(self.degree)
+
+    @property
+    def tp(self) -> int:
+        import math
+        s = dict(self.info.mesh.shape)
+        return math.prod(s[a] for a in self.tp_axes) if self.tp_axes else 1
+
+    def reduce(self, x, seq_dim: int = 1):
+        if self.seq_parallel and self.tp_axes:
+            from jax.ad_checkpoint import checkpoint_name
+            y = tmpc.sp_reduce_scatter(x, self.tp_axes, seq_dim)
+            return checkpoint_name(y, tmpc.COLLECTIVE_NAME)
+        return tmpc.tmp_reduce(x, self.tp_axes)
+
+    def gather_seq(self, x, seq_dim: int = 1):
+        """Block entry in SP mode: reassemble the full sequence."""
+        if self.seq_parallel and self.tp_axes:
+            return tmpc.sp_all_gather(x, self.tp_axes, seq_dim)
+        return x
+
+    def shard_seq(self, x, seq_dim: int = 1):
+        """Slice a replicated tensor down to this shard's sequence chunk
+        (used where the block had no trailing collective)."""
+        if self.seq_parallel and self.tp_axes:
+            return tmpc.batch_split(x, self.tp_axes, seq_dim)
+        return x
+
+    def row_matmul(self, x, w):
+        """x [..., K_local] @ w [K_local, D] followed by AllReduce (or
+        reduce-scatter in SP mode).
+
+        'wang' decomposes along the second-to-last dim so the chunked
+        AllReduces pipeline against the remaining chunk matmuls.
+        """
+        if self.schedule == "wang" and not self.seq_parallel and x.ndim >= 2:
+            n = self.wang_chunks
+            dim = x.ndim - 2
+            if x.shape[dim] % n == 0 and x.shape[dim] >= n:
+                chunks = jnp.split(x, n, axis=dim)
+                outs = [self.reduce(jnp.dot(c, w)) for c in chunks]
+                return jnp.concatenate(outs, axis=dim)
+        return self.reduce(jnp.dot(x, w))
+
+
+def split_tree(tree, split: int):
+    """Split the leading (batch) dim of every leaf into `split` sub-batches."""
+    def get(i):
+        return jax.tree_util.tree_map(
+            lambda t: t[i * (t.shape[0] // split):(i + 1) * (t.shape[0] // split)],
+            tree)
+    return [get(i) for i in range(split)]
+
+
+def merge_tree(subs):
+    return jax.tree_util.tree_map(
+        lambda *ts: jnp.concatenate(ts, axis=0), *subs)
+
+
+def effective_split(schedule: str, split: int, local_batch: int) -> int:
+    """Sub-batch split factor: oases/merak split (paper: 2) when divisible."""
+    if schedule in ("megatron", "wang"):
+        return 1
+    s = min(split, local_batch)
+    while s > 1 and local_batch % s:
+        s -= 1
+    return max(s, 1)
+
+
+def apply_layer(parts: Sequence[Callable], p, xs: List, auxs: List,
+                schedule: str):
+    """Run one layer's residual parts over the sub-batches.
+
+    Program order = Alg. 1: for each part, emit (compute_j, collective_j) for
+    every sub-batch j before the residual adds, so collective_j is independent
+    of compute_{j+1} — the overlap window.  Returns (xs, aux_scalar).
+    """
+    aux_total = jnp.float32(0.0)
+    for part in parts:
+        deltas = []
+        for x, a in zip(xs, auxs):
+            d, aux = part(p, x, a)
+            deltas.append(d)
+            aux_total = aux_total + aux
+        xs = [x + d for x, d in zip(xs, deltas)]
+    if schedule == "merak":
+        xs = [tmpc.pass_barrier(x) for x in xs]
+    return xs, aux_total

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, Prefetcher, make_batch
+
+__all__ = ["DataConfig", "Prefetcher", "make_batch"]

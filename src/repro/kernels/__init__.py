@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §6).
+
+Each kernel module is a ``pl.pallas_call`` with explicit BlockSpec VMEM
+tiling; ``ops.py`` holds the jit'd public wrappers (interpret=True off-TPU)
+and ``ref.py`` the pure-jnp oracles the tests sweep against.
+"""

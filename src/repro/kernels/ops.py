@@ -1,0 +1,68 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests; real-TPU deployments hit the compiled kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import rglru as _rglru
+from repro.kernels import rmsnorm as _rms
+from repro.kernels import ssd as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k",
+    "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, softcap: float = 0.0,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 256,
+            interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rms.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_w",
+                                             "interpret"))
+def rglru(x, params, *, block_t: int = 64, block_w: int = 512,
+          interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rglru.rglru(x, params, block_t=block_t, block_w=block_w,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A_log, B, C, D, *, chunk: int = 128,
+        interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssd.ssd(x, dt, A_log, B, C, D, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_k",
+                                             "interpret"))
+def moe_gmm(x, w, *, block_c: int = 128, block_f: int = 128,
+            block_k: int = 512, interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _gmm.moe_gmm(x, w, block_c=block_c, block_f=block_f,
+                        block_k=block_k, interpret=interpret)

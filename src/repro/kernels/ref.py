@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the dry-run/CPU compute path
+also routes through these via models/)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rglru import rglru_scan as _rglru_scan
+from repro.models.ssd import ssd_sequential as _ssd_sequential
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None, softcap: float = 0.0,
+                  scale: Optional[float] = None):
+    """Dense softmax attention oracle.  q [b,sq,h,hd]; k,v [b,sk,kvh,hd]."""
+    b, sq, h, hd = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    scale = hd ** -0.5 if scale is None else scale
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, kvh, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rglru_ref(x, params, h0=None):
+    """x [b, s, w]; params dict of [w] gate vectors (see models/rglru)."""
+    return _rglru_scan(x, params, h0)
+
+
+def ssd_ref(x, dt, A_log, B, C, D, h0=None):
+    """Sequential-scan SSD oracle (exact)."""
+    return _ssd_sequential(x, dt, A_log, B, C, D, h0)
+
+
+def moe_gmm_ref(x, w):
+    """Grouped matmul oracle: x [E, C, D] @ w [E, D, F] -> [E, C, F]."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Only the dry-run sees 512 placeholder devices; tests/benches see 1.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import subprocess        # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs.base import SHAPES, TrainHParams, applicable_shapes  # noqa: E402
+from repro.configs.registry import ASSIGNED, get_config, get_shape      # noqa: E402
+from repro.core.axes import mesh_info                                   # noqa: E402
+from repro.launch import hlo_cost                                       # noqa: E402
+from repro.launch.mesh import make_factored_mesh, make_production_mesh  # noqa: E402
+from repro.launch.steps import input_specs, step_fn_for                 # noqa: E402
+
+# TPU v5e chip constants (roofline targets; this container only compiles)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+HBM_CAP = 16e9               # bytes
+
+
+def model_flops_per_chip(cfg, shape, n_chips: int) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens          # fwd + bwd
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:                                        # decode: one token per seq
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_chips
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             schedule: str = "oases", fine_remat: bool = True,
+             planner_degrees=None, seq_parallel: bool = False,
+             split: int = 2, microbatch: int = 0,
+             mesh_shape: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "schedule": schedule, "fine_remat": fine_remat,
+        "planner": planner_degrees is not None,
+    }
+    if shape.name not in {s.name for s in applicable_shapes(cfg)}:
+        rec["status"] = "SKIP"
+        rec["reason"] = ("full-attention arch: long_500k requires "
+                         "sub-quadratic attention (DESIGN.md)")
+        return rec
+
+    t0 = time.time()
+    if mesh_shape:
+        # hillclimb lever: reshape the 256 chips (e.g. "32x8" = more DP,
+        # less TMP). The baseline table always uses the 16x16 mesh.
+        import jax as _jax
+        from jax.sharding import AxisType
+        d, m = (int(x) for x in mesh_shape.split("x"))
+        mesh = _jax.make_mesh((d, m), ("data", "model"),
+                              axis_types=(AxisType.Auto,) * 2)
+        rec["mesh_shape"] = mesh_shape
+    else:
+        mesh = (make_factored_mesh(multi_pod=multi_pod) if planner_degrees
+                else make_production_mesh(multi_pod=multi_pod))
+    info = mesh_info(mesh)
+    hp = TrainHParams(schedule=schedule, fine_remat=fine_remat,
+                      seq_parallel=seq_parallel, split=split,
+                      microbatch=microbatch)
+    rec["microbatch"] = microbatch
+    inputs = input_specs(cfg, shape, mesh, hp, degrees=planner_degrees)
+    fn = step_fn_for(cfg, shape, mesh, hp, degrees=planner_degrees)
+    # donate params+opt (train) / kv-cache (decode): buffers alias in place
+    donate = (0, 1) if shape.kind == "train" else \
+        ((1,) if shape.kind == "decode" else ())
+    with mesh:
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*inputs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        print(mem)                              # proves it fits
+        ca = compiled.cost_analysis()
+        print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+        hc = hlo_cost.analyze(compiled.as_text(), default_group=info.tp)
+
+    n_chips = info.mesh.size
+    terms = {
+        "compute_s": hc.dot_flops / PEAK_FLOPS,
+        "memory_s": hc.hbm_bytes / HBM_BW,
+        "collective_s": hc.collective_link_bytes / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_chip(cfg, shape, n_chips)
+    arg_b = getattr(mem, "argument_size_in_bytes", 0)
+    tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+    out_b = getattr(mem, "output_size_in_bytes", 0)
+    alias_b = getattr(mem, "alias_size_in_bytes", 0)
+    rec.update({
+        "status": "OK",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "mem": {"argument_bytes": arg_b, "temp_bytes": tmp_b,
+                "output_bytes": out_b, "alias_bytes": alias_b,
+                "peak_est_bytes": arg_b + tmp_b + out_b - alias_b,
+                "fits_16GB": bool(arg_b + tmp_b + out_b - alias_b < HBM_CAP)},
+        "xla_cost": {k: ca.get(k, 0.0) for k in ("flops", "bytes accessed")},
+        "hlo": hc.to_dict(),
+        "terms_s": terms,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": mf / hc.dot_flops if hc.dot_flops else 0.0,
+        "roofline_fraction": (
+            mf / PEAK_FLOPS) / max(terms.values()) if max(terms.values()) else 0.0,
+    })
+    return rec
+
+
+def _sweep(args):
+    cells = []
+    archs = args.arch.split(",") if args.arch else ASSIGNED
+    shapes = args.shape.split(",") if args.shape else list(SHAPES)
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+    done = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done[(r["arch"], r["shape"], r["mesh"],
+                          r.get("schedule", "oases"))] = r
+                except json.JSONDecodeError:
+                    pass
+    for a, s, m in cells:
+        key = (a, s, m, args.schedule)
+        if key in done and done[key].get("status") in ("OK", "SKIP") \
+                and not args.force:
+            print(f"[cached] {key} {done[key]['status']}")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", a, "--shape", s, "--mesh", m,
+               "--schedule", args.schedule, "--out", args.out]
+        if not args.fine_remat:
+            cmd.append("--no-fine-remat")
+        print(f"[run] {a} x {s} x {m} ...", flush=True)
+        t0 = time.time()
+        try:
+            p = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            tail = (p.stdout + p.stderr).strip().splitlines()[-3:]
+            print(f"   -> rc={p.returncode} {time.time()-t0:.0f}s "
+                  + (" | ".join(tail) if p.returncode else ""), flush=True)
+            if p.returncode:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps({
+                        "arch": a, "shape": s, "mesh": m,
+                        "schedule": args.schedule, "status": "ERROR",
+                        "error": "\n".join(tail)}) + "\n")
+        except subprocess.TimeoutExpired:
+            print("   -> TIMEOUT", flush=True)
+            with open(args.out, "a") as f:
+                f.write(json.dumps({
+                    "arch": a, "shape": s, "mesh": m,
+                    "schedule": args.schedule, "status": "TIMEOUT"}) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--schedule", default="oases")
+    ap.add_argument("--no-fine-remat", dest="fine_remat", action="store_false")
+    ap.add_argument("--split", type=int, default=2)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--degrees", default="",
+                    help="comma-separated per-layer TMP degrees (planner mode)")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="force gradient-accumulation count (0 = auto)")
+    ap.add_argument("--mesh-shape", default="",
+                    help="override single-pod mesh, e.g. 32x8")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+
+    if args.sweep:
+        _sweep(args)
+        return
+
+    degrees = ([int(x) for x in args.degrees.split(",")] if args.degrees
+               else None)
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    for m in meshes:
+        try:
+            rec = run_cell(args.arch, args.shape, multi_pod=(m == "multi"),
+                           schedule=args.schedule, fine_remat=args.fine_remat,
+                           planner_degrees=degrees, split=args.split,
+                           seq_parallel=args.seq_parallel,
+                           microbatch=args.microbatch,
+                           mesh_shape=args.mesh_shape)
+        except Exception:
+            rec = {"arch": args.arch, "shape": args.shape, "mesh": m,
+                   "schedule": args.schedule, "status": "ERROR",
+                   "error": traceback.format_exc()[-2000:]}
+            print(traceback.format_exc())
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        print(json.dumps({k: rec[k] for k in rec
+                          if k not in ("hlo", "xla_cost")}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

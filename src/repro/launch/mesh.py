@@ -1,0 +1,39 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benchmarks see the real (1-device) topology.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_factored_mesh(*, multi_pod: bool = False):
+    """Planner-mode mesh: the 16-way model axis factored into binary
+    sub-axes so per-layer TMP degrees in {1,2,4,8,16} are expressible."""
+    shape = (2, 16, 2, 2, 2, 2) if multi_pod else (16, 2, 2, 2, 2)
+    axes = (("pod", "data", "t1", "t2", "t3", "t4") if multi_pod
+            else ("data", "t1", "t2", "t3", "t4"))
+    return _mk(shape, axes)
+
+
+def make_smoke_mesh(devices=None):
+    """1x1 (or all-local-devices) mesh for CPU smoke tests."""
+    n = len(devices or jax.devices())
+    d = max(1, n // 4) if n >= 4 else 1
+    return _mk((d, n // d), ("data", "model"))

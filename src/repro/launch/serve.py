@@ -1,0 +1,55 @@
+"""Serving launcher: batched requests through the continuous-batching
+engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --reduced --requests 8 --slots 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced().replace(dtype="float32")
+    mesh = make_smoke_mesh()
+    eng = ServingEngine(cfg, mesh, slots=args.slots, max_seq=args.max_seq)
+    eng.load(seed=args.seed)
+
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 12))
+        r = Request(rid=i,
+                    prompt=rng.integers(3, cfg.vocab_size, plen,
+                                        dtype=np.int32),
+                    max_new_tokens=args.max_new_tokens)
+        reqs.append(r)
+        eng.submit(r)
+    stats = eng.run_until_drained()
+    print(json.dumps({**stats,
+                      "sample_output": reqs[0].out_tokens[:8]}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,230 @@
+"""Jit-able step functions shared by the trainer, server, dry-run and
+benchmarks: train_step (fwd+bwd+AdamW), prefill_step, serve_step."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, TrainHParams
+from repro.core.axes import batch_pspec, mesh_info
+from repro.models import lm
+from repro.models import params as prm
+from repro.optim import adamw
+
+
+def auto_microbatch(global_batch: int, dp: int, seq_len: int,
+                    d_model: int, num_layers: int,
+                    act_budget: float = 5e9, act_shard: int = 1) -> int:
+    """Gradient-accumulation count sized so one microbatch's rematerialized
+    activations (~3 [t,d] bf16 tensors per layer with the fine policy) fit
+    the activation budget, floored at 1 sequence per chip."""
+    local = max(global_batch // max(dp, 1), 1)
+    token_budget = act_budget * act_shard / (3.0 * d_model * 2.0
+                                             * max(num_layers, 1))
+    seqs = max(1, min(local, int(token_budget // max(seq_len, 1))))
+    n = max(1, local // seqs)
+    while n > 1 and (local % n or global_batch % n):
+        n -= 1
+    return n    # 1 = no accumulation (resolved; 0 means "auto")
+
+
+def resolve_hp(hp: TrainHParams, shape_kind: str, global_batch: int,
+               dp: int, *, seq_len: int = 4096, d_model: int = 4096,
+               num_layers: int = 32, tp: int = 1) -> TrainHParams:
+    """Fill auto fields (microbatch=0 -> auto for training).  Sequence
+    parallelism shards the remat residuals tp-ways, so the activation
+    budget stretches by tp."""
+    import dataclasses
+    if shape_kind == "train" and hp.microbatch == 0:
+        shard = tp if hp.seq_parallel else 1
+        return dataclasses.replace(
+            hp, microbatch=auto_microbatch(global_batch, dp, seq_len,
+                                           d_model, num_layers,
+                                           act_shard=shard))
+    return hp
+
+
+def build_train_step(cfg: ArchConfig, mesh, hp: TrainHParams, *,
+                     global_batch: int, seq_len: int,
+                     degrees: Optional[Sequence[int]] = None):
+    """returns (train_step(params, opt_state, batch) ->
+                (params, opt_state, metrics), specs)."""
+    info = mesh_info(mesh)
+    # planner mode: low-degree layers reuse model sub-axes as extra data
+    # parallelism, so the effective dp (and the per-chip batch the
+    # microbatcher sees) is set by the SMALLEST degree in the plan
+    dp_eff = info.dp * (info.tp // min(degrees)) if degrees else info.dp
+    hp = resolve_hp(hp, "train", global_batch, dp_eff, seq_len=seq_len,
+                    d_model=cfg.d_model, num_layers=cfg.num_layers,
+                    tp=info.tp)
+    micro_b = global_batch // hp.microbatch if hp.microbatch > 1 \
+        else global_batch
+    loss_fn, specs, _ = lm.build_train_loss(
+        cfg, mesh, hp, global_batch=micro_b, seq_len=seq_len,
+        degrees=degrees)
+    ocfg = adamw.AdamWConfig(
+        learning_rate=hp.learning_rate, weight_decay=hp.weight_decay,
+        warmup_steps=hp.warmup_steps, total_steps=hp.total_steps,
+        grad_clip=hp.grad_clip)
+
+    # ZeRO-sharded gradient layout: the f32 grad (and its accumulator) is
+    # sharded like the optimizer state, so GSPMD turns the backward's
+    # data-axis psum into a reduce-scatter and the accumulator shrinks by
+    # dp (§Perf: this is what lets 20B-scale train cells fit 16 GB HBM).
+    g_specs = adamw.opt_state_specs(specs, info, zero1=hp.zero1)["m"]
+    g_shardings = prm.shardings_tree(g_specs, mesh)
+
+    def _constrain(g):
+        # shard FIRST (in the grad dtype), cast to f32 after — the other
+        # order materializes a full-size f32 copy per chip before GSPMD
+        # gets to slice it
+        return jax.tree_util.tree_map(
+            lambda t, s: jax.lax.with_sharding_constraint(t, s)
+            .astype(jnp.float32), g, g_shardings)
+
+    def train_step(params, opt_state, batch):
+        if hp.microbatch and hp.microbatch > 1:
+            # gradient accumulation: batch arrives pre-shaped
+            # [n_micro, B/n, ...] with the batch dim sharded on axis 1, so
+            # indexing axis 0 never reshards.
+            n = hp.microbatch
+
+            def micro(i, acc):
+                g_acc, l_acc = acc
+                mb = jax.tree_util.tree_map(
+                    lambda t: jax.lax.dynamic_index_in_dim(
+                        t, i, 0, keepdims=False), batch)
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree_util.tree_map(
+                    jnp.add, g_acc, _constrain(g)), l_acc + l)
+
+            zero_g = jax.tree_util.tree_map(
+                lambda w, s: jax.lax.with_sharding_constraint(
+                    jnp.zeros(w.shape, jnp.float32), s),
+                params, g_shardings)
+            grads, loss = jax.lax.fori_loop(0, n, micro, (zero_g, 0.0))
+            grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+            loss = loss / n
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = _constrain(grads)
+        params, opt_state, gnorm = adamw.apply_updates(
+            params, grads, opt_state, ocfg, compress=hp.grad_compress,
+            zero_shardings=g_shardings,
+            param_shardings=prm.shardings_tree(specs, mesh))
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step, specs
+
+
+def train_abstract_inputs(cfg: ArchConfig, mesh, hp: TrainHParams, *,
+                          global_batch: int, seq_len: int,
+                          degrees=None):
+    """ShapeDtypeStruct stand-ins for every train_step input (no alloc).
+    With gradient accumulation the batch arrives pre-shaped
+    [n_micro, B/n, ...], batch dim sharded on axis 1."""
+    info = mesh_info(mesh)
+    dp_eff = info.dp * (info.tp // min(degrees)) if degrees else info.dp
+    hp = resolve_hp(hp, "train", global_batch, dp_eff, seq_len=seq_len,
+                    d_model=cfg.d_model, num_layers=cfg.num_layers,
+                    tp=info.tp)
+    specs = prm.model_specs(cfg, info, degrees=degrees, max_pos=seq_len)
+    params = prm.abstract_params(specs, mesh)
+    opt_state = adamw.abstract_opt_state(specs, info, mesh, zero1=hp.zero1)
+    n = hp.microbatch if hp.microbatch > 1 else 1
+    micro_b = global_batch // n
+    bp = batch_pspec(info, micro_b)
+    lead = (n,) if n > 1 else ()
+    spec_entries = ((None,) if n > 1 else ()) + tuple(bp)
+    bs = NamedSharding(mesh, jax.sharding.PartitionSpec(*spec_entries))
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(lead + shape, dtype, sharding=bs)
+
+    batch = {
+        "tokens": sds((micro_b, seq_len), jnp.int32),
+        "labels": sds((micro_b, seq_len), jnp.int32),
+    }
+    if cfg.context_len:
+        cd = cfg.context_dim or cfg.d_model
+        batch["ctx"] = sds((micro_b, cfg.context_len, cd), jnp.bfloat16)
+    return params, opt_state, batch
+
+
+def build_prefill_step(cfg, mesh, hp, *, global_batch, seq_len):
+    fn, specs, st_specs = lm.build_prefill(
+        cfg, mesh, hp, global_batch=global_batch, seq_len=seq_len)
+    return fn, specs, st_specs
+
+
+def prefill_abstract_inputs(cfg, mesh, hp, *, global_batch, seq_len):
+    info = mesh_info(mesh)
+    specs = prm.model_specs(cfg, info, max_pos=seq_len + 1)
+    params = prm.abstract_params(specs, mesh)
+    bs = NamedSharding(mesh, batch_pspec(info, global_batch))
+    batch = {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len),
+                                            jnp.int32, sharding=bs)}
+    if cfg.context_len:
+        cd = cfg.context_dim or cfg.d_model
+        batch["ctx"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.context_len, cd), jnp.bfloat16, sharding=bs)
+    return params, batch
+
+
+def build_serve_step(cfg, mesh, hp, *, global_batch, seq_len):
+    fn, specs, st_specs = lm.build_decode(
+        cfg, mesh, hp, global_batch=global_batch, seq_len=seq_len)
+    return fn, specs, st_specs
+
+
+def serve_abstract_inputs(cfg, mesh, hp, *, global_batch, seq_len):
+    info = mesh_info(mesh)
+    specs = prm.model_specs(cfg, info, max_pos=seq_len + 8)
+    params = prm.abstract_params(specs, mesh)
+    bspec = batch_pspec(info, global_batch)
+    st_specs = prm.cache_specs(cfg, info, batch=global_batch, seq=seq_len,
+                               batch_spec=bspec)
+    state = prm.abstract_params(st_specs, mesh)
+    bs = NamedSharding(mesh, bspec)
+    tokens = jax.ShapeDtypeStruct((global_batch,), jnp.int32, sharding=bs)
+    pos = jax.ShapeDtypeStruct((global_batch,), jnp.int32, sharding=bs)
+    return params, state, tokens, pos
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                hp: Optional[TrainHParams] = None, degrees=None):
+    """The dry-run contract: ShapeDtypeStruct stand-ins for the step that
+    this (arch x shape) cell lowers."""
+    hp = hp or TrainHParams()
+    if shape.kind == "train":
+        return train_abstract_inputs(cfg, mesh, hp,
+                                     global_batch=shape.global_batch,
+                                     seq_len=shape.seq_len, degrees=degrees)
+    if shape.kind == "prefill":
+        return prefill_abstract_inputs(cfg, mesh, hp,
+                                       global_batch=shape.global_batch,
+                                       seq_len=shape.seq_len)
+    return serve_abstract_inputs(cfg, mesh, hp,
+                                 global_batch=shape.global_batch,
+                                 seq_len=shape.seq_len)
+
+
+def step_fn_for(cfg, shape, mesh, hp: Optional[TrainHParams] = None,
+                degrees=None):
+    hp = hp or TrainHParams()
+    if shape.kind == "train":
+        fn, _ = build_train_step(cfg, mesh, hp,
+                                 global_batch=shape.global_batch,
+                                 seq_len=shape.seq_len, degrees=degrees)
+        return fn
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, hp,
+                                  global_batch=shape.global_batch,
+                                  seq_len=shape.seq_len)[0]
+    return build_serve_step(cfg, mesh, hp, global_batch=shape.global_batch,
+                            seq_len=shape.seq_len)[0]

@@ -1,0 +1,84 @@
+"""Training launcher.
+
+Single-host CPU testbed:
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --reduced --steps 50 --batch 8 --seq 128
+
+TPU pod (per-host, via launch/scripts/tpu_pod.sh): the same entrypoint with
+--distributed initializes jax.distributed from the TPU environment and
+builds the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU demo)")
+    ap.add_argument("--schedule", default="oases",
+                    choices=["megatron", "wang", "merak", "oases"])
+    ap.add_argument("--no-fine-remat", dest="fine_remat",
+                    action="store_false")
+    ap.add_argument("--planner", action="store_true",
+                    help="per-layer TMP degrees from the ILP (factored mesh)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="checkpoints/run0")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="auto",
+                    help="auto | dxm (e.g. 2x4) | production | multipod")
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.distributed:
+        import jax
+        jax.distributed.initialize()
+    import jax
+
+    from repro.configs.base import TrainHParams
+    from repro.configs.registry import get_config
+    from repro.launch.mesh import (make_factored_mesh, make_production_mesh,
+                                   make_smoke_mesh)
+    from repro.runtime import Trainer
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced().replace(dtype="float32")
+
+    if args.mesh == "auto":
+        mesh = make_smoke_mesh()
+    elif args.mesh == "production":
+        mesh = make_production_mesh()
+    elif args.mesh == "multipod":
+        mesh = make_production_mesh(multi_pod=True)
+    else:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        from jax.sharding import AxisType
+        mesh = jax.make_mesh((d, m), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+
+    hp = TrainHParams(schedule=args.schedule, fine_remat=args.fine_remat,
+                      learning_rate=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 20, 1),
+                      use_planner=args.planner)
+    trainer = Trainer(cfg, mesh, hp, global_batch=args.batch,
+                      seq_len=args.seq, ckpt_dir=args.ckpt_dir)
+    res = trainer.train(args.steps, ckpt_every=args.ckpt_every,
+                        seed=args.seed)
+    print(json.dumps({
+        "final_step": res["final_step"],
+        "first_loss": res["losses"][0], "last_loss": res["losses"][-1],
+        "slow_steps": len(res["slow_steps"]),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models import attention, blocks, lm, moe, params, rglru, ssd
+
+__all__ = ["attention", "blocks", "lm", "moe", "params", "rglru", "ssd"]

@@ -1,0 +1,145 @@
+"""Pure-JAX chunked attention (the ``ref`` compute path used on CPU and for
+roofline lowering).  On real TPU, ``--use-pallas`` swaps in
+:mod:`repro.kernels.flash_attention`.
+
+Memory stays bounded via a lax.scan over KV chunks with an online-softmax
+carry, so 32k prefill never materializes [b, h, s, s].
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def rope(x, positions, theta: float):
+    """x [b, s, h, hd]; positions [b, s] (or [s]) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [b, s, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def _scores(q, k, softcap: float):
+    """q [b, sq, kv, g, hd]; k [b, ck, kv, hd] -> [b, kv, g, sq, ck] f32."""
+    s = jnp.einsum("bqkgh,bckh->bkgqc", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None, softcap: float = 0.0,
+                      q_positions=None, kv_positions=None,
+                      chunk: int = 1024, scale: Optional[float] = None):
+    """Online-softmax attention scanned over KV chunks.
+
+    q [b, sq, h, hd]; k, v [b, sk, kvh, hd]; h % kvh == 0 (GQA).
+    ``q_positions``/``kv_positions`` give absolute positions for masking
+    (decode passes an offset query position; padding in the KV cache is
+    masked by kv_positions < 0 convention handled by the caller via mask).
+    Returns [b, sq, h, hd].
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    scale = scale if scale is not None else hd ** -0.5
+    q = (q * scale).reshape(b, sq, kvh, g, hd)
+    if q_positions is None:
+        q_positions = jnp.arange(sq, dtype=jnp.int32)[None, :]
+    if kv_positions is None:
+        kv_positions = jnp.arange(sk, dtype=jnp.int32)[None, :]
+    if q_positions.ndim == 1:
+        q_positions = q_positions[None, :]
+    if kv_positions.ndim == 1:
+        kv_positions = kv_positions[None, :]
+    q_positions = jnp.broadcast_to(q_positions, (b, sq))
+    kv_positions = jnp.broadcast_to(kv_positions, (b, sk))
+
+    # bound the per-chunk score tensor (b,kvh,g,sq,chunk f32) to ~256 MB so
+    # long-sequence prefill stays within HBM on the ref path
+    cap = max((1 << 26) // max(b * h * sq, 1), 128)
+    chunk = min(chunk, sk, cap - cap % 128 if cap >= 256 else 128)
+    nchunks = (sk + chunk - 1) // chunk
+    pad = nchunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-1)
+
+    kc = k.reshape(b, nchunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    pc = kv_positions.reshape(b, nchunks, chunk).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        acc, m, l = carry          # [b,kv,g,sq,hd] f32, [b,kv,g,sq], [b,kv,g,sq]
+        kb, vb, pb = inp           # [b,chunk,kv,hd], [b,chunk,kv,hd], [b,chunk]
+        s = _scores(q, kb, softcap)                      # [b,kv,g,sq,chunk]
+        valid = pb[:, None, None, None, :] >= 0
+        if causal:
+            valid &= (pb[:, None, None, None, :]
+                      <= q_positions[:, None, None, :, None])
+        if window is not None:
+            valid &= (pb[:, None, None, None, :]
+                      > q_positions[:, None, None, :, None] - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqc,bckh->bkgqh", p, vb.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kvh, g, sq, hd), jnp.float32)
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    (acc, m, l), _ = lax.scan(step, (acc0, m0, l0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int] = None,
+                     softcap: float = 0.0, scale: Optional[float] = None,
+                     ring: bool = False):
+    """Single-token decode attention over a KV cache.
+
+    q [b, 1, h, hd]; k_cache/v_cache [b, S, kvh, hd]; pos [b] current absolute
+    position (the new token's position; cache entries at slots > pos are
+    invalid).  ``ring=True`` means the cache is a circular window buffer of
+    size S=window (slot = pos % window) so all slots written so far are valid.
+    """
+    b, _, h, hd = q.shape
+    _, S, kvh, _ = k_cache.shape
+    g = h // kvh
+    scale = scale if scale is not None else hd ** -0.5
+    qf = (q * scale).reshape(b, kvh, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, k_cache.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    slots = jnp.arange(S, dtype=jnp.int32)[None, :]        # [1, S]
+    if ring:
+        written = jnp.minimum(pos[:, None] + 1, S)
+        valid = slots < written
+    else:
+        valid = slots <= pos[:, None]
+        if window is not None:
+            valid &= slots > pos[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

@@ -1,0 +1,417 @@
+"""Layer assembly: each layer kind exposes
+
+* ``train_parts``  — residual part functions ``part(p, x, aux) -> (delta, aux_loss)``
+  ending in a TMP collective where sharded (the unit the Oases schedule
+  interleaves across sub-batches),
+* ``prefill``      — ``fn(p, x, aux) -> (x, state)`` full-sequence + cache build,
+* ``decode``       — ``fn(p, x, state, aux) -> (x, state)`` single-token step.
+
+``aux`` carries {'positions': [b,s], 'pos': [b] (decode), 'ctx': [b,L,D]}.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import (ArchConfig, CROSS_ATTN, GLOBAL_ATTN,
+                                LOCAL_ATTN, RGLRU, SSD)
+from repro.core import tmp as tmpc
+from repro.core.schedule import TmpCtx
+from repro.models import rglru as rglru_m
+from repro.models import ssd as ssd_m
+from repro.models.attention import (chunked_attention, decode_attention, rope)
+from repro.models.params import attn_plan, ssd_dims
+
+ZERO = jnp.float32(0.0)
+
+
+def _norm(x, scale, eps):
+    return tmpc.rms_norm(x, scale, eps)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def _qkv(cfg, ctx: TmpCtx, p, h, positions, prefix="", use_rope=True):
+    """Project h -> (q [b,s,hl,hd], k, v [b,s,kvs,hd]) local views.
+    Pass p[prefix+'wq'] = None to skip the q projection (cross-attn kv)."""
+    plan = attn_plan(cfg, ctx.tp)
+    hd = cfg.resolved_head_dim
+    b, s, _ = h.shape
+    wq = p.get(prefix + "wq")
+    q = (jnp.dot(h, wq).reshape(b, s, plan.h_local, hd)
+         if wq is not None else None)
+    wk, wv = p[prefix + "wk"], p[prefix + "wv"]
+    if plan.sharded and not plan.kv_sharded \
+            and plan.kv_slice < cfg.num_kv_heads:
+        # kv weights replicated: slice the kv-head group this shard's q needs
+        group = cfg.num_heads // cfg.num_kv_heads
+        r = tmpc.axes_index(ctx.tp_axes)
+        start = (r * plan.h_local) // group
+        wk = lax.dynamic_slice_in_dim(
+            wk.reshape(cfg.d_model, cfg.num_kv_heads, hd), start,
+            plan.kv_slice, axis=1)
+        wv = lax.dynamic_slice_in_dim(
+            wv.reshape(cfg.d_model, cfg.num_kv_heads, hd), start,
+            plan.kv_slice, axis=1)
+        k = jnp.einsum("bsd,dkh->bskh", h, wk)
+        v = jnp.einsum("bsd,dkh->bskh", h, wv)
+    else:
+        k = jnp.dot(h, wk).reshape(b, s, -1, hd)
+        v = jnp.dot(h, wv).reshape(b, s, -1, hd)
+        if plan.sharded and plan.kv_slice == cfg.num_kv_heads \
+                and cfg.num_kv_heads != cfg.num_heads \
+                and plan.h_local % cfg.num_kv_heads != 0:
+            # non-aligned GQA fallback: gather each local q head's kv head
+            # (local MHA view) — hit only by non-power-of-two head ratios
+            group = cfg.num_heads // cfg.num_kv_heads
+            r = tmpc.axes_index(ctx.tp_axes)
+            idx = (r * plan.h_local
+                   + jnp.arange(plan.h_local, dtype=jnp.int32)) // group
+            k = jnp.take(k, idx, axis=2)
+            v = jnp.take(v, idx, axis=2)
+    if use_rope:
+        if q is not None:
+            q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v, plan
+
+
+def _attn_out(cfg, ctx: TmpCtx, p, attn, plan, prefix=""):
+    b, s = attn.shape[:2]
+    flat = attn.reshape(b, s, plan.h_local * cfg.resolved_head_dim)
+    if plan.sharded:
+        return ctx.row_matmul(flat, p[prefix + "wo"])
+    return jnp.dot(flat, p[prefix + "wo"])
+
+
+def make_attn_part(cfg: ArchConfig, ctx: TmpCtx, kind: str) -> Callable:
+    # decoder self-attn is causal; the encoder path calls
+    # encoder_layer_fn (causal=False) instead.
+    window = cfg.window if kind == LOCAL_ATTN else None
+
+    def part(p, x, aux):
+        h = ctx.gather_seq(_norm(x, p["ln"], cfg.norm_eps))
+        q, k, v, plan = _qkv(cfg, ctx, p, h, aux["positions"])
+        o = chunked_attention(q, k, v, causal=True, window=window,
+                              softcap=cfg.attn_softcap,
+                              q_positions=aux["positions"],
+                              kv_positions=aux["positions"])
+        delta = _attn_out(cfg, ctx, p, o, plan)
+        if not plan.sharded:
+            delta = ctx.shard_seq(delta)
+        if cfg.post_norms:
+            delta = _norm(delta, p["pn1"], cfg.norm_eps)
+        return delta, ZERO
+
+    return part
+
+
+def make_cross_part(cfg: ArchConfig, ctx: TmpCtx) -> Callable:
+    def part(p, x, aux):
+        h = ctx.gather_seq(_norm(x, p["c_ln"], cfg.norm_eps))
+        cctx = aux["ctx"]
+        plan = attn_plan(cfg, ctx.tp)
+        hd = cfg.resolved_head_dim
+        b, s, _ = h.shape
+        q = jnp.dot(h, p["c_wq"]).reshape(b, s, plan.h_local, hd)
+        _, ck, cv, _ = _qkv(cfg, ctx, {"wk": p["c_wk"], "wv": p["c_wv"]},
+                            cctx, None, use_rope=False)
+        o = chunked_attention(q, ck, cv, causal=False, softcap=0.0)
+        delta = _attn_out(cfg, ctx, {"wo": p["c_wo"]}, o, plan)
+        if not plan.sharded:
+            delta = ctx.shard_seq(delta)
+        gate = jnp.tanh(p["c_gate"].astype(delta.dtype))
+        return delta * gate, ZERO
+
+    return part
+
+
+# --------------------------------------------------------------------------
+# FFN / MoE
+# --------------------------------------------------------------------------
+def make_mlp_part(cfg: ArchConfig, ctx: TmpCtx) -> Callable:
+    if cfg.moe is not None:
+        from repro.models.moe import moe_ffn
+
+        def part(p, x, aux):
+            h = ctx.gather_seq(_norm(x, p["ln2"], cfg.norm_eps))
+            moe_p = {k: p[k] for k in ("router", "w1", "w3", "w2")}
+            delta, aux_l = moe_ffn(
+                h, moe_p, num_experts=cfg.moe.num_experts,
+                top_k=cfg.moe.top_k, cap_factor=cfg.moe.capacity_factor,
+                sharding=cfg.moe.sharding, tp_axes=ctx.tp_axes,
+                reduce_fn=ctx.reduce)
+            return delta, aux_l * cfg.moe.router_aux_weight
+
+        return part
+
+    def part(p, x, aux):
+        h = ctx.gather_seq(_norm(x, p["ln2"], cfg.norm_eps))
+        a = jax.nn.silu(jnp.dot(h, p["wg"])) * jnp.dot(h, p["wu"])
+        # local width != global width -> column-parallel -> row-parallel out
+        if ctx.tp > 1 and p["wd"].shape[0] != cfg.d_ff:
+            delta = ctx.row_matmul(a, p["wd"])
+        else:
+            delta = ctx.shard_seq(jnp.dot(a, p["wd"]))
+        if cfg.post_norms:
+            delta = _norm(delta, p["pn2"], cfg.norm_eps)
+        return delta, ZERO
+
+    return part
+
+
+# --------------------------------------------------------------------------
+# RG-LRU block
+# --------------------------------------------------------------------------
+def _rglru_gates(p):
+    return {k: p[k] for k in ("w_a", "b_a", "w_x", "b_x", "a_param")}
+
+
+def make_rglru_part(cfg: ArchConfig, ctx: TmpCtx) -> Callable:
+    def part(p, x, aux):
+        h = ctx.gather_seq(_norm(x, p["ln"], cfg.norm_eps))
+        xb = jnp.dot(h, p["w_in_x"])
+        gb = jnp.dot(h, p["w_in_g"])
+        xc, _ = rglru_m.depthwise_conv1d(xb, p["conv"])
+        y, _ = rglru_m.rglru_scan(xc, _rglru_gates(p))
+        o = jax.nn.gelu(gb) * y
+        w = cfg.rglru_width or cfg.d_model
+        if ctx.tp > 1 and w % ctx.tp == 0:
+            delta = ctx.row_matmul(o, p["w_out"])
+        else:
+            delta = ctx.shard_seq(jnp.dot(o, p["w_out"]))
+        return delta, ZERO
+
+    return part
+
+
+# --------------------------------------------------------------------------
+# SSD (mamba2) block — replicated mixer
+# --------------------------------------------------------------------------
+def _ssd_split(cfg, z_xbc_dt):
+    d_inner, nheads, n = ssd_dims(cfg)
+    z = z_xbc_dt[..., :d_inner]
+    xbc = z_xbc_dt[..., d_inner:2 * d_inner + 2 * n]
+    dt = z_xbc_dt[..., 2 * d_inner + 2 * n:]
+    return z, xbc, dt, (d_inner, nheads, n)
+
+
+def make_ssd_part(cfg: ArchConfig, ctx: TmpCtx) -> Callable:
+    def part(p, x, aux):
+        h = ctx.gather_seq(_norm(x, p["ln"], cfg.norm_eps))
+        z, xbc, dtp, (d_inner, nheads, n) = _ssd_split(cfg, jnp.dot(h, p["in_proj"]))
+        xbc, _ = rglru_m.depthwise_conv1d(xbc, p["conv"])
+        xbc = jax.nn.silu(xbc)
+        xs = xbc[..., :d_inner]
+        B = xbc[..., d_inner:d_inner + n]
+        C = xbc[..., d_inner + n:]
+        b, s, _ = h.shape            # h may be seq-gathered (SP mode)
+        xh = xs.reshape(b, s, nheads, cfg.ssm_headdim)
+        dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])
+        y, _ = ssd_m.ssd_chunked(xh, dt, p["A_log"], B, C, p["Dskip"],
+                                 chunk=min(128, s))
+        y = y.reshape(b, s, d_inner)
+        y = tmpc.rms_norm(y, p["norm_g"], cfg.norm_eps) * jax.nn.silu(
+            z.astype(y.dtype))
+        return ctx.shard_seq(jnp.dot(y, p["out_proj"])), ZERO
+
+    return part
+
+
+# --------------------------------------------------------------------------
+def train_parts(cfg: ArchConfig, ctx: TmpCtx, kind: str) -> List[Callable]:
+    if kind in (GLOBAL_ATTN, LOCAL_ATTN):
+        return [make_attn_part(cfg, ctx, kind), make_mlp_part(cfg, ctx)]
+    if kind == CROSS_ATTN:
+        return [make_attn_part(cfg, ctx, kind), make_cross_part(cfg, ctx),
+                make_mlp_part(cfg, ctx)]
+    if kind == RGLRU:
+        return [make_rglru_part(cfg, ctx), make_mlp_part(cfg, ctx)]
+    if kind == SSD:
+        return [make_ssd_part(cfg, ctx)]
+    raise ValueError(kind)
+
+
+# ==========================================================================
+# prefill (full sequence, builds cache) and decode (single token)
+# ==========================================================================
+def _update_linear_cache(cache, new, pos):
+    """cache [b,S,kv,hd]; new [b,s,kv,hd]; pos scalar start (prefill)."""
+    return lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype), pos, axis=1)
+
+
+def prefill_fn(cfg: ArchConfig, ctx: TmpCtx, kind: str) -> Callable:
+    parts_mlp = (make_mlp_part(cfg, ctx)
+                 if (kind != SSD and cfg.d_ff) else None)
+    window = cfg.window if kind == LOCAL_ATTN else None
+
+    def fn(p, x, aux):
+        st: Dict[str, Any] = {}
+        if kind in (GLOBAL_ATTN, LOCAL_ATTN, CROSS_ATTN):
+            h = _norm(x, p["ln"], cfg.norm_eps)
+            q, k, v, plan = _qkv(cfg, ctx, p, h, aux["positions"])
+            o = chunked_attention(q, k, v, causal=True, window=window,
+                                  softcap=cfg.attn_softcap,
+                                  q_positions=aux["positions"],
+                                  kv_positions=aux["positions"])
+            delta = _attn_out(cfg, ctx, p, o, plan)
+            if cfg.post_norms:
+                delta = _norm(delta, p["pn1"], cfg.norm_eps)
+            x = x + delta
+            if window is not None and k.shape[1] > window:
+                # keep the trailing window in ring order (slot = pos % window)
+                s = k.shape[1]
+                roll = s % window
+                k, v = k[:, s - window:], v[:, s - window:]
+                k = jnp.roll(k, roll, axis=1)
+                v = jnp.roll(v, roll, axis=1)
+            st["k"], st["v"] = k, v
+            if kind == CROSS_ATTN:
+                cctx = aux["ctx"]
+                _, ck, cv, _ = _qkv(cfg, ctx, {"wk": p["c_wk"], "wv": p["c_wv"]},
+                                    cctx, None, use_rope=False)
+                st["c_k"], st["c_v"] = ck, cv
+                hc = _norm(x, p["c_ln"], cfg.norm_eps)
+                b, s, _ = hc.shape
+                qd = jnp.dot(hc, p["c_wq"]).reshape(
+                    b, s, plan.h_local, cfg.resolved_head_dim)
+                oc = chunked_attention(qd, ck, cv, causal=False)
+                dc = _attn_out(cfg, ctx, {"wo": p["c_wo"]}, oc, plan)
+                x = x + dc * jnp.tanh(p["c_gate"].astype(dc.dtype))
+        elif kind == RGLRU:
+            h = _norm(x, p["ln"], cfg.norm_eps)
+            xb = jnp.dot(h, p["w_in_x"])
+            gb = jnp.dot(h, p["w_in_g"])
+            xc, conv_st = rglru_m.depthwise_conv1d(xb, p["conv"])
+            y, h_last = rglru_m.rglru_scan(xc, _rglru_gates(p))
+            o = jax.nn.gelu(gb) * y
+            w = cfg.rglru_width or cfg.d_model
+            if ctx.tp > 1 and w % ctx.tp == 0:
+                delta = ctx.row_matmul(o, p["w_out"])
+            else:
+                delta = jnp.dot(o, p["w_out"])
+            x = x + delta
+            st["h"], st["conv"] = h_last, conv_st
+        elif kind == SSD:
+            h = _norm(x, p["ln"], cfg.norm_eps)
+            z, xbc, dtp, (d_inner, nheads, n) = _ssd_split(
+                cfg, jnp.dot(h, p["in_proj"]))
+            xbc_c, conv_st = rglru_m.depthwise_conv1d(xbc, p["conv"])
+            xbc_c = jax.nn.silu(xbc_c)
+            xs_, B, C = (xbc_c[..., :d_inner], xbc_c[..., d_inner:d_inner + n],
+                         xbc_c[..., d_inner + n:])
+            b, s, _ = x.shape
+            dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])
+            y, S = ssd_m.ssd_chunked(
+                xs_.reshape(b, s, nheads, cfg.ssm_headdim), dt, p["A_log"],
+                B, C, p["Dskip"], chunk=min(128, s))
+            y = y.reshape(b, s, d_inner)
+            y = tmpc.rms_norm(y, p["norm_g"], cfg.norm_eps) * jax.nn.silu(
+                z.astype(y.dtype))
+            x = x + jnp.dot(y, p["out_proj"])
+            st["S"], st["conv"] = S, conv_st
+        else:
+            raise ValueError(kind)
+        if parts_mlp is not None:
+            d, _ = parts_mlp(p, x, aux)
+            x = x + d
+        return x, st
+
+    return fn
+
+
+def decode_fn(cfg: ArchConfig, ctx: TmpCtx, kind: str) -> Callable:
+    parts_mlp = (make_mlp_part(cfg, ctx)
+                 if (kind != SSD and cfg.d_ff) else None)
+    is_local = kind == LOCAL_ATTN
+    hd = cfg.resolved_head_dim
+
+    def fn(p, x, st, aux):
+        pos = aux["pos"]                       # [b] int32 current position
+        b = x.shape[0]
+        if kind in (GLOBAL_ATTN, LOCAL_ATTN, CROSS_ATTN):
+            h = _norm(x, p["ln"], cfg.norm_eps)
+            q, k, v, plan = _qkv(cfg, ctx, p, h, pos[:, None])
+            S = st["k"].shape[1]
+            slot = (pos % S) if is_local else pos
+            bidx = jnp.arange(b, dtype=jnp.int32)
+            st = dict(st)
+            st["k"] = st["k"].at[bidx, slot].set(k[:, 0].astype(st["k"].dtype))
+            st["v"] = st["v"].at[bidx, slot].set(v[:, 0].astype(st["v"].dtype))
+            o = decode_attention(q, st["k"], st["v"], pos,
+                                 window=cfg.window if is_local else None,
+                                 softcap=cfg.attn_softcap, ring=is_local)
+            delta = _attn_out(cfg, ctx, p, o, plan)
+            if cfg.post_norms:
+                delta = _norm(delta, p["pn1"], cfg.norm_eps)
+            x = x + delta
+            if kind == CROSS_ATTN:
+                hc = _norm(x, p["c_ln"], cfg.norm_eps)
+                qd = jnp.dot(hc, p["c_wq"]).reshape(b, 1, plan.h_local, hd)
+                Lc = st["c_k"].shape[1]
+                oc = decode_attention(qd, st["c_k"], st["c_v"],
+                                      jnp.full((b,), Lc - 1, jnp.int32))
+                dc = _attn_out(cfg, ctx, {"wo": p["c_wo"]}, oc, plan)
+                x = x + dc * jnp.tanh(p["c_gate"].astype(dc.dtype))
+        elif kind == RGLRU:
+            h = _norm(x, p["ln"], cfg.norm_eps)
+            xb = jnp.dot(h, p["w_in_x"])
+            gb = jnp.dot(h, p["w_in_g"])
+            hist = jnp.concatenate([st["conv"], xb], axis=1)   # [b, k, W]
+            y_c = jnp.einsum("bkw,kw->bw", hist, p["conv"])[:, None]
+            y, h_new = rglru_m.rglru_step(y_c, _rglru_gates(p), st["h"])
+            o = jax.nn.gelu(gb) * y
+            w = cfg.rglru_width or cfg.d_model
+            if ctx.tp > 1 and w % ctx.tp == 0:
+                delta = ctx.row_matmul(o, p["w_out"])
+            else:
+                delta = jnp.dot(o, p["w_out"])
+            x = x + delta
+            st = {"h": h_new, "conv": hist[:, 1:]}
+        elif kind == SSD:
+            h = _norm(x, p["ln"], cfg.norm_eps)
+            z, xbc, dtp, (d_inner, nheads, n) = _ssd_split(
+                cfg, jnp.dot(h, p["in_proj"]))
+            hist = jnp.concatenate([st["conv"], xbc], axis=1)  # [b, k, .]
+            xbc_c = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, p["conv"]))
+            xs_, B, C = (xbc_c[..., :d_inner], xbc_c[..., d_inner:d_inner + n],
+                         xbc_c[..., d_inner + n:])
+            dt = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + p["dt_bias"])
+            y, S = ssd_m.ssd_step(
+                xs_.reshape(b, nheads, cfg.ssm_headdim), dt, p["A_log"],
+                B, C, p["Dskip"], st["S"])
+            y = y.reshape(b, 1, d_inner)
+            y = tmpc.rms_norm(y, p["norm_g"], cfg.norm_eps) * jax.nn.silu(
+                z.astype(y.dtype))
+            x = x + jnp.dot(y, p["out_proj"])
+            st = {"S": S, "conv": hist[:, 1:]}
+        else:
+            raise ValueError(kind)
+        if parts_mlp is not None:
+            d, _ = parts_mlp(p, x, aux)
+            x = x + d
+        return x, st
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# encoder (whisper) — bidirectional self-attn blocks, sequential
+# --------------------------------------------------------------------------
+def encoder_layer_fn(cfg: ArchConfig, ctx: TmpCtx) -> Callable:
+    mlp = make_mlp_part(cfg, ctx)
+
+    def fn(p, x):
+        h = _norm(x, p["ln"], cfg.norm_eps)
+        q, k, v, plan = _qkv(cfg, ctx, p, h, None, use_rope=False)
+        o = chunked_attention(q, k, v, causal=False)
+        x = x + _attn_out(cfg, ctx, p, o, plan)
+        d, _ = mlp(p, x, None)
+        return x + d
+
+    return fn

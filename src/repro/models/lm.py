@@ -1,0 +1,367 @@
+"""Whole-model assembly + jit-able step functions.
+
+The entire forward (and loss) runs inside ONE ``shard_map`` over the
+production mesh so every TMP collective is explicit (``jax.lax.psum`` via
+:mod:`repro.core.tmp`) and the Oases schedule controls its placement —
+faithful to the paper rather than GSPMD-inferred communication.
+
+Gradients: parameters enter the body replicated over their non-sharded mesh
+axes; ``copy_to_tmp(w, replicated_axes)`` makes the backward emit the
+correct gradient AllReduce over exactly those axes (this is also where the
+classic DP-gradient-overlap happens — the psum sits inside backward where
+the latency-hiding scheduler can overlap it with remaining compute).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, TrainHParams
+from repro.core import tmp as tmpc
+from repro.core.axes import MeshInfo, batch_pspec, mesh_info
+from repro.core.remat import maybe_checkpoint
+from repro.core.schedule import (TmpCtx, apply_layer, effective_split,
+                                 merge_tree, split_tree)
+from repro.models import blocks as blk
+from repro.models import params as prm
+
+
+# --------------------------------------------------------------------------
+def _positions(b, s, dtype=jnp.int32):
+    return jnp.broadcast_to(jnp.arange(s, dtype=dtype)[None, :], (b, s))
+
+
+def _run_encoder(cfg, ctx, params, ctx_embed):
+    import dataclasses
+    if ctx.seq_parallel:
+        # encoder activations are not sequence-sharded (the decoder's cross
+        # attention needs the full encoded sequence on every shard)
+        ctx = dataclasses.replace(ctx, seq_parallel=False)
+    enc = params["encoder"]
+    x = ctx_embed + enc["pos_embed"][None, : ctx_embed.shape[1]].astype(
+        ctx_embed.dtype)
+    layer = blk.encoder_layer_fn(cfg, ctx)
+
+    def body(carry, p):
+        return layer(p, carry), None
+
+    x, _ = lax.scan(body, x, enc["blocks"])
+    return tmpc.rms_norm(x, enc["final_ln"], cfg.norm_eps)
+
+
+def _stack_scan(cfg, ctx, hp, params, xs, auxs, *, train=True):
+    """Scan over stacked pattern blocks + unrolled tail. xs: list of
+    sub-batches. Returns (xs, aux_loss_sum)."""
+    n, pat, tail = prm.stack_layout(cfg)
+    parts = {k: blk.train_parts(cfg, ctx, k) for k in set(pat) | set(tail)}
+
+    def block_body(carry, layer_params):
+        xs_c, aux_c = carry
+        for pos, kind in enumerate(pat):
+            xs_c, a = apply_layer(parts[kind], layer_params[pos], xs_c, auxs,
+                                  hp.schedule)
+            aux_c = aux_c + a
+        return (xs_c, aux_c), None
+
+    body = block_body
+    if train:
+        body = maybe_checkpoint(block_body, remat=hp.remat,
+                                fine=hp.fine_remat)
+    carry = (xs, jnp.float32(0.0))
+    if n:
+        carry, _ = lax.scan(body, carry, tuple(params["blocks"]))
+    xs, aux = carry
+    for i, kind in enumerate(tail):
+        if train:
+            def tail_body(carry, p, kind=kind):
+                xs_c, a = apply_layer(parts[kind], p, carry[0], auxs,
+                                      hp.schedule)
+                return (xs_c, carry[1] + a), None
+            tail_body = maybe_checkpoint(tail_body, remat=hp.remat,
+                                         fine=hp.fine_remat)
+            (xs, aux), _ = tail_body((xs, aux), params["tail"][i])
+        else:
+            xs, a = apply_layer(parts[kind], params["tail"][i], xs, auxs,
+                                hp.schedule)
+            aux = aux + a
+    return xs, aux
+
+
+# --------------------------------------------------------------------------
+# planner-mode (mixed per-layer TMP degrees on the factored mesh)
+# --------------------------------------------------------------------------
+def _grouped_scan(cfg, info, hp, params, x, degrees):
+    """Mixed-degree forward (planner mode, factored mesh).
+
+    Activations are replicated over all t-axes in Megatron style; the *batch*
+    dim is additionally sharded over the t-axes a low-degree group reuses for
+    data parallelism.  Degree transitions therefore reshard the batch:
+    degree decrease = free local slice (``batch_split``), degree increase =
+    AllGather — exactly the Eq. 4 edge costs the planner charges."""
+    cur_axes: tuple = ()
+
+    def reshard(x, new_axes):
+        nonlocal cur_axes
+        gather = tuple(a for a in cur_axes if a not in new_axes)
+        take = tuple(a for a in new_axes if a not in cur_axes)
+        if gather:
+            x = tmpc.sp_all_gather(x, gather, 0)
+        if take:
+            x = tmpc.batch_split(x, take, 0)
+        cur_axes = new_axes
+        return x
+
+    aux_total = jnp.float32(0.0)
+    for g_params, (kind, degree, n) in zip(params["groups"],
+                                           prm.plan_groups(cfg, degrees)):
+        ctx = TmpCtx(info, degree=degree, schedule=hp.schedule,
+                     use_pallas=hp.use_pallas)
+        x = reshard(x, info.extra_dp_axes(degree))
+        parts = blk.train_parts(cfg, ctx, kind)
+        b = x.shape[0]
+        split = effective_split(hp.schedule, hp.split, b)
+        xs = split_tree(x, split)
+        auxs = [{"positions": _positions(b // split, x.shape[1])}
+                for _ in range(split)]
+
+        def body(carry, p, parts=parts, auxs=auxs):
+            xs_c, a_c = carry
+            xs_c, a = apply_layer(parts, p, xs_c, auxs, hp.schedule)
+            return (xs_c, a_c + a), None
+
+        body = maybe_checkpoint(body, remat=hp.remat, fine=hp.fine_remat)
+        (xs, aux_total), _ = lax.scan(body, (xs, aux_total), g_params)
+        x = merge_tree(xs) if len(xs) > 1 else xs[0]
+    x = reshard(x, ())
+    return x, aux_total
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+def build_train_loss(cfg: ArchConfig, mesh, hp: TrainHParams, *,
+                     global_batch: int, seq_len: int,
+                     degrees: Optional[Sequence[int]] = None):
+    """Returns (loss_fn(params, batch) -> (loss, aux), specs, in_specs)."""
+    info = mesh_info(mesh)
+    specs = prm.model_specs(cfg, info, degrees=degrees, max_pos=seq_len)
+    sp = bool(hp.seq_parallel and info.tp > 1 and degrees is None
+              and seq_len % max(info.tp, 1) == 0)
+    ctx = TmpCtx(info, schedule=hp.schedule, use_pallas=hp.use_pallas,
+                 seq_parallel=sp)
+    bspec = batch_pspec(info, global_batch)
+    batch_specs = {"tokens": bspec, "labels": bspec}
+    if cfg.context_len:
+        batch_specs["ctx"] = bspec
+
+    def body(params, batch):
+        # NOTE: shard_map's transpose already emits the gradient AllReduce
+        # over every axis a parameter's in_spec leaves replicated (incl. the
+        # data axes — the classic DP gradient all-reduce, placed inside
+        # backward where the latency-hiding scheduler overlaps it).
+        tokens, labels = batch["tokens"], batch["labels"]
+        b, s = tokens.shape
+        x = tmpc.vocab_parallel_embed(tokens, params["embed"], ctx.tp_axes,
+                                      sp_seq_dim=1 if ctx.seq_parallel
+                                      else None)
+        if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if "pos_embed" in params:
+            pe = params["pos_embed"][None, :s].astype(x.dtype)
+            x = x + (tmpc.batch_split(pe, ctx.tp_axes, 1)
+                     if ctx.seq_parallel else pe)
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = _run_encoder(cfg, ctx, params, batch["ctx"])
+        elif cfg.context_len:
+            enc_out = batch["ctx"]
+
+        positions = _positions(b, s)
+        if degrees is not None:
+            x, aux = _grouped_scan(cfg, info, hp, params, x, degrees)
+        else:
+            split = effective_split(hp.schedule, hp.split, b)
+            xs = split_tree(x, split)
+            auxs = []
+            for j in range(split):
+                a = {"positions": positions[:b // split]}
+                if enc_out is not None:
+                    a["ctx"] = split_tree(enc_out, split)[j]
+                auxs.append(a)
+            xs, aux = _stack_scan(cfg, ctx, hp, params, xs, auxs)
+            x = merge_tree(xs) if len(xs) > 1 else xs[0]
+
+        x = ctx.gather_seq(x)       # SP: reassemble for the LM-head loss
+        x = tmpc.rms_norm(x, params["final_ln"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        loss_sum, count = tmpc.vocab_parallel_xent(
+            x, head, labels, ctx.tp_axes, chunk=hp.loss_chunk,
+            softcap=cfg.final_softcap)
+        # aggregate over every batch-sharded axis
+        loss_sum = tmpc.reduce_from_tmp(loss_sum, info.batch_axes)
+        count = lax.psum(count, info.batch_axes) if info.batch_axes else count
+        aux = tmpc.reduce_from_tmp(aux / max(cfg.num_layers, 1),
+                                   info.batch_axes) / max(info.dp, 1)
+        return loss_sum / count + aux, aux
+
+    in_specs = (prm.pspec_tree(specs), batch_specs)
+    sm = jax.shard_map(body, mesh=mesh,
+                       in_specs=(in_specs[0],
+                                 {k: v for k, v in batch_specs.items()}),
+                       out_specs=(P(), P()), check_vma=False)
+    return sm, specs, in_specs
+
+
+def greedy_token(logits_local, tp_axes):
+    """Vocab-parallel greedy sampling: [b, V_local] -> [b] global ids."""
+    v_local = logits_local.shape[-1]
+    off = tmpc.axes_index(tp_axes) * v_local
+    val = jnp.max(logits_local, axis=-1)
+    idx = jnp.argmax(logits_local, axis=-1).astype(jnp.int32) + off
+    if not tp_axes:
+        return idx
+    vals = lax.all_gather(val, tp_axes)        # [tp, b]
+    idxs = lax.all_gather(idx, tp_axes)
+    win = jnp.argmax(vals, axis=0)
+    return jnp.take_along_axis(idxs, win[None], axis=0)[0]
+
+
+def _last_logits(cfg, params, x_last, ctx):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.dot(x_last.astype(jnp.float32), head.astype(jnp.float32))
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def build_prefill(cfg: ArchConfig, mesh, hp: TrainHParams, *,
+                  global_batch: int, seq_len: int):
+    """prefill_step(params, batch) -> (next_token [b], state)."""
+    info = mesh_info(mesh)
+    specs = prm.model_specs(cfg, info, max_pos=seq_len + 1)
+    ctx = TmpCtx(info, schedule=hp.schedule, use_pallas=hp.use_pallas)
+    bspec = batch_pspec(info, global_batch)
+    st_specs = prm.cache_specs(cfg, info, batch=global_batch, seq=seq_len,
+                               batch_spec=bspec)
+    batch_specs = {"tokens": bspec}
+    if cfg.context_len:
+        batch_specs["ctx"] = bspec
+    n, pat, tail = prm.stack_layout(cfg)
+
+    def body(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = tmpc.vocab_parallel_embed(tokens, params["embed"], ctx.tp_axes)
+        if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if "pos_embed" in params:
+            x = x + params["pos_embed"][None, :s].astype(x.dtype)
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = _run_encoder(cfg, ctx, params, batch["ctx"])
+        elif cfg.context_len:
+            enc_out = batch["ctx"]
+        aux = {"positions": _positions(b, s), "ctx": enc_out}
+
+        fns = {k: blk.prefill_fn(cfg, ctx, k) for k in set(pat) | set(tail)}
+        sts: Dict[str, Any] = {"blocks": [], "tail": []}
+
+        def block_body(x, layer_params):
+            st_out = []
+            for pos, kind in enumerate(pat):
+                x, st = fns[kind](layer_params[pos], x, aux)
+                st_out.append(st)
+            return x, tuple(st_out)
+
+        if n:
+            x, stacked = lax.scan(block_body, x, tuple(params["blocks"]))
+            sts["blocks"] = list(stacked)
+        for i, kind in enumerate(tail):
+            x, st = fns[kind](params["tail"][i], x, aux)
+            sts["tail"].append(jax.tree_util.tree_map(lambda t: t[None], st))
+
+        x = tmpc.rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = _last_logits(cfg, params, x[:, -1], ctx)
+        return greedy_token(logits, ctx.tp_axes), sts
+
+    st_out_specs = prm.pspec_tree(st_specs)
+    sm = jax.shard_map(
+        body, mesh=mesh, in_specs=(prm.pspec_tree(specs), batch_specs),
+        out_specs=(bspec, st_out_specs), check_vma=False)
+    return sm, specs, st_specs
+
+
+def build_decode(cfg: ArchConfig, mesh, hp: TrainHParams, *,
+                 global_batch: int, seq_len: int):
+    """serve_step(params, state, tokens [b], pos [b]) -> (next [b], state)."""
+    info = mesh_info(mesh)
+    specs = prm.model_specs(cfg, info, max_pos=seq_len + 8)
+    ctx = TmpCtx(info, schedule="megatron", use_pallas=hp.use_pallas)
+    bspec = batch_pspec(info, global_batch)
+    st_specs = prm.cache_specs(cfg, info, batch=global_batch, seq=seq_len,
+                               batch_spec=bspec)
+    n, pat, tail = prm.stack_layout(cfg)
+
+    def body(params, state, tokens, pos):
+        b = tokens.shape[0]
+        x = tmpc.vocab_parallel_embed(tokens[:, None], params["embed"],
+                                      ctx.tp_axes)
+        if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if "pos_embed" in params:
+            pe = jnp.take(params["pos_embed"], jnp.minimum(
+                pos, params["pos_embed"].shape[0] - 1), axis=0)
+            x = x + pe[:, None].astype(x.dtype)
+        aux = {"pos": pos}
+        fns = {k: blk.decode_fn(cfg, ctx, k) for k in set(pat) | set(tail)}
+
+        # KV caches ride in the scan CARRY and are updated with in-place
+        # dynamic_update_slice at the layer index — XLA aliases the (donated)
+        # input cache straight through the loop, so decode temp memory stays
+        # O(one layer), not O(2x full cache).
+        def block_body(carry, inp):
+            x, st_stack = carry
+            layer_params, i = inp
+            st_out = []
+            for p_, kind in enumerate(pat):
+                st_i = jax.tree_util.tree_map(
+                    lambda t: lax.dynamic_index_in_dim(t, i, 0, False),
+                    st_stack[p_])
+                x, st = fns[kind](layer_params[p_], x, st_i, aux)
+                st_out.append(st)
+            st_stack = tuple(
+                jax.tree_util.tree_map(
+                    lambda t, s: lax.dynamic_update_index_in_dim(
+                        t, s.astype(t.dtype), i, 0), st_stack[p_], st_out[p_])
+                for p_ in range(len(pat)))
+            return (x, st_stack), None
+
+        new_state: Dict[str, Any] = {"blocks": [], "tail": []}
+        if n:
+            (x, blocks_st), _ = lax.scan(
+                block_body, (x, tuple(state["blocks"])),
+                (tuple(params["blocks"]), jnp.arange(n, dtype=jnp.int32)))
+            new_state["blocks"] = list(blocks_st)
+        for i, kind in enumerate(tail):
+            st_i = jax.tree_util.tree_map(lambda t: t[0], state["tail"][i])
+            x, st = fns[kind](params["tail"][i], x, st_i, aux)
+            new_state["tail"].append(
+                jax.tree_util.tree_map(lambda t: t[None], st))
+
+        x = tmpc.rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = _last_logits(cfg, params, x[:, 0], ctx)
+        return greedy_token(logits, ctx.tp_axes), new_state
+
+    st_ps = prm.pspec_tree(st_specs)
+    sm = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(prm.pspec_tree(specs), st_ps, bspec, bspec),
+        out_specs=(bspec, st_ps), check_vma=False)
+    return sm, specs, st_specs

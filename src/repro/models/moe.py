@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN with capacity-based routing.
+
+Two sharding patterns (DESIGN.md §Arch-applicability):
+
+* ``ep``  — experts sharded over the model axis (moonshot: 64/16 = 4 local
+  experts).  Activations are replicated over the model axis (Megatron-style),
+  so each shard selects the tokens routed to *its* experts, computes them,
+  and the combine is a single AllReduce — the same compute→collective block
+  structure the Oases schedule overlaps.
+* ``tmp`` — every shard holds all experts with the expert FFN width sharded
+  (granite-moe: 40 experts, d_ff 512/16 = 32); row-parallel combine AllReduce.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import tmp as tmpc
+
+
+def capacity(tokens: int, top_k: int, num_experts: int, factor: float) -> int:
+    return max(8, math.ceil(tokens * top_k / num_experts * factor))
+
+
+def route(x2d, router_w, top_k: int):
+    """x2d [t, D]; router_w [D, E] -> (weights [t,k], experts [t,k], aux)."""
+    logits = jnp.dot(x2d.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, e = lax.top_k(probs, top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style)
+    E = router_w.shape[1]
+    frac_prob = jnp.mean(probs, axis=0)
+    assign = jax.nn.one_hot(e[:, 0], E, dtype=jnp.float32)
+    frac_tok = jnp.mean(assign, axis=0)
+    aux = E * jnp.sum(frac_prob * frac_tok)
+    return w, e, aux
+
+
+def _dispatch_positions(experts_flat, num_experts: int, cap: int):
+    """Position of each (token,choice) within its expert's capacity buffer."""
+    oh = jax.nn.one_hot(experts_flat, num_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=0) - oh                   # rank among same-expert
+    posf = jnp.take_along_axis(pos, experts_flat[:, None], axis=1)[:, 0]
+    keep = posf < cap
+    return posf, keep
+
+
+def moe_ffn(x, p, *, num_experts: int, top_k: int, cap_factor: float,
+            sharding: str, tp_axes: Tuple[str, ...], reduce_fn=None):
+    """x [b, s, D] (replicated over tp axes). Returns (delta [b,s,D], aux)."""
+    b, s, d = x.shape
+    t = b * s
+    x2d = x.reshape(t, d)
+    w, e, aux = route(x2d, p["router"], top_k)
+    cap = capacity(t, top_k, num_experts, cap_factor)
+
+    ef = e.reshape(-1)                                   # [t*k]
+    wf = w.reshape(-1)
+    tok_idx = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    posf, keep = _dispatch_positions(ef, num_experts, cap)
+
+    e_local = p["w1"].shape[0]                           # local expert count
+    if sharding == "ep":
+        shard = tmpc.axes_index(tp_axes)
+        local = (ef // e_local) == shard
+        le = ef - shard * e_local
+    else:                                                # 'tmp': all experts local
+        local = jnp.ones_like(keep)
+        le = ef
+    sel = keep & local
+    le_c = jnp.where(sel, le, 0)
+    pos_c = jnp.where(sel, posf, 0)
+
+    # gather tokens into [E_local, C, D]
+    buf = jnp.zeros((e_local, cap, d), x.dtype)
+    vals = jnp.where(sel[:, None], jnp.take(x2d, tok_idx, axis=0),
+                     jnp.zeros((1, d), x.dtype))
+    buf = buf.at[le_c, pos_c].add(vals, mode="drop")
+
+    # expert FFN (swiglu), batched over local experts
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    h = jax.nn.silu(g) * h
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w2"])     # [E_l, C, D]
+
+    # combine back to tokens (weighted)
+    gathered = out_buf[le_c, pos_c]                      # [t*k, D]
+    gathered = jnp.where(sel[:, None], gathered, 0.0)
+    contrib = gathered * wf[:, None].astype(gathered.dtype)
+    out = jnp.zeros((t, d), contrib.dtype).at[tok_idx].add(contrib)
+
+    # EP: each shard contributed only its experts -> AllReduce completes it.
+    # TMP: each shard computed a d_ff-partial sum   -> AllReduce completes it.
+    # (reduce on [b, s, d] so the SP reduce-scatter acts on the seq dim)
+    reduce_fn = reduce_fn or (lambda y: tmpc.tmp_reduce(y, tp_axes))
+    out = reduce_fn(out.reshape(b, s, d))
+    return out.astype(x.dtype), aux

@@ -1,0 +1,395 @@
+"""Parameter/state *spec trees*: one source of truth for
+
+* ``init_params``            — real arrays (smoke tests, examples),
+* ``abstract_params``        — ShapeDtypeStruct + NamedSharding (dry-run),
+* ``pspec_tree``             — shard_map in_specs,
+* the planner's memory model.
+
+Shapes stored here are **global** (pre-sharding).  Stacked layer groups carry
+a leading ``[n_repeat]`` dim for lax.scan.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ArchConfig, CROSS_ATTN, GLOBAL_ATTN,
+                                LOCAL_ATTN, RGLRU, SSD)
+from repro.core.axes import MeshInfo
+
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    pspec: P
+    dtype: Any = jnp.bfloat16
+    scale: float = 0.02          # init stddev; 0 -> zeros, -1 -> ones-ish
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class AttnPlan:
+    sharded: bool          # q/o projections sharded over tp axes
+    h_local: int           # q heads per shard
+    kv_sharded: bool       # kv projections sharded over tp axes
+    kv_weight_heads: int   # kv heads in the (global) weight layout
+    kv_slice: int          # kv heads each shard keeps after slicing
+
+
+def attn_plan(cfg: ArchConfig, tp: int) -> AttnPlan:
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    if tp <= 1 or H % tp != 0:
+        return AttnPlan(False, H, False, KV, KV)
+    h_local = H // tp
+    if KV % tp == 0:
+        return AttnPlan(True, h_local, True, KV, KV // tp)
+    # kv replicated: every shard computes all KV heads and slices what its
+    # contiguous q-head range needs.  Valid when either the whole q-block
+    # lives inside one kv group (slice=1, any offset) or the block spans
+    # whole groups (h_local % group == 0, start automatically aligned).
+    group = H // KV
+    if group % h_local == 0:
+        kv_slice = 1
+    elif h_local % group == 0:
+        kv_slice = h_local // group
+    else:
+        kv_slice = KV   # fallback: keep all KV heads (non-aligned ratios)
+    return AttnPlan(True, h_local, False, KV, kv_slice)
+
+
+def ssd_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    return d_inner, nheads, cfg.ssm_state
+
+
+# --------------------------------------------------------------------------
+# per-layer-kind parameter specs
+# --------------------------------------------------------------------------
+def _attn_specs(cfg, info: MeshInfo, degree, *, prefix="", kv_from_ctx=False):
+    tp_ax = info.tp_axes(degree)
+    tp = max(1, math.prod(dict(info.mesh.shape)[a] for a in tp_ax)) if tp_ax else 1
+    plan = attn_plan(cfg, tp)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    dt = cfg.dtype
+    q_sh = P(None, tp_ax) if plan.sharded else P(None, None)
+    kv_sh = P(None, tp_ax) if plan.kv_sharded else P(None, None)
+    o_sh = P(tp_ax, None) if plan.sharded else P(None, None)
+    out = {
+        prefix + "wq": Spec((d, cfg.num_heads * hd), q_sh, dt),
+        prefix + "wk": Spec((d, cfg.num_kv_heads * hd), kv_sh, dt),
+        prefix + "wv": Spec((d, cfg.num_kv_heads * hd), kv_sh, dt),
+        prefix + "wo": Spec((cfg.num_heads * hd, d), o_sh, dt,
+                            scale=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+    return out
+
+
+def _mlp_specs(cfg, info, degree):
+    tp_ax = info.tp_axes(degree)
+    tp = info_tp(info, degree)
+    f_sh = tp_ax if (tp > 1 and cfg.d_ff % tp == 0) else ()
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    return {
+        "wg": Spec((d, f), P(None, f_sh or None), dt),
+        "wu": Spec((d, f), P(None, f_sh or None), dt),
+        "wd": Spec((f, d), P(f_sh or None, None), dt,
+                   scale=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _moe_specs(cfg, info, degree):
+    moe = cfg.moe
+    tp_ax = info.tp_axes(degree)
+    tp = info_tp(info, degree)
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    E = moe.num_experts
+    if moe.sharding == "ep" and tp > 1 and E % tp == 0:
+        e_sh, f_sh = P(tp_ax, None, None), P(tp_ax, None, None)
+        w2_sh = P(tp_ax, None, None)
+    else:  # tmp: shard expert d_ff
+        fx = tp_ax if (tp > 1 and f % tp == 0) else None
+        e_sh = f_sh = P(None, None, fx)
+        w2_sh = P(None, fx, None)
+    return {
+        "router": Spec((d, E), P(None, None), jnp.float32),
+        "w1": Spec((E, d, f), e_sh, dt),
+        "w3": Spec((E, d, f), f_sh, dt),
+        "w2": Spec((E, f, d), w2_sh, dt,
+                   scale=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _rglru_specs(cfg, info, degree):
+    tp_ax = info.tp_axes(degree)
+    tp = info_tp(info, degree)
+    w = cfg.rglru_width or cfg.d_model
+    sh = tp_ax if (tp > 1 and w % tp == 0) else ()
+    d, dt = cfg.d_model, cfg.dtype
+    vec = P(sh or None)
+    return {
+        "w_in_x": Spec((d, w), P(None, sh or None), dt),
+        "w_in_g": Spec((d, w), P(None, sh or None), dt),
+        "conv": Spec((4, w), P(None, sh or None), dt),
+        "w_a": Spec((w,), vec, jnp.float32),
+        "b_a": Spec((w,), vec, jnp.float32, scale=0.0),
+        "w_x": Spec((w,), vec, jnp.float32),
+        "b_x": Spec((w,), vec, jnp.float32, scale=0.0),
+        "a_param": Spec((w,), vec, jnp.float32, scale=-1.0),
+        "w_out": Spec((w, d), P(sh or None, None), dt,
+                      scale=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _ssd_specs(cfg, info, degree):
+    # mamba2-130m: replicated mixer (see DESIGN.md §Arch-applicability)
+    d_inner, nheads, n = ssd_dims(cfg)
+    d, dt = cfg.d_model, cfg.dtype
+    in_dim = 2 * d_inner + 2 * n + nheads
+    return {
+        "in_proj": Spec((d, in_dim), P(None, None), dt),
+        "conv": Spec((cfg.ssm_conv, d_inner + 2 * n), P(None, None), dt),
+        "A_log": Spec((nheads,), P(None), jnp.float32, scale=-1.0),
+        "Dskip": Spec((nheads,), P(None), jnp.float32, scale=-1.0),
+        "dt_bias": Spec((nheads,), P(None), jnp.float32, scale=0.0),
+        "norm_g": Spec((d_inner,), P(None), jnp.float32, scale=0.0),
+        "out_proj": Spec((d_inner, d), P(None, None), dt,
+                         scale=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def info_tp(info: MeshInfo, degree) -> int:
+    ax = info.tp_axes(degree)
+    s = dict(info.mesh.shape)
+    return math.prod(s[a] for a in ax) if ax else 1
+
+
+def layer_specs(cfg: ArchConfig, kind: str, info: MeshInfo,
+                degree=None, *, causal=True) -> Dict[str, Spec]:
+    d, dt = cfg.d_model, cfg.dtype
+    out: Dict[str, Any] = {"ln": Spec((d,), P(None), jnp.float32, scale=0.0)}
+    if kind in (GLOBAL_ATTN, LOCAL_ATTN, CROSS_ATTN):
+        out.update(_attn_specs(cfg, info, degree))
+        if kind == CROSS_ATTN:
+            out["c_ln"] = Spec((d,), P(None), jnp.float32, scale=0.0)
+            out.update(_attn_specs(cfg, info, degree, prefix="c_"))
+            out["c_gate"] = Spec((1,), P(None), jnp.float32, scale=0.0)
+    elif kind == RGLRU:
+        out.update(_rglru_specs(cfg, info, degree))
+    elif kind == SSD:
+        out.update(_ssd_specs(cfg, info, degree))
+    else:
+        raise ValueError(kind)
+    if kind != SSD and cfg.d_ff:
+        out["ln2"] = Spec((d,), P(None), jnp.float32, scale=0.0)
+        if cfg.moe is not None:
+            out.update(_moe_specs(cfg, info, degree))
+        else:
+            out.update(_mlp_specs(cfg, info, degree))
+        if cfg.post_norms:
+            out["pn1"] = Spec((d,), P(None), jnp.float32, scale=0.0)
+            out["pn2"] = Spec((d,), P(None), jnp.float32, scale=0.0)
+    return out
+
+
+def _stack(specs: Dict[str, Spec], n: int) -> Dict[str, Spec]:
+    return tree_map_specs(
+        lambda s: Spec((n,) + s.shape, P(*((None,) + tuple(s.pspec))),
+                       s.dtype, s.scale), specs)
+
+
+# --------------------------------------------------------------------------
+# whole-model specs
+# --------------------------------------------------------------------------
+def stack_layout(cfg: ArchConfig) -> Tuple[int, Sequence[str], Sequence[str]]:
+    """(n_scan_blocks, pattern, tail_kinds)."""
+    pat = cfg.layer_pattern
+    n = cfg.num_layers // len(pat)
+    tail = [pat[i % len(pat)] for i in range(n * len(pat), cfg.num_layers)]
+    return n, pat, tail
+
+
+def model_specs(cfg: ArchConfig, info: MeshInfo, *,
+                degrees: Optional[Sequence[int]] = None,
+                max_pos: int = 0) -> Dict[str, Any]:
+    """degrees: optional per-layer TMP degrees (planner mode; factored mesh).
+
+    Uniform mode (degrees=None) stacks `n` repeats of the pattern for scan;
+    planner mode groups consecutive same-degree layers (see lm.py).
+    """
+    tp_ax = info.tp_axes(None)
+    d, dt = cfg.d_model, cfg.dtype
+    vp = cfg.padded_vocab()
+    out: Dict[str, Any] = {
+        "embed": Spec((vp, d), P(tp_ax or None, None), dt),
+        "final_ln": Spec((d,), P(None), jnp.float32, scale=0.0),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = Spec((d, vp), P(None, tp_ax or None), dt)
+    if cfg.name.startswith("whisper"):
+        out["pos_embed"] = Spec((max(max_pos, 2048), d), P(None, None), dt)
+
+    if degrees is None:
+        n, pat, tail = stack_layout(cfg)
+        out["blocks"] = [
+            _stack(layer_specs(cfg, k, info), n) for k in pat] if n else []
+        out["tail"] = [layer_specs(cfg, k, info) for k in tail]
+    else:
+        assert info.factored and len(degrees) == cfg.num_layers
+        out["groups"] = [
+            _stack(layer_specs(cfg, kind, info, deg), n)
+            for (kind, deg, n) in plan_groups(cfg, degrees)]
+
+    if cfg.is_encdec:
+        n_enc = cfg.encoder_layers
+        enc_layer = layer_specs(cfg, GLOBAL_ATTN, info)
+        out["encoder"] = {
+            "pos_embed": Spec((cfg.context_len, d), P(None, None), dt),
+            "blocks": _stack(enc_layer, n_enc),
+            "final_ln": Spec((d,), P(None), jnp.float32, scale=0.0),
+        }
+    return out
+
+
+def plan_groups(cfg: ArchConfig, degrees: Sequence[int]):
+    """Group consecutive (same kind, same degree) layers: [(kind, degree, n)]."""
+    pat = cfg.layer_pattern
+    groups = []
+    i = 0
+    while i < cfg.num_layers:
+        j = i
+        while (j < cfg.num_layers and degrees[j] == degrees[i]
+               and pat[j % len(pat)] == pat[i % len(pat)]):
+            j += 1
+        groups.append((pat[i % len(pat)], degrees[i], j - i))
+        i = j
+    return groups
+
+
+# --------------------------------------------------------------------------
+# decode/prefill state (KV caches, recurrent states) specs
+# --------------------------------------------------------------------------
+def cache_specs(cfg: ArchConfig, info: MeshInfo, *, batch: int, seq: int,
+                batch_spec) -> Dict[str, Any]:
+    """State tree for serve_step.  Global shapes; kv-head dim sharded when the
+    attention plan shards it (replicated+sliced layouts store tp*kv_slice)."""
+    tp = info_tp(info, None)
+    tp_ax = info.tp_axes(None)
+    plan = attn_plan(cfg, tp)
+    hd = cfg.resolved_head_dim
+    dt = cfg.dtype
+    bsp = batch_spec[0] if len(batch_spec) else None
+
+    if plan.kv_sharded:
+        kv_heads, kv_sh = cfg.num_kv_heads, tp_ax
+    elif plan.sharded:
+        kv_heads, kv_sh = tp * plan.kv_slice, tp_ax   # duplicated storage
+    else:
+        kv_heads, kv_sh = cfg.num_kv_heads, None
+
+    def kv(n, s):
+        return {
+            "k": Spec((n, batch, s, kv_heads, hd), P(None, bsp, None, kv_sh, None), dt),
+            "v": Spec((n, batch, s, kv_heads, hd), P(None, bsp, None, kv_sh, None), dt),
+        }
+
+    n, pat, tail = stack_layout(cfg)
+    d_inner, nheads, nstate = ssd_dims(cfg)
+    w = cfg.rglru_width or cfg.d_model
+
+    def state_for(kind, count):
+        if kind == GLOBAL_ATTN:
+            return kv(count, seq)
+        if kind == LOCAL_ATTN:
+            return kv(count, min(seq, cfg.window))
+        if kind == CROSS_ATTN:
+            st = kv(count, seq)
+            st["c_k"] = Spec((count, batch, cfg.context_len, kv_heads, hd),
+                             P(None, bsp, None, kv_sh, None), dt)
+            st["c_v"] = Spec((count, batch, cfg.context_len, kv_heads, hd),
+                             P(None, bsp, None, kv_sh, None), dt)
+            return st
+        if kind == RGLRU:
+            wl_sh = tp_ax if (tp > 1 and w % tp == 0) else None
+            return {
+                "h": Spec((count, batch, w), P(None, bsp, wl_sh), jnp.float32),
+                "conv": Spec((count, batch, 3, w), P(None, bsp, None, wl_sh), dt),
+            }
+        if kind == SSD:
+            return {
+                "S": Spec((count, batch, nheads, cfg.ssm_headdim, nstate),
+                          P(None, bsp, None, None, None), jnp.float32),
+                "conv": Spec((count, batch, cfg.ssm_conv - 1, d_inner + 2 * nstate),
+                             P(None, bsp, None, None), dt),
+            }
+        raise ValueError(kind)
+
+    out: Dict[str, Any] = {
+        "blocks": [state_for(k, n) for k in pat] if n else [],
+        "tail": [state_for(k, 1) for k in tail],
+    }
+    return out
+
+
+# --------------------------------------------------------------------------
+# materialization
+# --------------------------------------------------------------------------
+def pspec_tree(specs):
+    return tree_map_specs(lambda s: s.pspec, specs)
+
+
+def shardings_tree(specs, mesh):
+    return tree_map_specs(lambda s: NamedSharding(mesh, s.pspec), specs)
+
+
+def abstract_params(specs, mesh):
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, s.pspec)), specs)
+
+
+def init_params(specs, key):
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for s, k in zip(leaves, keys):
+        if s.scale == 0.0:
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif s.scale == -1.0:
+            # "ones-ish": used for gate/decay params needing negative init
+            out.append(jnp.full(s.shape, -1.0 if s.dtype == jnp.float32 else 1.0,
+                                s.dtype))
+        else:
+            out.append(
+                (jax.random.normal(k, s.shape, jnp.float32) * s.scale)
+                .astype(s.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def zeros_state(specs):
+    return tree_map_specs(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in leaves)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)

@@ -1,0 +1,70 @@
+"""RG-LRU recurrence (Griffin / RecurrentGemma) — pure-JAX reference path.
+
+Diagonal input/recurrence gates (per-channel), as in the Griffin paper's
+block-diagonal limit; see DESIGN.md §Arch-applicability.  Training uses an
+associative scan (log-depth); decode is a single recurrence step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+C_CONST = 8.0
+
+
+def depthwise_conv1d(x, w, state=None):
+    """Causal depthwise temporal conv.  x [b, s, W]; w [k, W].
+
+    ``state`` [b, k-1, W] carries the last k-1 inputs for decode; returns
+    (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(k):
+        y = y + xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return y, new_state
+
+
+def _gates(x, p):
+    """x [b, s, W] -> (log_a [b,s,W] f32, gated input [b,s,W] f32)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(xf * p["w_x"] + p["b_x"])
+    log_a = -C_CONST * jax.nn.softplus(p["a_param"]) * r
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i * xf)
+    return log_a, gated
+
+
+def rglru_scan(x, p, h0=None):
+    """Full-sequence RG-LRU.  x [b, s, W] (conv'd branch); returns (y, h_last).
+
+    h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t), a_t = exp(log_a_t).
+    """
+    log_a, gated = _gates(x, p)
+    a = jnp.exp(log_a)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_sc, h = lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        # fold an initial state through: h_t += (prod a_1..t) * h0
+        h = h + a_sc * h0[:, None, :].astype(jnp.float32)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(x, p, h_prev):
+    """Single decode step.  x [b, 1, W]; h_prev [b, W] f32."""
+    log_a, gated = _gates(x, p)
+    a = jnp.exp(log_a[:, 0])
+    h = a * h_prev + gated[:, 0]
+    return h[:, None, :].astype(x.dtype), h

@@ -1,0 +1,115 @@
+"""Mamba2 SSD (state-space duality) — pure-JAX chunked reference path.
+
+Implements the chunked algorithm of the Mamba2 paper (intra-chunk quadratic
+attention-like term + inter-chunk linear state recurrence), with ngroups=1.
+Exact w.r.t. the sequential recurrence (tested in tests/test_ssd.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_chunked(x, dt, A_log, B, C, D, *, chunk: int = 128, h0=None):
+    """x [b, s, h, p]; dt [b, s, h] (post-softplus discretization step);
+    A_log [h]; B, C [b, s, n]; D [h] skip.  Returns (y [b,s,h,p], state
+    [b, h, p, n]).
+
+    Recurrence per head:  S_t = exp(-exp(A_log) * dt_t) * S_{t-1}
+                                + dt_t * x_t ⊗ B_t
+                          y_t = S_t · C_t + D * x_t
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} must divide by chunk {chunk}"
+    nc = s // chunk
+
+    xf = x.astype(jnp.float32)
+    a = -jnp.exp(A_log.astype(jnp.float32))                 # [h], a < 0
+    dta = dt.astype(jnp.float32) * a[None, None, :]         # [b, s, h] log-decay
+    dtx = xf * dt.astype(jnp.float32)[..., None]            # [b, s, h, p]
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    # chunk views
+    r = lambda t, extra: t.reshape((b, nc, chunk) + extra)
+    dta_c = r(dta, (h,))
+    x_c = r(dtx, (h, p))
+    B_c = r(Bf, (n,))
+    C_c = r(Cf, (n,))
+
+    la = jnp.cumsum(dta_c, axis=2)                          # [b,nc,Q,h] cumlog
+    la_last = la[:, :, -1:, :]                              # chunk total decay
+
+    # intra-chunk (masked quadratic): y_ij = C_i·B_j * exp(la_i - la_j), j<=i
+    seg = jnp.exp(la[:, :, :, None, :] - la[:, :, None, :, :])  # [b,nc,i,j,h]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = jnp.where(mask[None, None, :, :, None], seg, 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)            # [b,nc,i,j]
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, seg, x_c)
+
+    # chunk states: S_c = sum_j exp(la_last - la_j) * B_j ⊗ x_j
+    decay_to_end = jnp.exp(la_last - la)                    # [b,nc,Q,h]
+    S = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_to_end, B_c, x_c)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(la_last[:, :, 0, :])              # [b,nc,h]
+
+    def step(carry, inp):
+        Sc, dc = inp                                        # [b,h,p,n], [b,h]
+        new = carry * dc[..., None, None] + Sc
+        return new, carry                                   # emit state *before* chunk
+
+    init = (h0.astype(jnp.float32) if h0 is not None
+            else jnp.zeros((b, h, p, n), jnp.float32))
+    final, prev_states = lax.scan(
+        step, init, (S.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # [b,nc,h,p,n]
+
+    # inter-chunk contribution: y_i += exp(la_i) * C_i · S_prev
+    y_inter = jnp.einsum("bcih,bcin,bchpn->bcihp",
+                         jnp.exp(la), C_c, prev_states)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = y + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), final
+
+
+def ssd_sequential(x, dt, A_log, B, C, D, h0=None):
+    """O(s) sequential oracle for testing."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    a = -jnp.exp(A_log.astype(jnp.float32))
+    xf = x.astype(jnp.float32)
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt * a[None, :])                   # [b,h]
+        S = S * decay[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt * dtt[..., None], Bt)
+        y = jnp.einsum("bhpn,bn->bhp", S, Ct)
+        return S, y
+
+    init = (h0.astype(jnp.float32) if h0 is not None
+            else jnp.zeros((b, h, p, n), jnp.float32))
+    xs = (xf.transpose(1, 0, 2, 3), dt.astype(jnp.float32).transpose(1, 0, 2),
+          B.astype(jnp.float32).transpose(1, 0, 2),
+          C.astype(jnp.float32).transpose(1, 0, 2))
+    S, ys = lax.scan(step, init, xs)
+    y = ys.transpose(1, 0, 2, 3) + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), S
+
+
+def ssd_step(x, dt, A_log, B, C, D, S):
+    """Single decode step.  x [b,h,p]; dt [b,h]; B, C [b,n]; S [b,h,p,n]."""
+    a = -jnp.exp(A_log.astype(jnp.float32))
+    xf = x.astype(jnp.float32)
+    decay = jnp.exp(dt.astype(jnp.float32) * a[None, :])
+    S = S * decay[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xf * dt.astype(jnp.float32)[..., None],
+        B.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", S, C.astype(jnp.float32))
+    y = y + D.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x.dtype), S

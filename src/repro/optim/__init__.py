@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, abstract_opt_state, apply_updates,
+                               init_opt_state, opt_state_specs)
+
+__all__ = ["AdamWConfig", "abstract_opt_state", "apply_updates",
+           "init_opt_state", "opt_state_specs"]

@@ -1,0 +1,5 @@
+from repro.runtime.trainer import (FailureInjector, StragglerDetector,
+                                   Trainer, run_with_restarts)
+
+__all__ = ["FailureInjector", "StragglerDetector", "Trainer",
+           "run_with_restarts"]

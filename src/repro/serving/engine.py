@@ -1,0 +1,124 @@
+"""Batched serving engine: prefill + decode with slot-based continuous
+batching.
+
+The engine owns a fixed pool of ``slots`` (the decode batch dimension).
+Requests are admitted into free slots (prefill fills the slot's KV range),
+every engine step decodes one token for all active slots, and finished
+sequences free their slots for the admission queue — continuous batching
+without re-compiling (all shapes static).
+"""
+from __future__ import annotations
+
+import queue
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, TrainHParams
+from repro.core.axes import mesh_info
+from repro.models import lm
+from repro.models import params as prm
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # [prompt_len] int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, mesh, *, slots: int, max_seq: int,
+                 hp: Optional[TrainHParams] = None, eos_id: int = 2):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.hp = hp or TrainHParams()
+        self.slots = slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        info = mesh_info(mesh)
+
+        self.decode_fn, self.specs, self.state_specs = lm.build_decode(
+            cfg, mesh, self.hp, global_batch=slots, seq_len=max_seq)
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+        self.decode_fn = jax.jit(self.decode_fn, donate_argnums=donate)
+        # single-sequence prefill reused across slots (static shapes)
+        self.prefill_len = 128
+
+        self.params = None
+        self.state = None
+        self.pos = np.zeros((slots,), np.int32)
+        self.cur_tok = np.zeros((slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.stats = {"decoded_tokens": 0, "steps": 0, "admitted": 0}
+
+    def load(self, seed: int = 0, params=None):
+        self.params = params if params is not None else prm.init_params(
+            self.specs, jax.random.PRNGKey(seed))
+        self.state = prm.zeros_state(self.state_specs)
+
+    def submit(self, req: Request):
+        self.queue.put(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is not None:
+                continue
+            try:
+                req = self.queue.get_nowait()
+            except queue.Empty:
+                return
+            # teacher-forced prompt consumption via decode steps (simple,
+            # static-shape admission; a production engine would batch a
+            # dedicated prefill_step — see examples/serve_lm.py)
+            self.active[s] = req
+            self.pos[s] = 0
+            self.cur_tok[s] = int(req.prompt[0])
+            req._prompt_cursor = 1
+            self.stats["admitted"] += 1
+
+    def step(self):
+        """One engine iteration: admit, decode one token for all slots."""
+        self._admit()
+        tokens = jnp.asarray(self.cur_tok)
+        pos = jnp.asarray(self.pos)
+        next_tok, self.state = self.decode_fn(self.params, self.state,
+                                              tokens, pos)
+        next_tok = np.asarray(jax.device_get(next_tok))
+        self.stats["steps"] += 1
+        for s in range(self.slots):
+            req = self.active[s]
+            if req is None:
+                continue
+            self.pos[s] += 1
+            cur = getattr(req, "_prompt_cursor", len(req.prompt))
+            if cur < len(req.prompt):       # still consuming the prompt
+                self.cur_tok[s] = int(req.prompt[cur])
+                req._prompt_cursor = cur + 1
+                continue
+            tok = int(next_tok[s])
+            req.out_tokens.append(tok)
+            self.stats["decoded_tokens"] += 1
+            self.cur_tok[s] = tok
+            if (tok == self.eos_id
+                    or len(req.out_tokens) >= req.max_new_tokens
+                    or self.pos[s] >= self.max_seq - 1):
+                req.done = True
+                self.active[s] = None
+
+    def run_until_drained(self, max_steps: int = 10_000) -> Dict:
+        t0 = time.time()
+        for _ in range(max_steps):
+            if self.queue.empty() and all(a is None for a in self.active):
+                break
+            self.step()
+        dt = time.time() - t0
+        return {**self.stats, "wall_s": dt,
+                "tok_per_s": self.stats["decoded_tokens"] / max(dt, 1e-9)}

@@ -1,0 +1,28 @@
+"""Subprocess body: fine-grained recomputation (§3.2) removes the recompute
+collectives — count psums in the grad jaxpr."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainHParams
+from repro.configs.registry import get_config
+from repro.models import lm
+from repro.models import params as prm
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+counts = {}
+for fine in [False, True]:
+    cfg = get_config("internlm2-1.8b").reduced().replace(dtype="float32")
+    hp = TrainHParams(schedule="oases", fine_remat=fine)
+    fn, specs, _ = lm.build_train_loss(cfg, mesh, hp, global_batch=4,
+                                       seq_len=64)
+    p = prm.init_params(specs, jax.random.PRNGKey(0))
+    b = {"tokens": jnp.zeros((4, 64), jnp.int32),
+         "labels": jnp.zeros((4, 64), jnp.int32)}
+    with jax.set_mesh(mesh):
+        jx = jax.make_jaxpr(jax.grad(lambda p, b: fn(p, b)[0]))(p, b)
+    counts[fine] = str(jx).count("psum")
+print(f"coarse={counts[False]} fine={counts[True]}")
+print("PASS" if counts[True] < counts[False] else "FAIL", flush=True)

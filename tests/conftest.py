@@ -1,0 +1,26 @@
+# NOTE: deliberately no XLA_FLAGS here — smoke tests must see the real
+# (1-device) topology.  Multi-device tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves (tests/_scripts/).
+import os
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+@pytest.fixture(scope="session")
+def smoke_mesh():
+    import jax
+    from jax.sharding import AxisType
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def subprocess_env():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    return env

@@ -1,0 +1,52 @@
+import pytest
+
+from repro.configs.base import SHAPES, applicable_shapes
+from repro.configs.registry import ASSIGNED, all_cells, get_config
+
+
+def test_all_assigned_archs_present():
+    assert len(ASSIGNED) == 10
+    for a in ASSIGNED:
+        cfg = get_config(a)
+        assert cfg.num_layers > 0 and cfg.d_model > 0
+
+
+def test_cell_count_is_40():
+    cells = all_cells()
+    assert len(cells) == 40
+
+
+def test_long500k_only_subquadratic():
+    for cfg, shape, applicable in all_cells():
+        if shape.name == "long_500k":
+            assert applicable == cfg.sub_quadratic
+
+
+@pytest.mark.parametrize("arch,expected_b", [
+    ("internlm2-20b", 19.0e9), ("granite-8b", 8.0e9),
+    ("internlm2-1.8b", 1.8e9), ("gemma2-9b", 9.0e9),
+    # NOTE: the assigned spec (48L x 64e x d_ff 1408) yields ~28B total;
+    # the HF model's 16B comes from 27 layers — we implement the spec as
+    # assigned (DESIGN.md).
+    ("moonshot-v1-16b-a3b", 28.0e9), ("mamba2-130m", 0.13e9),
+])
+def test_param_counts_near_nameplate(arch, expected_b):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    assert 0.55 * expected_b < n < 1.6 * expected_b, (arch, n)
+
+
+def test_moe_active_params_below_total():
+    cfg = get_config("moonshot-v1-16b-a3b")
+    assert cfg.active_param_count() < 0.5 * cfg.param_count()
+
+
+def test_vocab_padding_divisible():
+    for a in ASSIGNED:
+        assert get_config(a).padded_vocab() % 256 == 0
+
+
+def test_reduced_configs_small():
+    for a in ASSIGNED:
+        r = get_config(a).reduced()
+        assert r.d_model <= 128 and r.num_layers <= get_config(a).num_layers

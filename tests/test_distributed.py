@@ -1,0 +1,53 @@
+"""Multi-device integration tests.  Each spawns a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the in-process tests
+must keep the real 1-device topology)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from conftest import subprocess_env
+
+SCRIPTS = os.path.join(os.path.dirname(__file__), "_scripts")
+
+
+def _run(name, timeout=900):
+    p = subprocess.run([sys.executable, os.path.join(SCRIPTS, name)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=subprocess_env())
+    out = p.stdout + p.stderr
+    assert p.returncode == 0, out[-3000:]
+    lines = [l for l in p.stdout.splitlines()
+             if l.startswith(("PASS", "FAIL"))]
+    assert lines, out[-2000:]
+    bad = [l for l in lines if l.startswith("FAIL")]
+    assert not bad, "\n".join(lines)
+    return lines
+
+
+@pytest.mark.slow
+def test_tmp_equivalence_and_schedules():
+    lines = _run("equivalence.py")
+    assert len(lines) >= 8          # 7 archs + schedule agreement
+
+
+@pytest.mark.slow
+def test_fine_remat_removes_recompute_collectives():
+    _run("remat_counts.py")
+
+
+@pytest.mark.slow
+def test_fault_tolerant_restart():
+    _run("ft_restart.py")
+
+
+@pytest.mark.slow
+def test_elastic_remesh_resume():
+    _run("elastic.py")
+
+
+@pytest.mark.slow
+def test_sequence_parallel_equivalence():
+    lines = _run("sp_equivalence.py")
+    assert len(lines) >= 5

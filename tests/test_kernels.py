@@ -1,0 +1,86 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs the ref.py
+pure-jnp oracles (the required per-kernel allclose tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("b,s,h,kvh,hd", [
+    (1, 128, 2, 2, 64), (2, 256, 4, 2, 64), (1, 192, 6, 1, 32),
+])
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True), dict(causal=True, window=64),
+    dict(causal=False), dict(causal=True, softcap=25.0),
+])
+def test_flash_attention_sweep(dtype, b, s, h, kvh, hd, kwargs):
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (b, s, h, hd), dtype)
+    kk = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, hd), dtype)
+    o = ops.flash_attention(q, kk, v, interpret=True, block_q=64,
+                            block_k=64, **kwargs)
+    r = ref.attention_ref(q, kk, v, **kwargs)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("rows,d", [(64, 128), (33, 256), (257, 512)])
+def test_rmsnorm_sweep(dtype, rows, d):
+    x = jax.random.normal(jax.random.PRNGKey(3), (rows, d), dtype)
+    s = 0.1 * jax.random.normal(jax.random.PRNGKey(4), (d,), jnp.float32)
+    o = ops.rmsnorm(x, s, interpret=True, block_rows=64)
+    r = ref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("b,s,w", [(1, 128, 512), (2, 64, 1024)])
+def test_rglru_sweep(dtype, b, s, w):
+    x = jax.random.normal(jax.random.PRNGKey(5), (b, s, w), dtype)
+    p = {n: 0.5 * jax.random.normal(kk, (w,))
+         for n, kk in zip(["w_a", "b_a", "w_x", "b_x", "a_param"],
+                          jax.random.split(jax.random.PRNGKey(6), 5))}
+    y, h = ops.rglru(x, p, interpret=True, block_t=32, block_w=256)
+    yr, hr = ref.rglru_ref(x, p)
+    np.testing.assert_allclose(y, yr, atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(h, hr, atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 128, 2, 32, 16, 64), (2, 256, 4, 64, 32, 128),
+])
+def test_ssd_sweep(b, s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = 0.5 * jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A_log = 0.1 * jax.random.normal(ks[2], (h,))
+    B = 0.3 * jax.random.normal(ks[3], (b, s, n))
+    C = 0.3 * jax.random.normal(ks[4], (b, s, n))
+    D = jnp.ones((h,))
+    y = ops.ssd(x, dt, A_log, B, C, D, chunk=chunk, interpret=True)
+    yr, _ = ref.ssd_ref(x, dt, A_log, B, C, D)
+    np.testing.assert_allclose(y, yr, atol=5e-4, rtol=5e-3)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("e,c,d,f", [(2, 128, 256, 128), (4, 256, 512, 256)])
+def test_moe_gmm_sweep(dtype, e, c, d, f):
+    x = jax.random.normal(jax.random.PRNGKey(8), (e, c, d), dtype)
+    w = 0.05 * jax.random.normal(jax.random.PRNGKey(9), (e, d, f), dtype)
+    o = ops.moe_gmm(x, w, interpret=True)
+    r = ref.moe_gmm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), **_tol(dtype))

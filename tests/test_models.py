@@ -1,0 +1,116 @@
+"""Model-component correctness: SSD chunked==sequential, RG-LRU scan==step,
+prefill/decode consistency, attention causality & masking properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import rglru as rg
+from repro.models import ssd as ssd_m
+from repro.models.attention import chunked_attention, decode_attention
+from repro.kernels import ref
+
+
+def test_ssd_chunked_matches_sequential():
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 5)
+    b, s, h, p, n = 2, 256, 3, 16, 8
+    x = 0.5 * jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A_log = 0.1 * jax.random.normal(ks[2], (h,))
+    B = 0.3 * jax.random.normal(ks[3], (b, s, n))
+    C = 0.3 * jax.random.normal(ks[4], (b, s, n))
+    D = jnp.ones((h,))
+    y1, s1 = ssd_m.ssd_chunked(x, dt, A_log, B, C, D, chunk=64)
+    y2, s2 = ssd_m.ssd_sequential(x, dt, A_log, B, C, D)
+    np.testing.assert_allclose(y1, y2, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(s1, s2, atol=2e-4, rtol=1e-3)
+
+
+def test_ssd_step_matches_scan_tail():
+    k = jax.random.PRNGKey(1)
+    ks = jax.random.split(k, 5)
+    b, s, h, p, n = 1, 33, 2, 8, 4
+    x = 0.5 * jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A_log = jnp.zeros((h,))
+    B = 0.3 * jax.random.normal(ks[3], (b, s, n))
+    C = 0.3 * jax.random.normal(ks[4], (b, s, n))
+    D = jnp.zeros((h,))
+    y_full, S_full = ssd_m.ssd_sequential(x, dt, A_log, B, C, D)
+    # replay last step from the state after s-1 tokens
+    y_pre, S_pre = ssd_m.ssd_sequential(x[:, :-1], dt[:, :-1], A_log,
+                                        B[:, :-1], C[:, :-1], D)
+    y_step, S_step = ssd_m.ssd_step(x[:, -1], dt[:, -1], A_log, B[:, -1],
+                                    C[:, -1], D, S_pre)
+    np.testing.assert_allclose(y_step, y_full[:, -1], atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(S_step, S_full, atol=1e-4, rtol=1e-3)
+
+
+def test_rglru_scan_matches_steps():
+    k = jax.random.PRNGKey(2)
+    b, s, w = 2, 17, 8
+    x = jax.random.normal(k, (b, s, w))
+    p = {n: 0.5 * jax.random.normal(kk, (w,))
+         for n, kk in zip(["w_a", "b_a", "w_x", "b_x", "a_param"],
+                          jax.random.split(k, 5))}
+    y_scan, h_last = rg.rglru_scan(x, p)
+    h = jnp.zeros((b, w), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, h = rg.rglru_step(x[:, t:t + 1], p, h)
+        ys.append(y)
+    y_steps = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_scan, y_steps, atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(h_last, h, atol=1e-5, rtol=1e-4)
+
+
+def test_attention_causality_property():
+    """Perturbing future tokens must not change past outputs."""
+    k = jax.random.PRNGKey(3)
+    b, s, h, hd = 1, 64, 2, 16
+    q = jax.random.normal(k, (b, s, h, hd))
+    kk = jax.random.normal(jax.random.PRNGKey(4), (b, s, h, hd))
+    v = jax.random.normal(jax.random.PRNGKey(5), (b, s, h, hd))
+    o1 = chunked_attention(q, kk, v, causal=True, chunk=32)
+    kk2 = kk.at[:, 40:].add(100.0)
+    v2 = v.at[:, 40:].add(-50.0)
+    o2 = chunked_attention(q, kk2, v2, causal=True, chunk=32)
+    np.testing.assert_allclose(o1[:, :40], o2[:, :40], atol=1e-5)
+
+
+def test_chunked_attention_matches_dense_ref():
+    k = jax.random.PRNGKey(6)
+    b, s, h, kvh, hd = 2, 96, 4, 2, 16
+    q = jax.random.normal(k, (b, s, h, hd))
+    kk = jax.random.normal(jax.random.PRNGKey(7), (b, s, kvh, hd))
+    v = jax.random.normal(jax.random.PRNGKey(8), (b, s, kvh, hd))
+    for kwargs in [dict(causal=True), dict(causal=True, window=24),
+                   dict(causal=False), dict(causal=True, softcap=30.0)]:
+        o = chunked_attention(q, kk, v, chunk=32, **kwargs)
+        r = ref.attention_ref(q, kk, v, **kwargs)
+        np.testing.assert_allclose(o, r, atol=2e-5, rtol=1e-4)
+
+
+def test_decode_attention_matches_prefill_tail():
+    k = jax.random.PRNGKey(9)
+    b, s, h, hd = 2, 48, 2, 16
+    q = jax.random.normal(k, (b, s, h, hd))
+    kk = jax.random.normal(jax.random.PRNGKey(10), (b, s, h, hd))
+    v = jax.random.normal(jax.random.PRNGKey(11), (b, s, h, hd))
+    full = chunked_attention(q, kk, v, causal=True, chunk=16)
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    dec = decode_attention(q[:, -1:], kk, v, pos)
+    np.testing.assert_allclose(dec[:, 0], full[:, -1], atol=1e-5, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 64), st.integers(1, 8))
+def test_rmsnorm_scale_invariance(b, s, mult):
+    """rmsnorm(c*x) == rmsnorm(x) for any positive scalar c (property)."""
+    x = jax.random.normal(jax.random.PRNGKey(b * 100 + s), (b, s, 32))
+    sc = jnp.zeros((32,))
+    y1 = ref.rmsnorm_ref(x, sc)
+    y2 = ref.rmsnorm_ref(x * mult, sc)
+    np.testing.assert_allclose(y1, y2, atol=1e-4, rtol=1e-3)

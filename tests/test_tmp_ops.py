@@ -1,0 +1,75 @@
+"""Unit + property tests for the TMP primitives (single-device: the
+collective axes are empty tuples, which must degrade to identity)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tmp as tmpc
+
+
+def test_reduce_from_tmp_no_axes_identity():
+    x = jnp.arange(6.0)
+    np.testing.assert_array_equal(tmpc.reduce_from_tmp(x, ()), x)
+
+
+def test_vocab_parallel_xent_matches_dense():
+    k = jax.random.PRNGKey(0)
+    t, d, v = 64, 32, 97
+    x = jax.random.normal(k, (2, t // 2, d))
+    head = jax.random.normal(jax.random.PRNGKey(1), (d, v))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (2, t // 2), 0, v)
+    loss_sum, count = tmpc.vocab_parallel_xent(x, head, labels, (), chunk=16)
+    logits = (x.reshape(-1, d) @ head).astype(jnp.float32)
+    dense = -jax.nn.log_softmax(logits)[jnp.arange(t), labels.reshape(-1)]
+    np.testing.assert_allclose(float(loss_sum), float(jnp.sum(dense)),
+                               rtol=1e-5)
+    assert int(count) == t
+
+
+def test_xent_gradient_matches_dense():
+    k = jax.random.PRNGKey(3)
+    t, d, v = 16, 8, 23
+    x = jax.random.normal(k, (1, t, d))
+    head = jax.random.normal(jax.random.PRNGKey(4), (d, v))
+    labels = jax.random.randint(jax.random.PRNGKey(5), (1, t), 0, v)
+
+    def ours(h):
+        s, c = tmpc.vocab_parallel_xent(x, h, labels, (), chunk=5)
+        return s / c
+
+    def dense(h):
+        logits = (x.reshape(-1, d) @ h).astype(jnp.float32)
+        return jnp.mean(-jax.nn.log_softmax(logits)[jnp.arange(t),
+                                                    labels.reshape(-1)])
+
+    g1 = jax.grad(ours)(head)
+    g2 = jax.grad(dense)(head)
+    np.testing.assert_allclose(g1, g2, atol=1e-5, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 64), st.integers(2, 40))
+def test_xent_positive_and_bounded(t, v):
+    x = jax.random.normal(jax.random.PRNGKey(t), (1, t, 8))
+    head = jax.random.normal(jax.random.PRNGKey(v), (8, v))
+    labels = jax.random.randint(jax.random.PRNGKey(7), (1, t), 0, v)
+    s, c = tmpc.vocab_parallel_xent(x, head, labels, (), chunk=7)
+    nll = float(s / c)
+    assert 0.0 <= nll < 50.0
+
+
+def test_softcap_bounds_logits_effect():
+    x = jnp.ones((1, 4, 8)) * 100.0
+    head = jnp.ones((8, 16))
+    labels = jnp.zeros((1, 4), jnp.int32)
+    s_cap, _ = tmpc.vocab_parallel_xent(x, head, labels, (), softcap=30.0)
+    assert np.isfinite(float(s_cap))
+
+
+def test_rms_norm_unit_output():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 13.0
+    y = tmpc.rms_norm(x, jnp.zeros((64,)))
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1)
+    np.testing.assert_allclose(ms, jnp.ones_like(ms), rtol=1e-3)
