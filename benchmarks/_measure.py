@@ -17,6 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
 from repro.configs.base import ArchConfig, GLOBAL_ATTN, TrainHParams
 from repro.core.axes import mesh_info
 from repro.launch import steps as steps_mod
@@ -63,7 +64,7 @@ def measure(cfg, seq, batch, tmp_degree, schedule, fine, iters=3):
          "labels": jax.random.randint(k, (batch, seq), 0, cfg.vocab_size,
                                       jnp.int32)}
     step = jax.jit(fn)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params, opt, m = step(params, opt, b)
         jax.block_until_ready(m["loss"])
         t0 = time.time()

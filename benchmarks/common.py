@@ -18,7 +18,9 @@ from repro.core.planner.costmodel import HWConfig
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
-SCHEDULES = ["megatron", "wang", "merak", "oases"]
+from repro.core.schedule import SCHEDULES as _ALL_SCHEDULES
+
+SCHEDULES = list(_ALL_SCHEDULES)
 
 
 def hp_for(schedule: str, fine: bool = None, planner: bool = False):

@@ -198,7 +198,7 @@ def applicable_shapes(arch: ArchConfig):
 @dataclass(frozen=True)
 class TrainHParams:
     """Run-level hyper-parameters (config system for the launcher)."""
-    schedule: str = "oases"          # megatron | wang | merak | oases
+    schedule: str = "oases"          # megatron | wang | merak | oases | fused
     fine_remat: bool = True          # §3.2 fine-grained recomputation
     use_planner: bool = False        # per-layer TMP degrees from the ILP
     split: int = 2                   # sub-batch split factor (paper: 2)

@@ -1,6 +1,7 @@
 from repro.core.planner.costmodel import (HWConfig, V5E, estimate_iteration,
-                                          layer_blocks, node_costs)
+                                          layer_blocks, node_costs,
+                                          overlapped_time)
 from repro.core.planner.ilp import PlanResult, plan
 
 __all__ = ["HWConfig", "V5E", "estimate_iteration", "layer_blocks",
-           "node_costs", "PlanResult", "plan"]
+           "node_costs", "overlapped_time", "PlanResult", "plan"]

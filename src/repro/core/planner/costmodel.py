@@ -45,6 +45,21 @@ class HWConfig:
 V5E = HWConfig()
 
 
+def overlapped_time(d: float, c: float, ring_steps: int) -> float:
+    """Node cost of a fused collective-matmul block (schedule='fused').
+
+    The kernel streams matmul tiles into a ring collective, so per tile-ring
+    the exposed time is ``max(T_comm, T_compute)`` — the slower side fully
+    hides the faster — plus one ring step of pipeline fill (the first
+    transfer has no prior tile to hide behind).  This is the term that lets
+    the planner *choose* fused partitions: comm that a blocking schedule
+    charges at ``T_comm + T_compute`` is genuinely free below the compute
+    roofline.
+    """
+    steps = max(ring_steps, 1)
+    return max(d, c) + min(d, c) / steps
+
+
 def _mxu_eff(hw: HWConfig, *dims: int) -> float:
     """Efficiency discount for narrow per-chip matmul dims (the paper's
     arithmetic-density caveat, §5.6)."""
@@ -234,6 +249,11 @@ def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                 # 1 compute overlaps own sub-batch-0 comm
                 total += max(d, prev_c) + max(d, c)
                 prev_c = c
+            elif hp.schedule == "fused":
+                # kernel-level collective matmul: comm is hidden under the
+                # tile matmuls of the same block (ring of n-1 transfers)
+                total += overlapped_time(split * d, split * c, n - 1)
+                prev_c = 0.0
             elif hp.schedule == "wang":
                 # intra-op decomposition hides all but one chunk
                 total += split * d + c / max(hp.split * 2, 1) + c * 0.1

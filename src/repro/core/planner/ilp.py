@@ -60,18 +60,30 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     # overlap structure handled via per-layer fwd/bwd exposed-cost upper
     # bound below)
     blocks = cm.layer_blocks(cfg, shape)
+    split = max(hp.split, 1)
+    overlap = hp.schedule in ("oases", "merak") and split > 1
+    fused = hp.schedule == "fused"
+
     d_f = np.zeros((L, P)); c_f = np.zeros((L, P))
     d_b = np.zeros((L, P)); c_b = np.zeros((L, P))
     mem = np.zeros((L, P))
+    # fused node costs must be summed over blocks PER BLOCK (the kernel
+    # rings are per-block: one block's comm never hides under another
+    # block's compute), matching estimate_iteration — aggregating d/c
+    # first and applying max{} after would understate comm-bound layers
+    fused_f = np.zeros((L, P)); fused_b = np.zeros((L, P))
     for i, layer in enumerate(blocks):
         for blk in layer:
             nc = cm.node_costs(cfg, blk, shape, hp, hw, options)
             d_f[i] += nc.d_f; c_f[i] += nc.c_f
             d_b[i] += nc.d_b; c_b[i] += nc.c_b
             mem[i] += np.array(nc.mem_s) + np.array(nc.mem_t)
-
-    split = max(hp.split, 1)
-    overlap = hp.schedule in ("oases", "merak") and split > 1
+            if fused:
+                for j in range(P):
+                    fused_f[i, j] += cm.overlapped_time(
+                        split * nc.d_f[j], split * nc.c_f[j], options[j] - 1)
+                    fused_b[i, j] += cm.overlapped_time(
+                        split * nc.d_b[j], split * nc.c_b[j], options[j] - 1)
 
     # Eq. 3 per layer, both passes:
     #   overlap: cost >= split*d   and cost >= (split-1)*d + c   (comm hidden
@@ -113,7 +125,15 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     for i in range(L):
         uf = nS + i
         ubk = nS + L + i
-        if overlap:
+        if fused:
+            # kernel-level overlap: per-option cost is the constant
+            # per-block-summed max{compute, comm} + fill (precomputed in
+            # fused_f/fused_b above), linear in the one-hot s row
+            add({uf: 1.0, **{i * P + j: -fused_f[i, j] for j in range(P)}},
+                0.0, np.inf)
+            add({ubk: 1.0, **{i * P + j: -fused_b[i, j] for j in range(P)}},
+                0.0, np.inf)
+        elif overlap:
             add({uf: 1.0, **{i * P + j: -split * d_f[i, j]
                              for j in range(P)}}, 0.0, np.inf)
             add({uf: 1.0, **{i * P + j: -((split - 1) * d_f[i, j] + c_f[i, j])

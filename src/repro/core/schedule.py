@@ -13,6 +13,12 @@ comm/compute overlap (DESIGN.md §2):
 * ``oases``    — Fig. 3c/d: two sub-batches, cross-pass (barrier-free; the
   transposed backward interleaves recompute and backward the same way), and
   with ``fine_remat`` the recompute contains no collectives at all.
+* ``fused``    — beyond-paper: kernel-level collective matmul
+  (:mod:`repro.kernels.collective_matmul`).  Each TMP collective is a ring
+  streamed through its producing/consuming matmul, so every ring step's
+  transfer overlaps the next tile's compute by construction — no scheduler
+  heuristics involved.  ``use_pallas=True`` swaps the ``lax.ppermute`` ring
+  for the in-kernel RDMA Pallas version on TPU.
 """
 from __future__ import annotations
 
@@ -25,7 +31,7 @@ import jax.numpy as jnp
 from repro.core import tmp as tmpc
 from repro.core.axes import MeshInfo
 
-SCHEDULES = ("megatron", "wang", "merak", "oases")
+SCHEDULES = ("megatron", "wang", "merak", "oases", "fused")
 
 
 @dataclass(frozen=True)
@@ -74,13 +80,30 @@ class TmpCtx:
             return tmpc.batch_split(x, self.tp_axes, seq_dim)
         return x
 
-    def row_matmul(self, x, w):
+    def row_matmul(self, x, w, seq_dim: int = 1):
         """x [..., K_local] @ w [K_local, D] followed by AllReduce (or
         reduce-scatter in SP mode).
 
         'wang' decomposes along the second-to-last dim so the chunked
-        AllReduces pipeline against the remaining chunk matmuls.
+        AllReduces pipeline against the remaining chunk matmuls; 'fused'
+        goes one level further and streams the matmul tiles through a ring
+        collective kernel (guaranteed overlap).  The AllReduce flavour
+        falls back to the blocking reference for indivisible shapes /
+        multi-axis groups; the SP reduce-scatter flavour requires the seq
+        dim divisible by the group (guaranteed by the SP gate in
+        models/lm.py, which only enables SP when seq % tp == 0).
         """
+        if self.schedule == "fused" and self.tp_axes and x.ndim >= 2:
+            from jax.ad_checkpoint import checkpoint_name
+            from repro.kernels import collective_matmul as cm
+            if self.seq_parallel:
+                y = cm.fused_matmul_reducescatter(
+                    x, w, self.tp_axes, seq_dim, self.use_pallas)
+            else:
+                y = cm.fused_matmul_allreduce(
+                    x, w, self.tp_axes, scatter_dim=min(seq_dim, x.ndim - 2),
+                    use_pallas=self.use_pallas)
+            return checkpoint_name(y, tmpc.COLLECTIVE_NAME)
         if self.schedule == "wang" and not self.seq_parallel and x.ndim >= 2:
             n = self.wang_chunks
             dim = x.ndim - 2
@@ -89,6 +112,22 @@ class TmpCtx:
                 outs = [self.reduce(jnp.dot(c, w)) for c in chunks]
                 return jnp.concatenate(outs, axis=dim)
         return self.reduce(jnp.dot(x, w))
+
+    def gather_matmul(self, x, ws, seq_dim: int = 1):
+        """Column-parallel block entry: project ``x`` with every weight in
+        ``ws`` (wq/wk/wv or wg/wu), gathering the sequence first in SP mode.
+
+        In fused+SP mode one all-gather ring feeds all the matmuls,
+        consuming shards as they arrive; otherwise gather once (SP) or
+        not at all and apply plain dots.
+        """
+        ws = tuple(ws)
+        if self.schedule == "fused" and self.seq_parallel and self.tp_axes:
+            from repro.kernels import collective_matmul as cm
+            return cm.fused_allgather_matmul(x, ws, self.tp_axes, seq_dim,
+                                             self.use_pallas)
+        h = self.gather_seq(x, seq_dim)
+        return tuple(jnp.dot(h, w) for w in ws)
 
 
 def split_tree(tree, split: int):
@@ -106,8 +145,10 @@ def merge_tree(subs):
 
 
 def effective_split(schedule: str, split: int, local_batch: int) -> int:
-    """Sub-batch split factor: oases/merak split (paper: 2) when divisible."""
-    if schedule in ("megatron", "wang"):
+    """Sub-batch split factor: oases/merak split (paper: 2) when divisible.
+    'fused' overlaps intra-op (inside the kernel), so like megatron/wang it
+    runs the full batch in one pass."""
+    if schedule in ("megatron", "wang", "fused"):
         return 1
     s = min(split, local_batch)
     while s > 1 and local_batch % s:

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -128,7 +130,7 @@ def flash_attention(q, k, v, *, causal: bool = True,
             pltpu.VMEM((bq,), jnp.float32),      # l (running denom)
             pltpu.VMEM((bq, hd), jnp.float32),   # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

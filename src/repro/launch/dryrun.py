@@ -62,11 +62,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     if mesh_shape:
         # hillclimb lever: reshape the 256 chips (e.g. "32x8" = more DP,
         # less TMP). The baseline table always uses the 16x16 mesh.
-        import jax as _jax
-        from jax.sharding import AxisType
+        from repro.core import compat
         d, m = (int(x) for x in mesh_shape.split("x"))
-        mesh = _jax.make_mesh((d, m), ("data", "model"),
-                              axis_types=(AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((d, m), ("data", "model"),
+                                axis_types=compat.auto_axis_types(2))
         rec["mesh_shape"] = mesh_shape
     else:
         mesh = (make_factored_mesh(multi_pod=multi_pod) if planner_degrees

@@ -209,6 +209,26 @@ class HloCost:
             "collective_by_kind": dict(self.collective_by_kind),
         }
 
+    def roofline_seconds(self, *, peak_flops: float, hbm_bw: float,
+                         link_bw: float, mxu_eff: float = 1.0) -> Dict:
+        """Roofline step-time estimate from the extracted HLO terms.
+
+        ``serial_s`` charges compute + comm back-to-back (a blocking
+        schedule); ``overlapped_s`` is the fused/collective-matmul bound
+        ``max(T_compute, T_comm)`` — comm below the compute roofline is
+        free when the kernel streams tiles into the ring.  The gap between
+        the two is the step time a fused schedule can recover.
+        """
+        t_compute = max(self.dot_flops / max(peak_flops * mxu_eff, 1.0),
+                        self.hbm_bytes / max(hbm_bw, 1.0))
+        t_comm = self.collective_link_bytes / max(link_bw, 1.0)
+        return {
+            "compute_s": t_compute,
+            "comm_s": t_comm,
+            "serial_s": t_compute + t_comm,
+            "overlapped_s": max(t_compute, t_comm),
+        }
+
 
 def analyze(text: str, *, default_group: int = 1) -> HloCost:
     comps, entry = parse_hlo(text)

@@ -8,12 +8,13 @@ import; smoke tests and benchmarks see the real (1-device) topology.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.core import compat
 
 
 def _mk(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes,
+                            axis_types=compat.auto_axis_types(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -16,12 +16,13 @@ import os
 
 
 def main():
+    from repro.core.schedule import SCHEDULES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--reduced", action="store_true",
                     help="tiny same-family config (CPU demo)")
-    ap.add_argument("--schedule", default="oases",
-                    choices=["megatron", "wang", "merak", "oases"])
+    ap.add_argument("--schedule", default="oases", choices=list(SCHEDULES))
     ap.add_argument("--no-fine-remat", dest="fine_remat",
                     action="store_false")
     ap.add_argument("--planner", action="store_true",
@@ -61,9 +62,9 @@ def main():
         mesh = make_production_mesh(multi_pod=True)
     else:
         d, m = (int(x) for x in args.mesh.split("x"))
-        from jax.sharding import AxisType
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        from repro.core import compat
+        mesh = compat.make_mesh((d, m), ("data", "model"),
+                                axis_types=compat.auto_axis_types(2))
 
     hp = TrainHParams(schedule=args.schedule, fine_remat=args.fine_remat,
                       learning_rate=args.lr, total_steps=args.steps,

@@ -151,8 +151,10 @@ def make_mlp_part(cfg: ArchConfig, ctx: TmpCtx) -> Callable:
         return part
 
     def part(p, x, aux):
-        h = ctx.gather_seq(_norm(x, p["ln2"], cfg.norm_eps))
-        a = jax.nn.silu(jnp.dot(h, p["wg"])) * jnp.dot(h, p["wu"])
+        # fused+SP: one all-gather ring feeds both up-projections
+        g, u = ctx.gather_matmul(_norm(x, p["ln2"], cfg.norm_eps),
+                                 (p["wg"], p["wu"]))
+        a = jax.nn.silu(g) * u
         # local width != global width -> column-parallel -> row-parallel out
         if ctx.tp > 1 and p["wd"].shape[0] != cfg.d_ff:
             delta = ctx.row_matmul(a, p["wd"])
@@ -174,9 +176,8 @@ def _rglru_gates(p):
 
 def make_rglru_part(cfg: ArchConfig, ctx: TmpCtx) -> Callable:
     def part(p, x, aux):
-        h = ctx.gather_seq(_norm(x, p["ln"], cfg.norm_eps))
-        xb = jnp.dot(h, p["w_in_x"])
-        gb = jnp.dot(h, p["w_in_g"])
+        xb, gb = ctx.gather_matmul(_norm(x, p["ln"], cfg.norm_eps),
+                                   (p["w_in_x"], p["w_in_g"]))
         xc, _ = rglru_m.depthwise_conv1d(xb, p["conv"])
         y, _ = rglru_m.rglru_scan(xc, _rglru_gates(p))
         o = jax.nn.gelu(gb) * y
@@ -203,14 +204,15 @@ def _ssd_split(cfg, z_xbc_dt):
 
 def make_ssd_part(cfg: ArchConfig, ctx: TmpCtx) -> Callable:
     def part(p, x, aux):
-        h = ctx.gather_seq(_norm(x, p["ln"], cfg.norm_eps))
-        z, xbc, dtp, (d_inner, nheads, n) = _ssd_split(cfg, jnp.dot(h, p["in_proj"]))
+        (proj,) = ctx.gather_matmul(_norm(x, p["ln"], cfg.norm_eps),
+                                    (p["in_proj"],))
+        z, xbc, dtp, (d_inner, nheads, n) = _ssd_split(cfg, proj)
         xbc, _ = rglru_m.depthwise_conv1d(xbc, p["conv"])
         xbc = jax.nn.silu(xbc)
         xs = xbc[..., :d_inner]
         B = xbc[..., d_inner:d_inner + n]
         C = xbc[..., d_inner + n:]
-        b, s, _ = h.shape            # h may be seq-gathered (SP mode)
+        b, s, _ = proj.shape         # proj is seq-gathered in SP mode
         xh = xs.reshape(b, s, nheads, cfg.ssm_headdim)
         dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])
         y, _ = ssd_m.ssd_chunked(xh, dt, p["A_log"], B, C, p["Dskip"],

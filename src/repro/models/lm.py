@@ -23,6 +23,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, TrainHParams
+from repro.core import compat
 from repro.core import tmp as tmpc
 from repro.core.axes import MeshInfo, batch_pspec, mesh_info
 from repro.core.remat import maybe_checkpoint
@@ -73,7 +74,10 @@ def _stack_scan(cfg, ctx, hp, params, xs, auxs, *, train=True):
     if train:
         body = maybe_checkpoint(block_body, remat=hp.remat,
                                 fine=hp.fine_remat)
-    carry = (xs, jnp.float32(0.0))
+    # NOTE: the aux carry is kept rank-1: jax 0.4.x shard_map mis-names
+    # rank-0 scan-carry residuals under the fine-remat policy (see
+    # core/compat.py); a (1,) carry sidesteps it at zero cost.
+    carry = (xs, jnp.zeros((1,), jnp.float32))
     if n:
         carry, _ = lax.scan(body, carry, tuple(params["blocks"]))
     xs, aux = carry
@@ -90,7 +94,7 @@ def _stack_scan(cfg, ctx, hp, params, xs, auxs, *, train=True):
             xs, a = apply_layer(parts[kind], params["tail"][i], xs, auxs,
                                 hp.schedule)
             aux = aux + a
-    return xs, aux
+    return xs, jnp.sum(aux)
 
 
 # --------------------------------------------------------------------------
@@ -117,7 +121,7 @@ def _grouped_scan(cfg, info, hp, params, x, degrees):
         cur_axes = new_axes
         return x
 
-    aux_total = jnp.float32(0.0)
+    aux_total = jnp.zeros((1,), jnp.float32)   # rank-1: see _stack_scan NOTE
     for g_params, (kind, degree, n) in zip(params["groups"],
                                            prm.plan_groups(cfg, degrees)):
         ctx = TmpCtx(info, degree=degree, schedule=hp.schedule,
@@ -139,7 +143,7 @@ def _grouped_scan(cfg, info, hp, params, x, degrees):
         (xs, aux_total), _ = lax.scan(body, (xs, aux_total), g_params)
         x = merge_tree(xs) if len(xs) > 1 else xs[0]
     x = reshard(x, ())
-    return x, aux_total
+    return x, jnp.sum(aux_total)
 
 
 # --------------------------------------------------------------------------
@@ -212,10 +216,10 @@ def build_train_loss(cfg: ArchConfig, mesh, hp: TrainHParams, *,
         return loss_sum / count + aux, aux
 
     in_specs = (prm.pspec_tree(specs), batch_specs)
-    sm = jax.shard_map(body, mesh=mesh,
-                       in_specs=(in_specs[0],
-                                 {k: v for k, v in batch_specs.items()}),
-                       out_specs=(P(), P()), check_vma=False)
+    sm = compat.shard_map(body, mesh=mesh,
+                          in_specs=(in_specs[0],
+                                    {k: v for k, v in batch_specs.items()}),
+                          out_specs=(P(), P()), check_vma=False)
     return sm, specs, in_specs
 
 
@@ -292,7 +296,7 @@ def build_prefill(cfg: ArchConfig, mesh, hp: TrainHParams, *,
         return greedy_token(logits, ctx.tp_axes), sts
 
     st_out_specs = prm.pspec_tree(st_specs)
-    sm = jax.shard_map(
+    sm = compat.shard_map(
         body, mesh=mesh, in_specs=(prm.pspec_tree(specs), batch_specs),
         out_specs=(bspec, st_out_specs), check_vma=False)
     return sm, specs, st_specs
@@ -360,7 +364,7 @@ def build_decode(cfg: ArchConfig, mesh, hp: TrainHParams, *,
         return greedy_token(logits, ctx.tp_axes), new_state
 
     st_ps = prm.pspec_tree(st_specs)
-    sm = jax.shard_map(
+    sm = compat.shard_map(
         body, mesh=mesh,
         in_specs=(prm.pspec_tree(specs), st_ps, bspec, bspec),
         out_specs=(bspec, st_ps), check_vma=False)

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compat
 from repro.configs.base import TrainHParams
 from repro.configs.registry import get_config
 from repro.models import lm
@@ -33,7 +34,7 @@ def run(arch, mesh_shape, schedule="oases", fine=True):
     if cfg.context_len:
         batch["ctx"] = 0.02 * jax.random.normal(
             k, (4, cfg.context_len, cfg.d_model), jnp.float32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         loss = jax.jit(loss_fn)(p, batch)[0]
         grads = jax.jit(jax.grad(lambda p, b: loss_fn(p, b)[0]))(p, batch)
     flat = {jax.tree_util.keystr(kp): np.asarray(jax.device_get(v))
@@ -65,7 +66,7 @@ for sched in ["megatron", "wang", "merak", "oases"]:
     p = prm.init_params(specs, jax.random.PRNGKey(0))
     b = {"tokens": jnp.ones((4, 64), jnp.int32),
          "labels": jnp.ones((4, 64), jnp.int32)}
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         losses[sched] = float(jax.jit(fn)(p, b)[0])
 spread = max(losses.values()) - min(losses.values())
 print(f"{'PASS' if spread < 1e-5 else 'FAIL'} schedules spread={spread:.2e}",

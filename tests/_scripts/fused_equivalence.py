@@ -1,0 +1,132 @@
+"""Subprocess body: fused collective-matmul numerics + schedule equivalence.
+
+Part 1 — kernel-level: the ring decompositions (matmul→AR, matmul→RS,
+AG→matmul) must match the jnp.dot + lax.psum/psum_scatter/all_gather
+oracles in forward AND gradient, for fp32 and bf16 and for uneven
+(non-power-of-two chunk) tile shapes, on an 8-virtual-device mesh.
+
+Part 2 — schedule-level: ``schedule="fused"`` must match ``megatron``
+loss/grads bitwise-tolerantly under a 2-device model mesh.
+
+Prints PASS/FAIL lines consumed by tests/test_collective_matmul.py.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compat
+from repro.configs.base import TrainHParams
+from repro.configs.registry import get_config
+from repro.kernels import collective_matmul as cm
+from repro.models import lm
+from repro.models import params as prm
+
+AXES = ("model",)
+
+
+def _tol(dtype):
+    return 3e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+def check(name, a, b, tol):
+    a = [np.asarray(x, np.float32) for x in jax.tree_util.tree_leaves(a)]
+    b = [np.asarray(x, np.float32) for x in jax.tree_util.tree_leaves(b)]
+    err = max(float(np.max(np.abs(x - y))) / (float(np.max(np.abs(x))) + 1e-6)
+              for x, y in zip(a, b))
+    print(f"{'PASS' if err < tol else 'FAIL'} {name} err={err:.2e}",
+          flush=True)
+
+
+def kernel_level(dtype, b, s, k, d):
+    mesh = jax.make_mesh((8,), ("model",))
+    kx, kw, kw2 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(kx, (b, s, k), dtype)
+    w = (0.1 * jax.random.normal(kw, (k, d))).astype(dtype)
+    w2 = (0.1 * jax.random.normal(kw2, (k, d))).astype(dtype)
+    tag = f"{dtype.__name__}-{b}x{s}x{k}x{d}"
+
+    def pair(fused_body, ref_body, in_specs, out_specs, args, nout=1):
+        smf = compat.shard_map(fused_body, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs)
+        smr = compat.shard_map(ref_body, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs)
+
+        def loss(f):
+            return lambda *a: sum(
+                jnp.sum(jnp.tanh(o.astype(jnp.float32)))
+                for o in jax.tree_util.tree_leaves(f(*a)))
+
+        of, orf = jax.jit(smf)(*args), jax.jit(smr)(*args)
+        gf = jax.jit(jax.grad(loss(smf), argnums=tuple(range(len(args)))))(*args)
+        gr = jax.jit(jax.grad(loss(smr), argnums=tuple(range(len(args)))))(*args)
+        return (of, gf), (orf, gr)
+
+    # matmul -> all-reduce (row-parallel exit, K sharded)
+    f, r = pair(
+        lambda xl, wl: cm.fused_matmul_allreduce(xl, wl, AXES),
+        lambda xl, wl: cm.matmul_allreduce_ref(xl, wl, AXES),
+        (P(None, None, "model"), P("model", None)), P(), (x, w))
+    check(f"ar-{tag}", f, r, _tol(dtype))
+
+    # matmul -> reduce-scatter (SP exit, scatter along seq)
+    f, r = pair(
+        lambda xl, wl: cm.fused_matmul_reducescatter(xl, wl, AXES, 1),
+        lambda xl, wl: cm.matmul_reducescatter_ref(xl, wl, AXES, 1),
+        (P(None, None, "model"), P("model", None)),
+        P(None, "model", None), (x, w))
+    check(f"rs-{tag}", f, r, _tol(dtype))
+
+    # all-gather -> matmul, two weights on one ring (SP entry)
+    f, r = pair(
+        lambda xl, w1, w2: cm.fused_allgather_matmul(xl, (w1, w2), AXES, 1),
+        lambda xl, w1, w2: cm.allgather_matmul_ref(xl, (w1, w2), AXES, 1),
+        (P(None, "model", None), P(None, "model"), P(None, "model")),
+        (P(None, None, "model"), P(None, None, "model")), (x, w, w2))
+    check(f"ag-{tag}", f, r, _tol(dtype))
+
+
+for dtype in (jnp.float32, jnp.bfloat16):
+    kernel_level(dtype, 2, 32, 64, 48)
+kernel_level(jnp.float32, 1, 24, 40, 56)       # uneven: chunks of 3 rows
+kernel_level(jnp.float32, 3, 16, 104, 72)      # uneven K_local=13
+
+
+# ---- schedule equivalence: fused == megatron on a 2-device model mesh ----
+def run(schedule, mesh, sp=False):
+    cfg = get_config("internlm2-1.8b").reduced().replace(dtype="float32")
+    hp = TrainHParams(schedule=schedule, fine_remat=True, seq_parallel=sp)
+    loss_fn, specs, _ = lm.build_train_loss(cfg, mesh, hp, global_batch=4,
+                                            seq_len=64)
+    p = prm.init_params(specs, jax.random.PRNGKey(0))
+    kb = jax.random.PRNGKey(42)
+    batch = {"tokens": jax.random.randint(kb, (4, 64), 0, cfg.vocab_size,
+                                          jnp.int32),
+             "labels": jax.random.randint(kb, (4, 64), 0, cfg.vocab_size,
+                                          jnp.int32)}
+    with compat.set_mesh(mesh):
+        loss = float(jax.jit(loss_fn)(p, batch)[0])
+        grads = jax.jit(jax.grad(lambda p, b: loss_fn(p, b)[0]))(p, batch)
+    return loss, grads
+
+
+mesh2 = jax.make_mesh((1, 2), ("data", "model"))
+l_meg, g_meg = run("megatron", mesh2)
+l_fus, g_fus = run("fused", mesh2)
+print(f"{'PASS' if abs(l_meg - l_fus) < 1e-6 else 'FAIL'} "
+      f"sched-loss dloss={abs(l_meg - l_fus):.2e}", flush=True)
+check("sched-grads", g_meg, g_fus, 5e-4)
+
+# fused + sequence-parallel: the only mode reaching the custom-VJP pair
+# (fused_allgather_matmul / fused_matmul_reducescatter) through the model,
+# on a 4-way model axis so the rings actually run
+mesh4 = jax.make_mesh((2, 4), ("data", "model"))
+l_meg_sp, g_meg_sp = run("megatron", mesh4, sp=True)
+l_fus_sp, g_fus_sp = run("fused", mesh4, sp=True)
+print(f"{'PASS' if abs(l_meg_sp - l_fus_sp) < 1e-6 else 'FAIL'} "
+      f"sched-sp-loss dloss={abs(l_meg_sp - l_fus_sp):.2e}", flush=True)
+check("sched-sp-grads", g_meg_sp, g_fus_sp, 5e-4)

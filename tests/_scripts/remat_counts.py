@@ -6,6 +6,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
 from repro.configs.base import TrainHParams
 from repro.configs.registry import get_config
 from repro.models import lm
@@ -21,7 +22,7 @@ for fine in [False, True]:
     p = prm.init_params(specs, jax.random.PRNGKey(0))
     b = {"tokens": jnp.zeros((4, 64), jnp.int32),
          "labels": jnp.zeros((4, 64), jnp.int32)}
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         jx = jax.make_jaxpr(jax.grad(lambda p, b: fn(p, b)[0]))(p, b)
     counts[fine] = str(jx).count("psum")
 print(f"coarse={counts[False]} fine={counts[True]}")

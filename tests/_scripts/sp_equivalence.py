@@ -2,6 +2,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 import numpy as np
+from repro.core import compat
 from repro.configs.registry import get_config
 from repro.configs.base import TrainHParams
 from repro.models import lm, params as prm
@@ -17,7 +18,7 @@ def run(arch, sp, seq=64):
              'labels': jax.random.randint(k, (4, seq), 0, cfg.vocab_size, jnp.int32)}
     if cfg.context_len:
         batch['ctx'] = 0.02*jax.random.normal(k, (4, cfg.context_len, cfg.d_model), jnp.float32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         loss = jax.jit(loss_fn)(p, batch)[0]
         g = jax.jit(jax.grad(lambda p, b: loss_fn(p, b)[0]))(p, batch)
     flat = {jax.tree_util.keystr(kp): np.asarray(jax.device_get(v))

@@ -13,10 +13,10 @@ if SRC not in sys.path:
 
 @pytest.fixture(scope="session")
 def smoke_mesh():
-    import jax
-    from jax.sharding import AxisType
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    # compat.make_mesh drops axis_types on jax versions without AxisType
+    from repro.core import compat
+    return compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
 
 
 def subprocess_env():
@@ -24,3 +24,27 @@ def subprocess_env():
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.abspath(SRC)
     return env
+
+
+def optional_hypothesis():
+    """``(given, settings, st)`` from hypothesis, or decoration-safe stubs
+    whose ``given`` marks the decorated test skipped — so missing the
+    optional dep skips ONLY the property tests, not the module's plain
+    tests (a module-level importorskip would take those down too)."""
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ModuleNotFoundError:
+        def given(*_a, **_k):
+            return lambda f: pytest.mark.skip(
+                reason="needs hypothesis (pip install -r "
+                       "requirements-dev.txt)")(f)
+
+        def settings(*_a, **_k):
+            return lambda f: f
+
+        class _Strategies:
+            def __getattr__(self, _name):
+                return lambda *a, **k: None
+
+        return given, settings, _Strategies()

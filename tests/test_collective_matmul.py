@@ -1,0 +1,101 @@
+"""Fused collective-matmul kernels: backend dispatch, single-device
+degradation, interpret-mode tile microkernel numerics, and the 8-virtual-
+device ring-vs-oracle + fused-vs-megatron equivalence subprocess."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import subprocess_env
+
+from repro.kernels import collective_matmul as cm
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# single-device degradation: empty axes -> plain matmul, no collectives
+# --------------------------------------------------------------------------
+def test_no_axes_is_plain_matmul():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 32))
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (32, 24))
+    ref = jnp.dot(x, w)
+    np.testing.assert_allclose(cm.fused_matmul_allreduce(x, w, ()), ref,
+                               rtol=1e-6)
+    np.testing.assert_allclose(
+        cm.fused_matmul_reducescatter(x, w, (), 1), ref, rtol=1e-6)
+    (o,) = cm.fused_allgather_matmul(x, (w,), (), 1)
+    np.testing.assert_allclose(o, ref, rtol=1e-6)
+
+
+def test_no_axes_gradients_match_dot():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 16))
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(3), (16, 12))
+
+    def f_fused(x, w):
+        return jnp.sum(jnp.tanh(cm.fused_matmul_reducescatter(x, w, (), 1)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.tanh(jnp.dot(x, w)))
+
+    gf = jax.grad(f_fused, argnums=(0, 1))(x, w)
+    gr = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# backend dispatch rules
+# --------------------------------------------------------------------------
+def test_backend_selection():
+    assert cm.backend((), 64) == "ref"                  # no axes
+    assert cm.backend(("t1", "t2"), 64) == "ref"        # multi-axis group
+    # single axis but outside a mesh context: axes_size would need a mesh,
+    # so exercise via divisibility on a fake 1-sized axis is not possible
+    # here; divisibility is covered by the subprocess (uneven shapes hit
+    # the ring because they stay divisible by the ring size).
+
+
+# --------------------------------------------------------------------------
+# interpret-mode tile microkernel (the per-ring-step compute)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (128, 256, 128, 64, 64, 128),
+    (100, 200, 72, 32, 32, 64),          # uneven tiles, padded
+    (33, 48, 17, 16, 16, 16),            # heavily uneven
+])
+def test_pallas_tile_matmul_sweep(dtype, m, k, n, bm, bn, bk):
+    x = jax.random.normal(jax.random.PRNGKey(4), (m, k), dtype)
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(5), (k, n)).astype(dtype)
+    o = cm.pallas_tile_matmul(x, w, block_m=bm, block_n=bn, block_k=bk,
+                              interpret=True)
+    r = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), **_tol(dtype))
+
+
+# --------------------------------------------------------------------------
+# multi-device ring numerics + schedule equivalence (subprocess: needs 8
+# virtual CPU devices, set before jax import)
+# --------------------------------------------------------------------------
+def test_fused_equivalence_subprocess():
+    import os
+    script = os.path.join(os.path.dirname(__file__), "_scripts",
+                          "fused_equivalence.py")
+    r = subprocess.run([sys.executable, script], capture_output=True,
+                       text=True, env=subprocess_env(), timeout=1200)
+    assert r.returncode == 0, r.stderr[-2000:]
+    lines = [ln for ln in r.stdout.splitlines()
+             if ln.startswith(("PASS", "FAIL"))]
+    assert lines, r.stdout
+    bad = [ln for ln in lines if ln.startswith("FAIL")]
+    assert not bad, "\n".join(bad)

@@ -9,9 +9,9 @@ from repro.serving import Request, ServingEngine
 
 @pytest.fixture(scope="module")
 def engine():
-    from jax.sharding import AxisType
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.core import compat
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
     cfg = get_config("internlm2-1.8b").reduced().replace(dtype="float32")
     eng = ServingEngine(cfg, mesh, slots=2, max_seq=48)
     eng.load(seed=0)
@@ -29,9 +29,9 @@ def test_more_requests_than_slots(engine):
 
 
 def test_greedy_determinism():
-    from jax.sharding import AxisType
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.core import compat
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
     cfg = get_config("internlm2-1.8b").reduced().replace(dtype="float32")
 
     def decode_once():

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.checkpoint import store
 from repro.core.axes import mesh_info
@@ -90,9 +93,9 @@ def test_checkpoint_atomicity_no_tmp_left():
 
 # ---------------- optimizer ----------------
 def _mesh11():
-    from jax.sharding import AxisType
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.core import compat
+    return compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
 
 
 def test_adamw_decreases_quadratic_loss():
