@@ -3,9 +3,14 @@
 Prints ``name,us_per_call,derived`` CSV (us_per_call = the primary latency
 of the row where defined, else the modeled iteration time), then a readable
 JSON dump per table to results/bench_report.json.
+
+``--dry-run``: exercise every driver's modeled path but skip the measured
+fig6 subprocess (the only slow step) — the CI smoke that keeps the
+benchmark drivers from bit-rotting.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -13,7 +18,14 @@ import time
 
 
 def main() -> None:
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="modeled paths only; skip the measured fig6 "
+                         "subprocess (CI smoke)")
+    args = ap.parse_args()
+    root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, os.path.abspath(root))       # the benchmarks package
+    sys.path.insert(0, os.path.join(root, "src"))
     from benchmarks import (fig2_breakdown, fig4_end_to_end, fig6_costmodel,
                             fig7_scaling, roofline_report, table2_device_eff,
                             table3_ablation, table6_planner)
@@ -62,16 +74,21 @@ def main() -> None:
         print(f"fig7/{r['model']}/{r['schedule']}/{r['chips']},0,"
               f"eff={r['scaling_eff']}")
 
-    try:
-        f6 = fig6_costmodel.run()
-        report["fig6_costmodel"] = f6
-        print(f"fig6/spearman,0,rho={f6['spearman']}")
-        for p in f6["points"]:
-            print(f"fig6/{p['strategy'].replace(',', ' ')},"
-                  f"{p['measured_ms']*1e3:.0f},pred_ms={p['predicted_ms']}")
-    except Exception as e:      # measured path needs the 8-dev subprocess
-        report["fig6_costmodel"] = {"error": str(e)[:500]}
-        print("fig6/spearman,0,ERROR")
+    if args.dry_run:
+        report["fig6_costmodel"] = {"skipped": "dry-run"}
+        print("fig6/spearman,0,SKIPPED(dry-run)")
+    else:
+        try:
+            f6 = fig6_costmodel.run()
+            report["fig6_costmodel"] = f6
+            print(f"fig6/spearman,0,rho={f6['spearman']}")
+            for p in f6["points"]:
+                print(f"fig6/{p['strategy'].replace(',', ' ')},"
+                      f"{p['measured_ms']*1e3:.0f},"
+                      f"pred_ms={p['predicted_ms']}")
+        except Exception as e:  # measured path needs the 8-dev subprocess
+            report["fig6_costmodel"] = {"error": str(e)[:500]}
+            print("fig6/spearman,0,ERROR")
 
     rows = roofline_report.run()
     report["roofline"] = rows

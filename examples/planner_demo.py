@@ -1,11 +1,16 @@
 """Oases planner demo (deliverable b): per-layer TMP degrees from the ILP
-for the paper's model table, plus the cost model's view of each schedule.
+for the paper's model table, plus the cost model's view of each schedule,
+and the Planner-v2 2D hybrid-partition search on a heterogeneous
+(commodity-server) bandwidth profile.
 
     PYTHONPATH=src python examples/planner_demo.py
+
+The same search spaces are reachable from the launchers via
+``--tmp-layout {1d,2d,auto}`` (train.py / dryrun.py).
 """
 from repro.configs.base import TrainHParams
 from repro.configs.gpt_oases import PAPER_TABLE4, paper_shape
-from repro.core.planner import estimate_iteration, plan
+from repro.core.planner import COMMODITY_25GBE, estimate_iteration, plan
 from repro.core.planner.costmodel import HWConfig
 
 HW = HWConfig(n_chips=32, peak_flops=71e12, hbm_bw=936e9, link_bw=8e9,
@@ -25,3 +30,12 @@ for key in ("gpt-h2048", "gpt-h4096", "gpt-h8192"):
     est = estimate_iteration(cfg, shape, hp, pr.degrees, HW)
     print(f"  oases+ILP  {pr.summary()}")
     print(f"             -> {est['tokens_per_s']/1e3:7.1f} k tok/s")
+    # Planner v2: 2D hybrid search under per-axis (intra- vs inter-node)
+    # bandwidths.  The memory cap forces the full 16-way group, so the 1D
+    # ring must cross the 25 GbE NIC while the 2D hybrid keeps its wide
+    # x-ring on the intra-node lanes.
+    p1 = plan(cfg, shape, hp, COMMODITY_25GBE, options=(16,), layout="1d")
+    p2 = plan(cfg, shape, hp, COMMODITY_25GBE, options=(16,), layout="auto")
+    print(f"  25GbE 1d   {p1.summary()}")
+    print(f"  25GbE 2d   {p2.summary()} "
+          f"({p1.predicted_s / p2.predicted_s:.2f}x)")

@@ -201,6 +201,10 @@ class TrainHParams:
     schedule: str = "oases"          # megatron | wang | merak | oases | fused
     fine_remat: bool = True          # §3.2 fine-grained recomputation
     use_planner: bool = False        # per-layer TMP degrees from the ILP
+    # execution layout: auto (follow the mesh/degrees) | 1d (flatten a
+    # multi-axis model group) | 2d.  The planner's SEARCH space is chosen
+    # separately via plan(layout=...).
+    tmp_layout: str = "auto"
     split: int = 2                   # sub-batch split factor (paper: 2)
     seq_parallel: bool = False       # beyond-paper: AG/RS sequence-parallel TMP
     remat: bool = True

@@ -1,24 +1,59 @@
 """Mesh-axis bookkeeping.
 
-Two mesh flavours exist:
+Three mesh flavours exist:
 
 * uniform meshes — ``('data','model')`` / ``('pod','data','model')`` — used for
-  the 40 baseline dry-run cells (TMP degree = |model| everywhere), and
+  the 40 baseline dry-run cells (TMP degree = |model| everywhere),
+* uniform 2D meshes — ``('data','model_x','model_y')`` — the hybrid-partition
+  layout: weight *width* (heads / d_ff) shards over ``model_x`` while the
+  *contraction* dim (d_model) shards over ``model_y`` (à la the 2D method of
+  arXiv:2104.05343).  On commodity servers ``model_x`` maps to the fast
+  intra-node lanes and ``model_y`` to the thin inter-node NIC, and
 * the planner (factored) mesh — ``('data','t1','t2','t3','t4')`` — where the
   16-way model axis is split into binary sub-axes so a per-layer TMP degree
   ``n = 2^k`` is "shard over the first k t-axes, data-parallel over the rest"
-  (paper §4.2: partitioning schemes limited to powers of two).
+  (paper §4.2: partitioning schemes limited to powers of two).  A 2D degree
+  ``(dx, dy)`` on this mesh takes the first ``log2 dx`` t-axes as x and the
+  next ``log2 dy`` as y, so the planner can mix 1D and 2D layers freely.
+
+A per-layer TMP **degree** is either an ``int`` (1D) or an ``(dx, dy)``
+tuple (2D); every axis-algebra entry point accepts both.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 T_AXES: Tuple[str, ...] = ("t1", "t2", "t3", "t4")
+X_AXIS = "model_x"
+Y_AXIS = "model_y"
+
+Degree = Union[int, Tuple[int, int], None]
+
+
+def deg_total(degree: Degree) -> Optional[int]:
+    """Total TMP group size of a degree (None passes through)."""
+    if isinstance(degree, (tuple, list)):
+        return int(degree[0]) * int(degree[1])
+    return degree
+
+
+def deg_xy(degree: Degree) -> Tuple[Optional[int], int]:
+    """(dx, dy) view of a degree; an int degree is (n, 1)."""
+    if isinstance(degree, (tuple, list)):
+        return int(degree[0]), int(degree[1])
+    return degree, 1
+
+
+def _log2_exact(n: int, what: str) -> int:
+    k = int(math.log2(n)) if n > 0 else -1
+    if n <= 0 or 2 ** k != n:
+        raise ValueError(f"{what} must be a power of two, got {n}")
+    return k
 
 
 @dataclass(frozen=True)
@@ -39,11 +74,24 @@ class MeshInfo:
 
     @property
     def factored(self) -> bool:
-        return self.model_axes and self.model_axes[0] != "model"
+        return bool(self.model_axes) and self.model_axes[0] in T_AXES
+
+    @property
+    def twod(self) -> bool:
+        """Mesh carries an explicit 2D model layout (a ``model_y`` axis)."""
+        return Y_AXIS in self.model_axes
 
     # ---- per-degree axis algebra (planner / factored mesh only) ----
-    def tp_axes(self, degree: Optional[int] = None) -> Tuple[str, ...]:
-        """Model axes carrying TMP sharding for a layer of given degree."""
+    def tp_axes(self, degree: Degree = None) -> Tuple[str, ...]:
+        """Model axes carrying TMP sharding for a layer of given degree.
+
+        A 2D ``(dx, dy)`` degree returns the x- and y-axes concatenated —
+        the combined group used for vocab sharding, batch-axis algebra and
+        anything else that is layout-agnostic.
+        """
+        if isinstance(degree, (tuple, list)):
+            ax, ay = self.xy_axes(degree)
+            return ax + ay
         if degree is None or degree == self.tp:
             return self.model_axes
         if not self.factored:
@@ -51,17 +99,55 @@ class MeshInfo:
                 f"degree {degree} != mesh tp {self.tp} requires the factored mesh")
         if degree == 1:
             return ()
-        k = int(math.log2(degree))
-        if 2 ** k != degree or degree > self.tp:
+        k = _log2_exact(degree, "TMP degree")
+        if degree > self.tp:
             raise ValueError(f"TMP degree must be a power of two <= {self.tp}")
         return self.model_axes[:k]
 
-    def extra_dp_axes(self, degree: Optional[int] = None) -> Tuple[str, ...]:
+    def xy_axes(self, degree: Degree = None
+                ) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+        """Split a layer's model axes into ``(x_axes, y_axes)``.
+
+        x carries the width (head / d_ff) sharding, y the contraction-dim
+        (d_model) sharding of the 2D hybrid layout.  Int degrees (and plain
+        1D meshes) put everything in x; a mesh with an explicit ``model_y``
+        axis splits there; tuple degrees on the factored mesh take binary
+        sub-axis prefixes.
+        """
+        if isinstance(degree, (tuple, list)):
+            dx, dy = int(degree[0]), int(degree[1])
+            if dy == 1:
+                return self.tp_axes(dx), ()
+            if self.twod:
+                s = dict(self.mesh.shape)
+                sx = math.prod(s[a] for a in self.model_axes if a != Y_AXIS) \
+                    if len(self.model_axes) > 1 else 1
+                sy = s.get(Y_AXIS, 1)
+                if (dx, dy) != (sx, sy):
+                    raise ValueError(
+                        f"2D degree {(dx, dy)} != mesh layout ({sx}, {sy})")
+                return (tuple(a for a in self.model_axes if a != Y_AXIS),
+                        (Y_AXIS,))
+            if not self.factored:
+                raise ValueError(
+                    "per-layer 2D degrees need the factored or "
+                    "model_x/model_y mesh")
+            kx = _log2_exact(dx, "2D degree dx")
+            ky = _log2_exact(dy, "2D degree dy")
+            if kx + ky > len(self.model_axes):
+                raise ValueError(
+                    f"2D degree {(dx, dy)} exceeds mesh tp {self.tp}")
+            return self.model_axes[:kx], self.model_axes[kx:kx + ky]
+        axes = self.tp_axes(degree)
+        return (tuple(a for a in axes if a != Y_AXIS),
+                tuple(a for a in axes if a == Y_AXIS))
+
+    def extra_dp_axes(self, degree: Degree = None) -> Tuple[str, ...]:
         """Model axes a lower-degree layer reuses as extra data parallelism."""
         used = self.tp_axes(degree)
         return tuple(a for a in self.model_axes if a not in used)
 
-    def all_batch_axes(self, degree: Optional[int] = None) -> Tuple[str, ...]:
+    def all_batch_axes(self, degree: Degree = None) -> Tuple[str, ...]:
         return self.batch_axes + self.extra_dp_axes(degree)
 
     def axes_not_in(self, pspec: P) -> Tuple[str, ...]:
@@ -85,13 +171,15 @@ def mesh_info(mesh: Mesh) -> MeshInfo:
     batch = tuple(a for a in ("pod", "data") if a in names)
     if "model" in names:
         model: Tuple[str, ...] = ("model",)
+    elif X_AXIS in names or Y_AXIS in names:
+        model = tuple(a for a in (X_AXIS, Y_AXIS) if a in names)
     else:
         model = tuple(a for a in T_AXES if a in names)
     return MeshInfo(mesh=mesh, batch_axes=batch, model_axes=model)
 
 
 def batch_pspec(info: MeshInfo, global_batch: int,
-                degree: Optional[int] = None) -> P:
+                degree: Degree = None) -> P:
     """Sharding of the batch dim; falls back gracefully when not divisible
     (e.g. long_500k has global_batch=1 -> replicated batch)."""
     axes = []
@@ -105,7 +193,7 @@ def batch_pspec(info: MeshInfo, global_batch: int,
 
 
 def local_batch(info: MeshInfo, global_batch: int,
-                degree: Optional[int] = None) -> int:
+                degree: Degree = None) -> int:
     spec = batch_pspec(info, global_batch, degree)
     s = dict(info.mesh.shape)
     div = 1

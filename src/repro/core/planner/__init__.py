@@ -1,7 +1,11 @@
-from repro.core.planner.costmodel import (HWConfig, V5E, estimate_iteration,
-                                          layer_blocks, node_costs,
-                                          overlapped_time)
-from repro.core.planner.ilp import PlanResult, plan
+from repro.core.planner.costmodel import (COMMODITY_25GBE, HWConfig,
+                                          NVLINK_BOX, V5E,
+                                          estimate_iteration, layer_blocks,
+                                          node_costs, overlapped_time,
+                                          overlapped_time_2d)
+from repro.core.planner.ilp import PlanResult, expand_options, plan
 
-__all__ = ["HWConfig", "V5E", "estimate_iteration", "layer_blocks",
-           "node_costs", "overlapped_time", "PlanResult", "plan"]
+__all__ = ["COMMODITY_25GBE", "HWConfig", "NVLINK_BOX", "V5E",
+           "estimate_iteration", "layer_blocks", "node_costs",
+           "overlapped_time", "overlapped_time_2d", "PlanResult",
+           "expand_options", "plan"]

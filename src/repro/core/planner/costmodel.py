@@ -40,9 +40,67 @@ class HWConfig:
     bytes_act: int = 2               # bf16 activations
     # calibration scale (CPU measurements use different constants)
     comm_latency: float = 5e-6       # per-collective latency floor
+    # ---- heterogeneous (per-axis) bandwidth terms, AMP-style ----
+    # The commodity-server regime: fast intra-node lanes (NVLink/ICI class)
+    # carry the x-axis rings, the thin inter-node NIC carries the y-axis.
+    # 0 means "fall back to the uniform link_bw" so every existing caller
+    # keeps its single-bandwidth behaviour.
+    link_bw_x: float = 0.0           # intra-node (x-axis ring) bytes/s
+    link_bw_y: float = 0.0           # inter-node (y-axis ring) bytes/s
+    node_size: int = 0               # chips per fast-interconnect node
+
+    @property
+    def bw_x(self) -> float:
+        return self.link_bw_x or self.link_bw
+
+    @property
+    def bw_y(self) -> float:
+        return self.link_bw_y or self.link_bw
+
+    def ring_bw(self, degree: int) -> float:
+        """Effective per-hop bandwidth of a ring over ``degree`` chips: a
+        ring confined to one node runs at the intra-node rate; a ring that
+        spans nodes is bottlenecked by the slowest (inter-node) hop."""
+        ns = self.node_size or self.n_chips
+        return self.bw_x if degree <= ns else self.bw_y
 
 
 V5E = HWConfig()
+
+# Golden-fixture HWConfigs (tests/test_planner_golden.py pins the plans
+# these produce so cost-model edits that silently flip Table-6-style
+# decisions fail loudly).
+#
+# * COMMODITY_25GBE — two 8-GPU boxes joined by 25 GbE (~3.1 GB/s): the
+#   paper's commodity-server regime.  1D rings spanning both boxes crawl at
+#   NIC speed; the 2D hybrid keeps the wide x-ring on PCIe/NVLink-class
+#   intra-node lanes and sends only the thin y-traffic across.
+# * NVLINK_BOX — a single 16-GPU NVLink-class box: uniform fast links, so
+#   the 2D split buys nothing and the planner should stay effectively 1D.
+COMMODITY_25GBE = HWConfig(
+    n_chips=16, node_size=8, peak_flops=125e12, hbm_bw=1008e9,
+    link_bw=3.1e9, link_bw_x=120e9, link_bw_y=3.1e9, hbm_cap=24e9)
+NVLINK_BOX = HWConfig(
+    n_chips=16, node_size=16, peak_flops=125e12, hbm_bw=1008e9,
+    link_bw=250e9, hbm_cap=24e9)
+
+
+def _dxy(degree) -> Tuple[int, int]:
+    """(dx, dy) view of a planner degree; ints are (n, 1)."""
+    if isinstance(degree, (tuple, list)):
+        return int(degree[0]), int(degree[1])
+    return int(degree), 1
+
+
+def _dtot(degree) -> int:
+    dx, dy = _dxy(degree)
+    return dx * dy
+
+
+def _dkey(degree):
+    """Hashable canonical form: int for 1D, tuple for 2D."""
+    dx, dy = _dxy(degree)
+    return dx if dy == 1 else (dx, dy)
 
 
 def overlapped_time(d: float, c: float, ring_steps: int) -> float:
@@ -58,6 +116,19 @@ def overlapped_time(d: float, c: float, ring_steps: int) -> float:
     """
     steps = max(ring_steps, 1)
     return max(d, c) + min(d, c) / steps
+
+
+def overlapped_time_2d(d: float, c_x: float, c_y: float,
+                       ring_steps_x: int) -> float:
+    """Composed fused cost of a 2D node.
+
+    The x-axis ring overlaps the tile matmuls exactly as in 1D
+    (``max(T_comm_x, T_compute)``); the y-axis collectives (entry psums +
+    exit gather) then overlap the x-side pipeline fill, so the node pays
+    ``max(T_comm_x, T_compute) + max(T_comm_y, fill)``.  Degenerates to
+    :func:`overlapped_time` at dy == 1 (c_y == 0)."""
+    fill = min(d, c_x) / max(ring_steps_x, 1)
+    return max(d, c_x) + max(c_y, fill)
 
 
 def _mxu_eff(hw: HWConfig, *dims: int) -> float:
@@ -138,48 +209,85 @@ def layer_blocks(cfg: ArchConfig, shape: ShapeConfig) -> List[List[BlockCost]]:
 @dataclass
 class NodeCosts:
     """Per (block, degree-option): everything Eq. 3/6 needs (seconds/bytes
-    per chip, per sub-batch)."""
+    per chip, per sub-batch).  ``c_f``/``c_b`` are the TOTAL collective
+    seconds of the option; ``c_f_y``/``c_b_y`` hold the y-axis (inter-node)
+    component so 2D-aware consumers can recover the x part as ``c - c_y``
+    (both are 0 for 1D options)."""
     d_f: List[float]
     c_f: List[float]
     d_b: List[float]
     c_b: List[float]
     mem_s: List[float]
     mem_t: List[float]
+    c_f_y: List[float] = None
+    c_b_y: List[float] = None
+
+    def __post_init__(self):
+        if self.c_f_y is None:
+            self.c_f_y = [0.0] * len(self.c_f)
+        if self.c_b_y is None:
+            self.c_b_y = [0.0] * len(self.c_b)
 
 
 def node_costs(cfg: ArchConfig, blk: BlockCost, shape: ShapeConfig,
                hp: TrainHParams, hw: HWConfig,
-               options: Sequence[int]) -> NodeCosts:
+               options: Sequence) -> NodeCosts:
+    """Options may mix int (1D) and ``(dx, dy)`` (2D) degrees.
+
+    1D comm: the block-output AllReduce over the full group, charged at the
+    heterogeneity-aware ring bandwidth (a ring spanning nodes crawls at the
+    inter-node hop — AMP's observation).  2D comm decomposes per axis: the
+    x-ring AllReduces the 1/dy-sized output chunk intra-node; the y-axis
+    pays the entry partial-sums plus the exit gather, modelled as a full-K
+    AllReduce over dy across the inter-node links.
+    """
     split = max(hp.split, 1)
     out = NodeCosts([], [], [], [], [], [])
     tokens = shape.global_batch * shape.seq_len
-    for n in options:
+    for opt in options:
+        dx, dy = _dxy(opt)
+        n = dx * dy
         dp = max(hw.n_chips // n, 1)
         t_chip = tokens / dp                    # tokens on this chip / iter
         # gradient accumulation bounds live activations (auto ~8k tok/chip)
         micro = hp.microbatch if hp.microbatch > 0 else \
             max(1, int(math.ceil(t_chip / 8192.0)))
         t_live = t_chip / micro
-        width = max(cfg.d_ff, cfg.num_heads * cfg.resolved_head_dim) // n
+        # width shards over dx only in 2D (the §5.6 arithmetic-density
+        # caveat bites later — one of the 2D layout's selling points)
+        width = max(cfg.d_ff, cfg.num_heads * cfg.resolved_head_dim) // dx
         eff = _mxu_eff(hw, width, int(t_live // split))
         d_f = blk.flops_fwd / hw.n_chips / (hw.peak_flops * eff) / split / micro
         # AllReduce of the block output: per-chip payload K(n) (per micro,
         # per sub-batch; the totals below are multiplied back by micro)
         k_bytes = (t_live / split) * (blk.comm_bytes_k / max(tokens, 1)) \
             * hw.bytes_act if blk.comm_bytes_k else 0.0
-        ring = 2.0 * (n - 1) / n if n > 1 else 0.0
-        c_f = (k_bytes * ring / hw.link_bw + hw.comm_latency) \
-            if blk.n_collectives else 0.0
+        ring_x = 2.0 * (dx - 1) / dx if dx > 1 else 0.0
+        ring_y = 2.0 * (dy - 1) / dy if dy > 1 else 0.0
+        # y rings hop between nodes whenever the whole group spills out of
+        # one node; the x ring is judged on its own extent
+        bw_y_eff = hw.ring_bw(n) if dy > 1 else hw.bw_y
+        c_x = c_y = 0.0
+        if blk.n_collectives:
+            if dx > 1:
+                c_x = (k_bytes / dy) * ring_x / hw.ring_bw(dx) \
+                    + hw.comm_latency
+            if dy > 1:
+                c_y = k_bytes * ring_y / bw_y_eff + hw.comm_latency
+        c_f = c_x + c_y
         # NOTE: d/c are per (micro x sub-batch) slot; Eq. 3 sums over slots.
         # Scale both by micro so node costs stay per-iteration.
         d_f *= micro
         c_f *= micro
+        c_y *= micro
         # backward: 2x fwd compute (+1x recompute when remat)
         recompute = 1.0 if hp.remat else 0.0
         d_b = d_f * (2.0 + recompute)
         c_b = c_f  # grad-side AllReduce
+        c_b_y = c_y
         if hp.remat and not hp.fine_remat:
             c_b += c_f  # coarse remat re-executes the forward collective
+            c_b_y += c_y
         # memory per chip (Eq. 6): bf16 weights /n, f32 master+m+v ZeRO'd /dp
         zdp = dp if hp.zero1 else 1
         mem_s = blk.params * (2.0 / n + 12.0 / (n * zdp))
@@ -193,13 +301,20 @@ def node_costs(cfg: ArchConfig, blk: BlockCost, shape: ShapeConfig,
         out.c_b.append(c_b)
         out.mem_s.append(mem_s)
         out.mem_t.append(mem_t)
+        out.c_f_y.append(c_y)
+        out.c_b_y.append(c_b_y)
     return out
 
 
 def edge_cost(cfg: ArchConfig, shape: ShapeConfig, hw: HWConfig,
-              n_from: int, n_to: int, node_from: NodeCosts, i_from: int,
+              n_from, n_to, node_from: NodeCosts, i_from: int,
               i_to: int) -> float:
-    """Eq. 4: resharding AllGather + destroyed overlap."""
+    """Eq. 4: resharding AllGather + destroyed overlap.
+
+    Degrees may be 2D tuples; the batch resharding depends only on the
+    *total* degree (extra-dp axes), so an x/y re-split at equal total is
+    free here (weights are already laid out per layer)."""
+    n_from, n_to = _dtot(n_from), _dtot(n_to)
     if n_from == n_to:
         return 0.0
     tokens = shape.global_batch * shape.seq_len
@@ -223,22 +338,27 @@ def edge_cost(cfg: ArchConfig, shape: ShapeConfig, hw: HWConfig,
 
 
 def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
-                       degrees: Sequence[int], hw: HWConfig = V5E,
-                       options: Sequence[int] = (2, 4, 8, 16)) -> Dict:
-    """Evaluate f(s) (Eq. 3–5) for a concrete per-layer strategy.  Also the
-    cost model used by benchmarks/fig6 (Spearman vs measured)."""
+                       degrees: Sequence, hw: HWConfig = V5E,
+                       options: Sequence = (2, 4, 8, 16)) -> Dict:
+    """Evaluate f(s) (Eq. 3–5) for a concrete per-layer strategy (entries
+    int or ``(dx, dy)``).  Also the cost model used by benchmarks/fig6
+    (Spearman vs measured)."""
     blocks = layer_blocks(cfg, shape)
-    opt_index = {n: i for i, n in enumerate(options)}
+    options = list(options)
+    for d in degrees:                      # tolerate degrees ∉ options
+        if _dkey(d) not in {_dkey(o) for o in options}:
+            options.append(_dkey(d))
+    opt_index = {_dkey(o): i for i, o in enumerate(options)}
     seq = []   # (NodeCosts, option_idx, degree)
     for layer, degree in zip(blocks, degrees):
         for blk in layer:
             nc = node_costs(cfg, blk, shape, hp, hw, options)
-            seq.append((nc, opt_index[degree], degree))
+            seq.append((nc, opt_index[_dkey(degree)], degree))
 
     split = max(hp.split, 1)
     overlap = hp.schedule in ("oases", "merak")
 
-    def pass_time(dkey, ckey):
+    def pass_time(dkey, ckey, cykey):
         total = 0.0
         prev_c = 0.0
         for nc, j, n in seq:
@@ -251,8 +371,13 @@ def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                 prev_c = c
             elif hp.schedule == "fused":
                 # kernel-level collective matmul: comm is hidden under the
-                # tile matmuls of the same block (ring of n-1 transfers)
-                total += overlapped_time(split * d, split * c, n - 1)
+                # tile matmuls of the same block.  2D nodes compose per
+                # axis: max(c_x, d) + max(c_y, fill) — the y collectives
+                # hide under the x-ring's pipeline fill when thin enough.
+                dx, dy = _dxy(n)
+                c_y = getattr(nc, cykey)[j]
+                total += overlapped_time_2d(split * d, split * (c - c_y),
+                                            split * c_y, dx - 1)
                 prev_c = 0.0
             elif hp.schedule == "wang":
                 # intra-op decomposition hides all but one chunk
@@ -263,13 +388,13 @@ def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
         total += prev_c   # cool-down: last collective exposed
         return total
 
-    t_f = pass_time("d_f", "c_f")
-    t_b = pass_time("d_b", "c_b")
+    t_f = pass_time("d_f", "c_f", "c_f_y")
+    t_b = pass_time("d_b", "c_b", "c_b_y")
     # edges
     t_e = 0.0
     for a in range(len(seq) - 1):
         n1, n2 = seq[a][2], seq[a + 1][2]
-        if n1 != n2:
+        if _dkey(n1) != _dkey(n2):
             t_e += edge_cost(cfg, shape, hw, n1, n2, seq[a][0], seq[a][1],
                              seq[a + 1][1]) * 2  # fwd + bwd reshard
     # memory (Eq. 6)
@@ -277,10 +402,11 @@ def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     for nc, j, n in seq:
         mem += nc.mem_s[j] + nc.mem_t[j]
     vp = cfg.padded_vocab()
-    head = vp * cfg.d_model * (2.0 / max(degrees[-1], 1)) * (1 if cfg.tie_embeddings else 2)
+    last = max(_dtot(degrees[-1]), 1)
+    head = vp * cfg.d_model * (2.0 / last) * (1 if cfg.tie_embeddings else 2)
     mem += head + head * 6.0    # embed/head + optimizer states
     m_r = 4.0 * shape.global_batch * shape.seq_len * cfg.d_model \
-        * hw.bytes_act / (hw.n_chips / max(degrees[-1], 1))
+        * hw.bytes_act / (hw.n_chips / last)
     mem += m_r
     total = t_f + t_b + t_e
     return {"iter_s": total, "fwd_s": t_f, "bwd_s": t_b, "edge_s": t_e,

@@ -7,6 +7,13 @@ y_{jk} >= s_vj + s_uk - 1.  Eq. 6 memory is a single linear constraint.
 
 Same-layer blocks share one degree (the paper plans per layer, Table 6), so
 s is per-LAYER and the per-block costs are summed within a layer.
+
+Planner v2: the option space extends beyond the paper's 1D baseline to 2D
+hybrid partitions ``(dx, dy)`` — width over dx intra-node lanes, the
+contraction dim over dy inter-node hops (arXiv:2104.05343-style), costed
+with the per-axis bandwidths of :class:`costmodel.HWConfig`.  ``layout``
+picks the search space: ``'1d'`` (ints only, the paper), ``'2d'`` (every
+factorization including the 1D-equivalent ``(n, 1)``), ``'auto'`` (union).
 """
 from __future__ import annotations
 
@@ -22,21 +29,27 @@ from repro.configs.base import ArchConfig, ShapeConfig, TrainHParams
 from repro.core.planner import costmodel as cm
 
 
+def _fmt_degree(d) -> str:
+    dx, dy = cm._dxy(d)
+    return f"{dx}x{dy}" if dy > 1 else str(dx)
+
+
 @dataclass
 class PlanResult:
-    degrees: List[int]
+    degrees: List[object]                  # int (1D) or (dx, dy) (2D)
     predicted_s: float
     solve_ms: float
     status: str
-    groups: List[Tuple[int, int]]          # (degree, count) runs
+    groups: List[Tuple[object, int]]       # (degree, count) runs
 
     def summary(self) -> str:
-        runs = " + ".join(f"[{d}] * {n}" for d, n in self.groups)
+        runs = " + ".join(f"[{_fmt_degree(d)}] * {n}"
+                          for d, n in self.groups)
         return (f"[{runs}] predicted {self.predicted_s*1e3:.1f} ms/iter "
                 f"(ILP {self.solve_ms:.1f} ms, {self.status})")
 
 
-def _runs(degrees: Sequence[int]) -> List[Tuple[int, int]]:
+def _runs(degrees: Sequence) -> List[Tuple[object, int]]:
     out = []
     for d in degrees:
         if out and out[-1][0] == d:
@@ -46,12 +59,45 @@ def _runs(degrees: Sequence[int]) -> List[Tuple[int, int]]:
     return out
 
 
+def expand_options(cfg: ArchConfig, hw: cm.HWConfig,
+                   options: Sequence[int], layout: str) -> List:
+    """The per-layer degree option space for a layout.
+
+    2D factorizations keep dx within one node (the x-ring must ride the
+    fast lanes) and require the contraction dim divisible by dy (the
+    per-axis decomposition slices d_model); ``(n, 1)`` degenerates stay so
+    a forced-2D search is never less expressive than 1D.
+    """
+    base = [int(n) for n in options]
+    if layout == "1d":
+        return base
+    ns = hw.node_size or hw.n_chips
+    out: List = [] if layout == "2d" else list(base)
+    for n in base:
+        dy = 2
+        while dy <= n:
+            dx = n // dy
+            if (dx * dy == n and dx <= ns
+                    and cfg.d_model % dy == 0):
+                out.append((dx, dy))
+            dy *= 2
+        if layout == "2d":
+            out.append((n, 1))
+    return out
+
+
 def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
          hw: cm.HWConfig = cm.V5E,
          options: Sequence[int] = (2, 4, 8, 16),
          mem_cap: Optional[float] = None,
-         time_limit: float = 20.0) -> PlanResult:
+         time_limit: float = 20.0,
+         layout: str = "1d") -> PlanResult:
+    """``layout`` is the explicit search-space knob (it deliberately does
+    NOT read ``hp.tmp_layout``, which governs the *execution* layout and
+    defaults to mesh-following 'auto'): '1d' preserves the paper's search
+    space; pass '2d' or 'auto' to enable hybrid partitions."""
     t0 = time.time()
+    options = expand_options(cfg, hw, options, layout)
     L = cfg.num_layers
     P = len(options)
     mem_cap = mem_cap if mem_cap is not None else hw.hbm_cap
@@ -80,10 +126,15 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
             mem[i] += np.array(nc.mem_s) + np.array(nc.mem_t)
             if fused:
                 for j in range(P):
-                    fused_f[i, j] += cm.overlapped_time(
-                        split * nc.d_f[j], split * nc.c_f[j], options[j] - 1)
-                    fused_b[i, j] += cm.overlapped_time(
-                        split * nc.d_b[j], split * nc.c_b[j], options[j] - 1)
+                    dx_j, _ = cm._dxy(options[j])
+                    fused_f[i, j] += cm.overlapped_time_2d(
+                        split * nc.d_f[j],
+                        split * (nc.c_f[j] - nc.c_f_y[j]),
+                        split * nc.c_f_y[j], dx_j - 1)
+                    fused_b[i, j] += cm.overlapped_time_2d(
+                        split * nc.d_b[j],
+                        split * (nc.c_b[j] - nc.c_b_y[j]),
+                        split * nc.c_b_y[j], dx_j - 1)
 
     # Eq. 3 per layer, both passes:
     #   overlap: cost >= split*d   and cost >= (split-1)*d + c   (comm hidden
@@ -107,6 +158,23 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
 
     # objective: sum of u variables + edge costs via y
     cost[nS:nS + nU] = 1.0
+
+    # Deterministic tie-breaks (the Eq. 3 max{} linearization leaves every
+    # compute-bound degree at the same objective, and HiGHS fragments such
+    # ties into arbitrary per-layer mixes):
+    # * a 1%-of-comm nudge aligns the ILP's preference with
+    #   estimate_iteration's sequential model (lower exposed comm wins);
+    # * a ~3e-4-of-compute epsilon prefers 1D, then the thinnest y split.
+    # Both sit well below any real 2D-vs-1D gap (tens of percent in the
+    # commodity regime) but above HiGHS's ~1e-7 tolerances, so ties resolve
+    # the same way on every solve.
+    scale = float(np.mean(d_f) + np.mean(c_f)) or 1.0
+    for j in range(P):
+        _, dyj = cm._dxy(options[j])
+        for i in range(L):
+            cost[i * P + j] += 1e-2 * (c_f[i, j] + c_b[i, j])
+            if dyj > 1:
+                cost[i * P + j] += 3e-4 * scale * (1.0 + np.log2(dyj))
 
     rows = []
     lo = []
@@ -171,7 +239,8 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
 
     # Eq. 6 memory: sum_i s_i . mem_i + fixed <= cap
     vp = cfg.padded_vocab()
-    fixed = vp * cfg.d_model * 2.0 / max(options) * (2 if not cfg.tie_embeddings else 1)
+    max_total = max(cm._dtot(o) for o in options)
+    fixed = vp * cfg.d_model * 2.0 / max_total * (2 if not cfg.tie_embeddings else 1)
     fixed *= 7.0  # + f32 optimizer states
     add({i * P + j: mem[i, j] for i in range(L) for j in range(P)},
         -np.inf, mem_cap - fixed)
@@ -181,21 +250,26 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
         for c_idx, v in coefs.items():
             A[r, c_idx] = v
     con = LinearConstraint(A.tocsc(), np.array(lo), np.array(hi))
+    # mip_rel_gap must sit below the tie-break epsilons or HiGHS stops at
+    # an incumbent that still fragments degenerate ties
     res = milp(c=cost, constraints=con, integrality=integrality,
                bounds=(lb, ub),
-               options={"time_limit": time_limit, "presolve": True})
+               options={"time_limit": time_limit, "presolve": True,
+                        "mip_rel_gap": 1e-9})
     solve_ms = (time.time() - t0) * 1e3
 
     if res.x is None:
         # infeasible (e.g. memory cap too tight at low degrees): fall back
-        # to uniform max degree
-        degrees = [max(options)] * L
+        # to uniform max total degree (preferring a 1D int on ties)
+        fb = max(options,
+                 key=lambda o: (cm._dtot(o), not isinstance(o, tuple)))
+        degrees = [fb] * L
         est = cm.estimate_iteration(cfg, shape, hp, degrees, hw, options)
         return PlanResult(degrees, est["iter_s"], solve_ms,
                           f"fallback:{res.status}", _runs(degrees))
 
     s = res.x[:nS].reshape(L, P)
-    degrees = [int(options[int(np.argmax(s[i]))]) for i in range(L)]
+    degrees = [options[int(np.argmax(s[i]))] for i in range(L)]
     est = cm.estimate_iteration(cfg, shape, hp, degrees, hw, options)
     return PlanResult(degrees, est["iter_s"], solve_ms,
                       str(res.status), _runs(degrees))

@@ -42,23 +42,64 @@ class TmpCtx:
     blocks are sharded along the sequence dim; the block entry all-gathers
     and the block exit reduce-scatters (same link bytes as the AllReduce,
     but rematerialization residuals shrink by tp — see EXPERIMENTS §Perf).
+
+    ``layout`` selects the partition dimensionality.  ``"auto"`` follows the
+    mesh/degree (a ``model_y`` axis or tuple degree activates the 2D hybrid
+    layout); ``"1d"`` forces the classic layout, treating a multi-axis model
+    group as one flattened ring group.  In 2D, weight *width* shards over
+    the x-axes and the *contraction* dim (d_model) over the y-axes; the
+    row/gather matmuls decompose into per-axis collectives (fused: per-axis
+    rings) — see DESIGN.md §2D hybrid partition.
     """
     info: MeshInfo
-    degree: Optional[int] = None      # None -> full model axis
+    degree: Optional[object] = None   # None | int | (dx, dy)
     schedule: str = "oases"
     wang_chunks: int = 4
     use_pallas: bool = False
     seq_parallel: bool = False
+    layout: str = "auto"              # auto | 1d | 2d
+
+    def _axes_xy(self) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+        if self.layout == "1d":
+            from repro.core.axes import deg_total
+            return self.info.tp_axes(deg_total(self.degree)), ()
+        return self.info.xy_axes(self.degree)
+
+    @property
+    def x_axes(self) -> Tuple[str, ...]:
+        return self._axes_xy()[0]
+
+    @property
+    def y_axes(self) -> Tuple[str, ...]:
+        return self._axes_xy()[1]
+
+    @property
+    def is_2d(self) -> bool:
+        return bool(self.y_axes)
 
     @property
     def tp_axes(self) -> Tuple[str, ...]:
-        return self.info.tp_axes(self.degree)
+        ax, ay = self._axes_xy()
+        return ax + ay
+
+    def _size(self, axes: Tuple[str, ...]) -> int:
+        import math
+        s = dict(self.info.mesh.shape)
+        return math.prod(s[a] for a in axes) if axes else 1
 
     @property
     def tp(self) -> int:
-        import math
-        s = dict(self.info.mesh.shape)
-        return math.prod(s[a] for a in self.tp_axes) if self.tp_axes else 1
+        """The *width*-sharding degree (heads / d_ff divide by this) — dx in
+        2D, the whole group in 1D."""
+        return self._size(self.x_axes)
+
+    @property
+    def tp_y(self) -> int:
+        return self._size(self.y_axes)
+
+    @property
+    def tp_total(self) -> int:
+        return self._size(self.tp_axes)
 
     def reduce(self, x, seq_dim: int = 1):
         if self.seq_parallel and self.tp_axes:
@@ -80,7 +121,44 @@ class TmpCtx:
             return tmpc.batch_split(x, self.tp_axes, seq_dim)
         return x
 
-    def row_matmul(self, x, w, seq_dim: int = 1):
+    def proj(self, x, w):
+        """Column-parallel entry projection ``x @ w``.
+
+        1D: a plain local dot (w's contraction dim is replicated).  2D: w's
+        contraction dim is y-sharded — slice x's matching chunk locally
+        (free: x is replicated over y) and AllReduce the partial products
+        over the y-axes.  In fused mode the psum becomes a collective-matmul
+        ring so the y-transfers hide under the tile matmuls.  Detection is
+        shape-driven so per-weight divisibility fallbacks (replicated specs)
+        compose: a full-row weight always takes the plain-dot path.
+        """
+        if self.y_axes and w.shape[0] != x.shape[-1]:
+            from jax.ad_checkpoint import checkpoint_name
+            xy = tmpc.batch_split(x, self.y_axes, x.ndim - 1)
+            if self.schedule == "fused" and xy.ndim >= 2:
+                from repro.kernels import collective_matmul as cm
+                y = cm.fused_matmul_allreduce(
+                    xy, w, self.y_axes, scatter_dim=min(1, xy.ndim - 2),
+                    use_pallas=self.use_pallas)
+                return checkpoint_name(y, tmpc.COLLECTIVE_NAME)
+            return tmpc.tmp_reduce(jnp.dot(xy, w), self.y_axes)
+        return jnp.dot(x, w)
+
+    def contract_reduce(self, t, partial: bool = True):
+        """Finish a y-contracted product computed outside :meth:`proj`
+        (e.g. the sliced-kv einsum in blocks._qkv): AllReduce over y."""
+        if partial and self.y_axes:
+            return tmpc.tmp_reduce(t, self.y_axes)
+        return t
+
+    def contract_slice(self, x, w_rows: int):
+        """x's local chunk of a y-sharded contraction dim (``w_rows`` = the
+        weight's leading dim); identity when the weight has full rows."""
+        if self.y_axes and w_rows != x.shape[-1]:
+            return tmpc.batch_split(x, self.y_axes, x.ndim - 1), True
+        return x, False
+
+    def row_matmul(self, x, w, seq_dim: int = 1, full_out: Optional[int] = None):
         """x [..., K_local] @ w [K_local, D] followed by AllReduce (or
         reduce-scatter in SP mode).
 
@@ -92,7 +170,28 @@ class TmpCtx:
         multi-axis groups; the SP reduce-scatter flavour requires the seq
         dim divisible by the group (guaranteed by the SP gate in
         models/lm.py, which only enables SP when seq % tp == 0).
+
+        2D layout: the collective decomposes per axis — AllReduce the
+        partial sums over the x-axes (K is x-sharded), then all-gather the
+        y-sharded output columns back to ``full_out`` when the exit weight
+        shards them.  Both collective outputs are checkpoint-named so the
+        fine-remat recompute stays collective-free (§3.2).
         """
+        if self.y_axes:
+            from jax.ad_checkpoint import checkpoint_name
+            if self.schedule == "fused" and self.x_axes and x.ndim >= 2:
+                from repro.kernels import collective_matmul as cm
+                y = cm.fused_matmul_allreduce(
+                    x, w, self.x_axes, scatter_dim=min(seq_dim, x.ndim - 2),
+                    use_pallas=self.use_pallas)
+                y = checkpoint_name(y, tmpc.COLLECTIVE_NAME)
+            else:
+                y = tmpc.tmp_reduce(jnp.dot(x, w), self.x_axes)
+            if full_out is not None and w.shape[-1] != full_out:
+                y = checkpoint_name(
+                    tmpc.sp_all_gather(y, self.y_axes, y.ndim - 1),
+                    tmpc.COLLECTIVE_NAME)
+            return y
         if self.schedule == "fused" and self.tp_axes and x.ndim >= 2:
             from jax.ad_checkpoint import checkpoint_name
             from repro.kernels import collective_matmul as cm
@@ -119,9 +218,12 @@ class TmpCtx:
 
         In fused+SP mode one all-gather ring feeds all the matmuls,
         consuming shards as they arrive; otherwise gather once (SP) or
-        not at all and apply plain dots.
+        not at all and apply plain dots.  2D: each weight's y-sharded
+        contraction runs through :meth:`proj` (slice + per-axis ring).
         """
         ws = tuple(ws)
+        if self.y_axes:
+            return tuple(self.proj(x, w) for w in ws)
         if self.schedule == "fused" and self.seq_parallel and self.tp_axes:
             from repro.kernels import collective_matmul as cm
             return cm.fused_allgather_matmul(x, ws, self.tp_axes, seq_dim,

@@ -39,11 +39,23 @@ def model_flops_per_chip(cfg, shape, n_chips: int) -> float:
     return total / n_chips
 
 
+def parse_degrees(spec: str):
+    """'8,4x2,16' -> [8, (4, 2), 16]: per-layer TMP degrees, 'AxB' = 2D."""
+    out = []
+    for tok in spec.split(","):
+        if "x" in tok:
+            dx, dy = tok.split("x")
+            out.append((int(dx), int(dy)))
+        else:
+            out.append(int(tok))
+    return out
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              schedule: str = "oases", fine_remat: bool = True,
              planner_degrees=None, seq_parallel: bool = False,
              split: int = 2, microbatch: int = 0,
-             mesh_shape: str = "") -> dict:
+             mesh_shape: str = "", tmp_layout: str = "auto") -> dict:
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     rec = {
@@ -51,6 +63,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         "mesh": "multi" if multi_pod else "single",
         "schedule": schedule, "fine_remat": fine_remat,
         "planner": planner_degrees is not None,
+        "tmp_layout": tmp_layout,
     }
     if shape.name not in {s.name for s in applicable_shapes(cfg)}:
         rec["status"] = "SKIP"
@@ -61,11 +74,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     if mesh_shape:
         # hillclimb lever: reshape the 256 chips (e.g. "32x8" = more DP,
-        # less TMP). The baseline table always uses the 16x16 mesh.
-        from repro.core import compat
-        d, m = (int(x) for x in mesh_shape.split("x"))
-        mesh = compat.make_mesh((d, m), ("data", "model"),
-                                axis_types=compat.auto_axis_types(2))
+        # less TMP; "16x8x2" = a 2D hybrid model grid). The baseline table
+        # always uses the 16x16 mesh.
+        from repro.launch.mesh import parse_mesh_shape
+        mesh = parse_mesh_shape(mesh_shape)
         rec["mesh_shape"] = mesh_shape
     else:
         mesh = (make_factored_mesh(multi_pod=multi_pod) if planner_degrees
@@ -73,7 +85,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     info = mesh_info(mesh)
     hp = TrainHParams(schedule=schedule, fine_remat=fine_remat,
                       seq_parallel=seq_parallel, split=split,
-                      microbatch=microbatch)
+                      microbatch=microbatch, tmp_layout=tmp_layout)
     rec["microbatch"] = microbatch
     inputs = input_specs(cfg, shape, mesh, hp, degrees=planner_degrees)
     fn = step_fn_for(cfg, shape, mesh, hp, degrees=planner_degrees)
@@ -88,6 +100,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         mem = compiled.memory_analysis()
         print(mem)                              # proves it fits
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # jax 0.4.x returns [dict]
+            ca = ca[0] if ca else {}
         print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
         hc = hlo_cost.analyze(compiled.as_text(), default_group=info.tp)
 
@@ -187,7 +201,11 @@ def main():
     ap.add_argument("--split", type=int, default=2)
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--degrees", default="",
-                    help="comma-separated per-layer TMP degrees (planner mode)")
+                    help="comma-separated per-layer TMP degrees (planner "
+                         "mode); 'AxB' entries are 2D, e.g. 8,4x2,16")
+    ap.add_argument("--tmp-layout", default="auto",
+                    choices=["auto", "1d", "2d"],
+                    help="partition layout (1d classic / 2d hybrid / auto)")
     ap.add_argument("--microbatch", type=int, default=0,
                     help="force gradient-accumulation count (0 = auto)")
     ap.add_argument("--mesh-shape", default="",
@@ -203,8 +221,7 @@ def main():
         _sweep(args)
         return
 
-    degrees = ([int(x) for x in args.degrees.split(",")] if args.degrees
-               else None)
+    degrees = parse_degrees(args.degrees) if args.degrees else None
     meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
     for m in meshes:
         try:
@@ -213,7 +230,8 @@ def main():
                            planner_degrees=degrees, split=args.split,
                            seq_parallel=args.seq_parallel,
                            microbatch=args.microbatch,
-                           mesh_shape=args.mesh_shape)
+                           mesh_shape=args.mesh_shape,
+                           tmp_layout=args.tmp_layout)
         except Exception:
             rec = {"arch": args.arch, "shape": args.shape, "mesh": m,
                    "schedule": args.schedule, "status": "ERROR",

@@ -26,11 +26,30 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_factored_mesh(*, multi_pod: bool = False):
     """Planner-mode mesh: the 16-way model axis factored into binary
-    sub-axes so per-layer TMP degrees in {1,2,4,8,16} are expressible."""
+    sub-axes so per-layer TMP degrees in {1,2,4,8,16} — 1D ints or 2D
+    ``(dx, dy)`` tuples (x = leading sub-axes, y = the next) — are
+    expressible."""
     shape = (2, 16, 2, 2, 2, 2) if multi_pod else (16, 2, 2, 2, 2)
     axes = (("pod", "data", "t1", "t2", "t3", "t4") if multi_pod
             else ("data", "t1", "t2", "t3", "t4"))
     return _mk(shape, axes)
+
+
+def make_2d_mesh(data: int, dx: int, dy: int):
+    """Uniform 2D hybrid-partition mesh ``('data','model_x','model_y')``:
+    weight width shards over the dx-way intra-node axis, the contraction
+    dim over the dy-way inter-node axis (commodity-server placement)."""
+    return _mk((data, dx, dy), ("data", "model_x", "model_y"))
+
+
+def parse_mesh_shape(spec: str):
+    """'dxm' -> 1D ('data','model'); 'dxm1xm2' -> 2D mesh."""
+    parts = [int(x) for x in spec.split("x")]
+    if len(parts) == 2:
+        return _mk(tuple(parts), ("data", "model"))
+    if len(parts) == 3:
+        return make_2d_mesh(*parts)
+    raise ValueError(f"mesh spec must be dxm or dxmxm2, got {spec!r}")
 
 
 def make_smoke_mesh(devices=None):

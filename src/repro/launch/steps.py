@@ -10,10 +10,15 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig, TrainHParams
-from repro.core.axes import batch_pspec, mesh_info
+from repro.core.axes import batch_pspec, deg_total, mesh_info
 from repro.models import lm
 from repro.models import params as prm
 from repro.optim import adamw
+
+
+def _min_degree(degrees) -> int:
+    """Smallest *total* degree in a plan (entries int or (dx, dy))."""
+    return min(deg_total(d) for d in degrees)
 
 
 def auto_microbatch(global_batch: int, dp: int, seq_len: int,
@@ -57,7 +62,7 @@ def build_train_step(cfg: ArchConfig, mesh, hp: TrainHParams, *,
     # planner mode: low-degree layers reuse model sub-axes as extra data
     # parallelism, so the effective dp (and the per-chip batch the
     # microbatcher sees) is set by the SMALLEST degree in the plan
-    dp_eff = info.dp * (info.tp // min(degrees)) if degrees else info.dp
+    dp_eff = info.dp * (info.tp // _min_degree(degrees)) if degrees else info.dp
     hp = resolve_hp(hp, "train", global_batch, dp_eff, seq_len=seq_len,
                     d_model=cfg.d_model, num_layers=cfg.num_layers,
                     tp=info.tp)
@@ -129,11 +134,12 @@ def train_abstract_inputs(cfg: ArchConfig, mesh, hp: TrainHParams, *,
     With gradient accumulation the batch arrives pre-shaped
     [n_micro, B/n, ...], batch dim sharded on axis 1."""
     info = mesh_info(mesh)
-    dp_eff = info.dp * (info.tp // min(degrees)) if degrees else info.dp
+    dp_eff = info.dp * (info.tp // _min_degree(degrees)) if degrees else info.dp
     hp = resolve_hp(hp, "train", global_batch, dp_eff, seq_len=seq_len,
                     d_model=cfg.d_model, num_layers=cfg.num_layers,
                     tp=info.tp)
-    specs = prm.model_specs(cfg, info, degrees=degrees, max_pos=seq_len)
+    specs = prm.model_specs(cfg, info, degrees=degrees, max_pos=seq_len,
+                            layout=hp.tmp_layout)
     params = prm.abstract_params(specs, mesh)
     opt_state = adamw.abstract_opt_state(specs, info, mesh, zero1=hp.zero1)
     n = hp.microbatch if hp.microbatch > 1 else 1
@@ -164,7 +170,8 @@ def build_prefill_step(cfg, mesh, hp, *, global_batch, seq_len):
 
 def prefill_abstract_inputs(cfg, mesh, hp, *, global_batch, seq_len):
     info = mesh_info(mesh)
-    specs = prm.model_specs(cfg, info, max_pos=seq_len + 1)
+    specs = prm.model_specs(cfg, info, max_pos=seq_len + 1,
+                            layout=hp.tmp_layout)
     params = prm.abstract_params(specs, mesh)
     bs = NamedSharding(mesh, batch_pspec(info, global_batch))
     batch = {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len),
@@ -184,11 +191,12 @@ def build_serve_step(cfg, mesh, hp, *, global_batch, seq_len):
 
 def serve_abstract_inputs(cfg, mesh, hp, *, global_batch, seq_len):
     info = mesh_info(mesh)
-    specs = prm.model_specs(cfg, info, max_pos=seq_len + 8)
+    specs = prm.model_specs(cfg, info, max_pos=seq_len + 8,
+                            layout=hp.tmp_layout)
     params = prm.abstract_params(specs, mesh)
     bspec = batch_pspec(info, global_batch)
     st_specs = prm.cache_specs(cfg, info, batch=global_batch, seq=seq_len,
-                               batch_spec=bspec)
+                               batch_spec=bspec, layout=hp.tmp_layout)
     state = prm.abstract_params(st_specs, mesh)
     bs = NamedSharding(mesh, bspec)
     tokens = jax.ShapeDtypeStruct((global_batch,), jnp.int32, sharding=bs)

@@ -27,6 +27,11 @@ def main():
                     action="store_false")
     ap.add_argument("--planner", action="store_true",
                     help="per-layer TMP degrees from the ILP (factored mesh)")
+    ap.add_argument("--tmp-layout", default="auto",
+                    choices=["auto", "1d", "2d"],
+                    help="partition layout: 1d (classic), 2d (hybrid "
+                         "model_x*model_y), auto (follow the mesh; the "
+                         "planner searches both spaces)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -46,8 +51,9 @@ def main():
 
     from repro.configs.base import TrainHParams
     from repro.configs.registry import get_config
+    from repro.core.axes import mesh_info
     from repro.launch.mesh import (make_factored_mesh, make_production_mesh,
-                                   make_smoke_mesh)
+                                   make_smoke_mesh, parse_mesh_shape)
     from repro.runtime import Trainer
 
     cfg = get_config(args.arch)
@@ -60,18 +66,36 @@ def main():
         mesh = make_production_mesh()
     elif args.mesh == "multipod":
         mesh = make_production_mesh(multi_pod=True)
+    elif args.mesh == "factored":
+        mesh = make_factored_mesh()
     else:
-        d, m = (int(x) for x in args.mesh.split("x"))
-        from repro.core import compat
-        mesh = compat.make_mesh((d, m), ("data", "model"),
-                                axis_types=compat.auto_axis_types(2))
+        # 'dxm' (1D) or 'dxm1xm2' (2D hybrid) device grid
+        mesh = parse_mesh_shape(args.mesh)
 
     hp = TrainHParams(schedule=args.schedule, fine_remat=args.fine_remat,
                       learning_rate=args.lr, total_steps=args.steps,
                       warmup_steps=max(args.steps // 20, 1),
-                      use_planner=args.planner)
+                      use_planner=args.planner, tmp_layout=args.tmp_layout)
+    degrees = None
+    if args.planner:
+        from repro.configs.base import ShapeConfig
+        from repro.core.planner import plan
+        info = mesh_info(mesh)
+        # plan for the workload actually being trained, not a fixed table
+        shape = ShapeConfig("cli", args.seq, args.batch, "train")
+        pr = plan(cfg, shape, hp,
+                  layout=args.tmp_layout,
+                  options=tuple(n for n in (2, 4, 8, 16) if n <= info.tp)
+                  or (info.tp,))
+        print(f"planner: {pr.summary()}")
+        if info.factored:
+            degrees = pr.degrees
+        else:
+            print("planner: mesh is not factored — plan shown for "
+                  "inspection only, training uses the uniform layout")
     trainer = Trainer(cfg, mesh, hp, global_batch=args.batch,
-                      seq_len=args.seq, ckpt_dir=args.ckpt_dir)
+                      seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+                      degrees=degrees)
     res = trainer.train(args.steps, ckpt_every=args.ckpt_every,
                         seed=args.seed)
     print(json.dumps({

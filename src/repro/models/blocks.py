@@ -38,38 +38,45 @@ def _norm(x, scale, eps):
 # --------------------------------------------------------------------------
 def _qkv(cfg, ctx: TmpCtx, p, h, positions, prefix="", use_rope=True):
     """Project h -> (q [b,s,hl,hd], k, v [b,s,kvs,hd]) local views.
-    Pass p[prefix+'wq'] = None to skip the q projection (cross-attn kv)."""
+    Pass p[prefix+'wq'] = None to skip the q projection (cross-attn kv).
+
+    Heads shard over the x-axes (``ctx.tp`` = dx); in the 2D layout the
+    projections' contraction (d_model) dim additionally shards over y —
+    ``ctx.proj`` slices h's matching chunk and AllReduces the partials.
+    """
     plan = attn_plan(cfg, ctx.tp)
     hd = cfg.resolved_head_dim
     b, s, _ = h.shape
     wq = p.get(prefix + "wq")
-    q = (jnp.dot(h, wq).reshape(b, s, plan.h_local, hd)
+    q = (ctx.proj(h, wq).reshape(b, s, plan.h_local, hd)
          if wq is not None else None)
     wk, wv = p[prefix + "wk"], p[prefix + "wv"]
     if plan.sharded and not plan.kv_sharded \
             and plan.kv_slice < cfg.num_kv_heads:
-        # kv weights replicated: slice the kv-head group this shard's q needs
+        # kv weights replicated over x: slice the kv-head group this
+        # shard's q needs (rows may still be y-sharded — slice h to match)
         group = cfg.num_heads // cfg.num_kv_heads
-        r = tmpc.axes_index(ctx.tp_axes)
+        r = tmpc.axes_index(ctx.x_axes)
         start = (r * plan.h_local) // group
+        hy, partial = ctx.contract_slice(h, wk.shape[0])
         wk = lax.dynamic_slice_in_dim(
-            wk.reshape(cfg.d_model, cfg.num_kv_heads, hd), start,
+            wk.reshape(wk.shape[0], cfg.num_kv_heads, hd), start,
             plan.kv_slice, axis=1)
         wv = lax.dynamic_slice_in_dim(
-            wv.reshape(cfg.d_model, cfg.num_kv_heads, hd), start,
+            wv.reshape(wv.shape[0], cfg.num_kv_heads, hd), start,
             plan.kv_slice, axis=1)
-        k = jnp.einsum("bsd,dkh->bskh", h, wk)
-        v = jnp.einsum("bsd,dkh->bskh", h, wv)
+        k = ctx.contract_reduce(jnp.einsum("bsd,dkh->bskh", hy, wk), partial)
+        v = ctx.contract_reduce(jnp.einsum("bsd,dkh->bskh", hy, wv), partial)
     else:
-        k = jnp.dot(h, wk).reshape(b, s, -1, hd)
-        v = jnp.dot(h, wv).reshape(b, s, -1, hd)
+        k = ctx.proj(h, wk).reshape(b, s, -1, hd)
+        v = ctx.proj(h, wv).reshape(b, s, -1, hd)
         if plan.sharded and plan.kv_slice == cfg.num_kv_heads \
                 and cfg.num_kv_heads != cfg.num_heads \
                 and plan.h_local % cfg.num_kv_heads != 0:
             # non-aligned GQA fallback: gather each local q head's kv head
             # (local MHA view) — hit only by non-power-of-two head ratios
             group = cfg.num_heads // cfg.num_kv_heads
-            r = tmpc.axes_index(ctx.tp_axes)
+            r = tmpc.axes_index(ctx.x_axes)
             idx = (r * plan.h_local
                    + jnp.arange(plan.h_local, dtype=jnp.int32)) // group
             k = jnp.take(k, idx, axis=2)
@@ -84,9 +91,10 @@ def _qkv(cfg, ctx: TmpCtx, p, h, positions, prefix="", use_rope=True):
 def _attn_out(cfg, ctx: TmpCtx, p, attn, plan, prefix=""):
     b, s = attn.shape[:2]
     flat = attn.reshape(b, s, plan.h_local * cfg.resolved_head_dim)
-    if plan.sharded:
-        return ctx.row_matmul(flat, p[prefix + "wo"])
-    return jnp.dot(flat, p[prefix + "wo"])
+    w = p[prefix + "wo"]
+    if plan.sharded or w.shape[-1] != cfg.d_model:
+        return ctx.row_matmul(flat, w, full_out=cfg.d_model)
+    return jnp.dot(flat, w)
 
 
 def make_attn_part(cfg: ArchConfig, ctx: TmpCtx, kind: str) -> Callable:
@@ -118,7 +126,7 @@ def make_cross_part(cfg: ArchConfig, ctx: TmpCtx) -> Callable:
         plan = attn_plan(cfg, ctx.tp)
         hd = cfg.resolved_head_dim
         b, s, _ = h.shape
-        q = jnp.dot(h, p["c_wq"]).reshape(b, s, plan.h_local, hd)
+        q = ctx.proj(h, p["c_wq"]).reshape(b, s, plan.h_local, hd)
         _, ck, cv, _ = _qkv(cfg, ctx, {"wk": p["c_wk"], "wv": p["c_wv"]},
                             cctx, None, use_rope=False)
         o = chunked_attention(q, ck, cv, causal=False, softcap=0.0)
@@ -155,11 +163,13 @@ def make_mlp_part(cfg: ArchConfig, ctx: TmpCtx) -> Callable:
         g, u = ctx.gather_matmul(_norm(x, p["ln2"], cfg.norm_eps),
                                  (p["wg"], p["wu"]))
         a = jax.nn.silu(g) * u
-        # local width != global width -> column-parallel -> row-parallel out
-        if ctx.tp > 1 and p["wd"].shape[0] != cfg.d_ff:
-            delta = ctx.row_matmul(a, p["wd"])
+        # sharded rows (column-parallel width) or sharded output columns
+        # (2D) -> the row-parallel exit path; else a plain local dot
+        wd = p["wd"]
+        if wd.shape[0] != cfg.d_ff or wd.shape[-1] != cfg.d_model:
+            delta = ctx.row_matmul(a, wd, full_out=cfg.d_model)
         else:
-            delta = ctx.shard_seq(jnp.dot(a, p["wd"]))
+            delta = ctx.shard_seq(jnp.dot(a, wd))
         if cfg.post_norms:
             delta = _norm(delta, p["pn2"], cfg.norm_eps)
         return delta, ZERO
@@ -182,10 +192,11 @@ def make_rglru_part(cfg: ArchConfig, ctx: TmpCtx) -> Callable:
         y, _ = rglru_m.rglru_scan(xc, _rglru_gates(p))
         o = jax.nn.gelu(gb) * y
         w = cfg.rglru_width or cfg.d_model
-        if ctx.tp > 1 and w % ctx.tp == 0:
-            delta = ctx.row_matmul(o, p["w_out"])
+        wo = p["w_out"]
+        if wo.shape[0] != w or wo.shape[-1] != cfg.d_model:
+            delta = ctx.row_matmul(o, wo, full_out=cfg.d_model)
         else:
-            delta = ctx.shard_seq(jnp.dot(o, p["w_out"]))
+            delta = ctx.shard_seq(jnp.dot(o, wo))
         return delta, ZERO
 
     return part
@@ -280,29 +291,30 @@ def prefill_fn(cfg: ArchConfig, ctx: TmpCtx, kind: str) -> Callable:
                 st["c_k"], st["c_v"] = ck, cv
                 hc = _norm(x, p["c_ln"], cfg.norm_eps)
                 b, s, _ = hc.shape
-                qd = jnp.dot(hc, p["c_wq"]).reshape(
+                qd = ctx.proj(hc, p["c_wq"]).reshape(
                     b, s, plan.h_local, cfg.resolved_head_dim)
                 oc = chunked_attention(qd, ck, cv, causal=False)
                 dc = _attn_out(cfg, ctx, {"wo": p["c_wo"]}, oc, plan)
                 x = x + dc * jnp.tanh(p["c_gate"].astype(dc.dtype))
         elif kind == RGLRU:
             h = _norm(x, p["ln"], cfg.norm_eps)
-            xb = jnp.dot(h, p["w_in_x"])
-            gb = jnp.dot(h, p["w_in_g"])
+            xb = ctx.proj(h, p["w_in_x"])
+            gb = ctx.proj(h, p["w_in_g"])
             xc, conv_st = rglru_m.depthwise_conv1d(xb, p["conv"])
             y, h_last = rglru_m.rglru_scan(xc, _rglru_gates(p))
             o = jax.nn.gelu(gb) * y
             w = cfg.rglru_width or cfg.d_model
-            if ctx.tp > 1 and w % ctx.tp == 0:
-                delta = ctx.row_matmul(o, p["w_out"])
+            wo_ = p["w_out"]
+            if wo_.shape[0] != w or wo_.shape[-1] != cfg.d_model:
+                delta = ctx.row_matmul(o, wo_, full_out=cfg.d_model)
             else:
-                delta = jnp.dot(o, p["w_out"])
+                delta = jnp.dot(o, wo_)
             x = x + delta
             st["h"], st["conv"] = h_last, conv_st
         elif kind == SSD:
             h = _norm(x, p["ln"], cfg.norm_eps)
             z, xbc, dtp, (d_inner, nheads, n) = _ssd_split(
-                cfg, jnp.dot(h, p["in_proj"]))
+                cfg, ctx.proj(h, p["in_proj"]))
             xbc_c, conv_st = rglru_m.depthwise_conv1d(xbc, p["conv"])
             xbc_c = jax.nn.silu(xbc_c)
             xs_, B, C = (xbc_c[..., :d_inner], xbc_c[..., d_inner:d_inner + n],
@@ -354,7 +366,7 @@ def decode_fn(cfg: ArchConfig, ctx: TmpCtx, kind: str) -> Callable:
             x = x + delta
             if kind == CROSS_ATTN:
                 hc = _norm(x, p["c_ln"], cfg.norm_eps)
-                qd = jnp.dot(hc, p["c_wq"]).reshape(b, 1, plan.h_local, hd)
+                qd = ctx.proj(hc, p["c_wq"]).reshape(b, 1, plan.h_local, hd)
                 Lc = st["c_k"].shape[1]
                 oc = decode_attention(qd, st["c_k"], st["c_v"],
                                       jnp.full((b,), Lc - 1, jnp.int32))
@@ -362,23 +374,24 @@ def decode_fn(cfg: ArchConfig, ctx: TmpCtx, kind: str) -> Callable:
                 x = x + dc * jnp.tanh(p["c_gate"].astype(dc.dtype))
         elif kind == RGLRU:
             h = _norm(x, p["ln"], cfg.norm_eps)
-            xb = jnp.dot(h, p["w_in_x"])
-            gb = jnp.dot(h, p["w_in_g"])
+            xb = ctx.proj(h, p["w_in_x"])
+            gb = ctx.proj(h, p["w_in_g"])
             hist = jnp.concatenate([st["conv"], xb], axis=1)   # [b, k, W]
             y_c = jnp.einsum("bkw,kw->bw", hist, p["conv"])[:, None]
             y, h_new = rglru_m.rglru_step(y_c, _rglru_gates(p), st["h"])
             o = jax.nn.gelu(gb) * y
             w = cfg.rglru_width or cfg.d_model
-            if ctx.tp > 1 and w % ctx.tp == 0:
-                delta = ctx.row_matmul(o, p["w_out"])
+            wo_ = p["w_out"]
+            if wo_.shape[0] != w or wo_.shape[-1] != cfg.d_model:
+                delta = ctx.row_matmul(o, wo_, full_out=cfg.d_model)
             else:
-                delta = jnp.dot(o, p["w_out"])
+                delta = jnp.dot(o, wo_)
             x = x + delta
             st = {"h": h_new, "conv": hist[:, 1:]}
         elif kind == SSD:
             h = _norm(x, p["ln"], cfg.norm_eps)
             z, xbc, dtp, (d_inner, nheads, n) = _ssd_split(
-                cfg, jnp.dot(h, p["in_proj"]))
+                cfg, ctx.proj(h, p["in_proj"]))
             hist = jnp.concatenate([st["conv"], xbc], axis=1)  # [b, k, .]
             xbc_c = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, p["conv"]))
             xs_, B, C = (xbc_c[..., :d_inner], xbc_c[..., d_inner:d_inner + n],

@@ -111,21 +111,26 @@ def _grouped_scan(cfg, info, hp, params, x, degrees):
     cur_axes: tuple = ()
 
     def reshard(x, new_axes):
+        # The batch chunk held under ``cur_axes`` is indexed by the
+        # LINEARIZED axes_index over the whole tuple, so partial
+        # gathers/splits (only the changed axes) interleave chunks and
+        # permute the batch against the labels — gather everything, then
+        # re-split over the new tuple.  (Pure splits/gathers from/to the
+        # replicated state keep the cheap single-collective form.)
         nonlocal cur_axes
-        gather = tuple(a for a in cur_axes if a not in new_axes)
-        take = tuple(a for a in new_axes if a not in cur_axes)
-        if gather:
-            x = tmpc.sp_all_gather(x, gather, 0)
-        if take:
-            x = tmpc.batch_split(x, take, 0)
-        cur_axes = new_axes
+        if new_axes != cur_axes:
+            if cur_axes:
+                x = tmpc.sp_all_gather(x, cur_axes, 0)
+            if new_axes:
+                x = tmpc.batch_split(x, new_axes, 0)
+            cur_axes = new_axes
         return x
 
     aux_total = jnp.zeros((1,), jnp.float32)   # rank-1: see _stack_scan NOTE
     for g_params, (kind, degree, n) in zip(params["groups"],
                                            prm.plan_groups(cfg, degrees)):
         ctx = TmpCtx(info, degree=degree, schedule=hp.schedule,
-                     use_pallas=hp.use_pallas)
+                     use_pallas=hp.use_pallas, layout=hp.tmp_layout)
         x = reshard(x, info.extra_dp_axes(degree))
         parts = blk.train_parts(cfg, ctx, kind)
         b = x.shape[0]
@@ -154,11 +159,15 @@ def build_train_loss(cfg: ArchConfig, mesh, hp: TrainHParams, *,
                      degrees: Optional[Sequence[int]] = None):
     """Returns (loss_fn(params, batch) -> (loss, aux), specs, in_specs)."""
     info = mesh_info(mesh)
-    specs = prm.model_specs(cfg, info, degrees=degrees, max_pos=seq_len)
+    specs = prm.model_specs(cfg, info, degrees=degrees, max_pos=seq_len,
+                            layout=hp.tmp_layout)
+    # SP composes with the 1D layout only: in 2D the block entries/exits
+    # are already per-axis collectives, not the SP AG/RS pair
+    twod = TmpCtx(info, layout=hp.tmp_layout).is_2d
     sp = bool(hp.seq_parallel and info.tp > 1 and degrees is None
-              and seq_len % max(info.tp, 1) == 0)
+              and seq_len % max(info.tp, 1) == 0 and not twod)
     ctx = TmpCtx(info, schedule=hp.schedule, use_pallas=hp.use_pallas,
-                 seq_parallel=sp)
+                 seq_parallel=sp, layout=hp.tmp_layout)
     bspec = batch_pspec(info, global_batch)
     batch_specs = {"tokens": bspec, "labels": bspec}
     if cfg.context_len:
@@ -249,11 +258,13 @@ def build_prefill(cfg: ArchConfig, mesh, hp: TrainHParams, *,
                   global_batch: int, seq_len: int):
     """prefill_step(params, batch) -> (next_token [b], state)."""
     info = mesh_info(mesh)
-    specs = prm.model_specs(cfg, info, max_pos=seq_len + 1)
-    ctx = TmpCtx(info, schedule=hp.schedule, use_pallas=hp.use_pallas)
+    specs = prm.model_specs(cfg, info, max_pos=seq_len + 1,
+                            layout=hp.tmp_layout)
+    ctx = TmpCtx(info, schedule=hp.schedule, use_pallas=hp.use_pallas,
+                 layout=hp.tmp_layout)
     bspec = batch_pspec(info, global_batch)
     st_specs = prm.cache_specs(cfg, info, batch=global_batch, seq=seq_len,
-                               batch_spec=bspec)
+                               batch_spec=bspec, layout=hp.tmp_layout)
     batch_specs = {"tokens": bspec}
     if cfg.context_len:
         batch_specs["ctx"] = bspec
@@ -306,11 +317,13 @@ def build_decode(cfg: ArchConfig, mesh, hp: TrainHParams, *,
                  global_batch: int, seq_len: int):
     """serve_step(params, state, tokens [b], pos [b]) -> (next [b], state)."""
     info = mesh_info(mesh)
-    specs = prm.model_specs(cfg, info, max_pos=seq_len + 8)
-    ctx = TmpCtx(info, schedule="megatron", use_pallas=hp.use_pallas)
+    specs = prm.model_specs(cfg, info, max_pos=seq_len + 8,
+                            layout=hp.tmp_layout)
+    ctx = TmpCtx(info, schedule="megatron", use_pallas=hp.use_pallas,
+                 layout=hp.tmp_layout)
     bspec = batch_pspec(info, global_batch)
     st_specs = prm.cache_specs(cfg, info, batch=global_batch, seq=seq_len,
-                               batch_spec=bspec)
+                               batch_spec=bspec, layout=hp.tmp_layout)
     n, pat, tail = prm.stack_layout(cfg)
 
     def body(params, state, tokens, pos):

@@ -21,7 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import (ArchConfig, CROSS_ATTN, GLOBAL_ATTN,
                                 LOCAL_ATTN, RGLRU, SSD)
-from repro.core.axes import MeshInfo
+from repro.core.axes import MeshInfo, deg_total
 
 # --------------------------------------------------------------------------
 @dataclass(frozen=True)
@@ -80,15 +80,33 @@ def ssd_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
 # --------------------------------------------------------------------------
 # per-layer-kind parameter specs
 # --------------------------------------------------------------------------
-def _attn_specs(cfg, info: MeshInfo, degree, *, prefix="", kv_from_ctx=False):
-    tp_ax = info.tp_axes(degree)
-    tp = max(1, math.prod(dict(info.mesh.shape)[a] for a in tp_ax)) if tp_ax else 1
-    plan = attn_plan(cfg, tp)
+def info_xy(info: MeshInfo, degree, layout: str = "auto"):
+    """(x_axes, y_axes, dx, dy) — the layer's width- vs contraction-sharding
+    axes and their sizes.  ``layout='1d'`` flattens everything into x."""
+    if layout == "1d":
+        x_ax: Tuple[str, ...] = info.tp_axes(deg_total(degree))
+        y_ax: Tuple[str, ...] = ()
+    else:
+        x_ax, y_ax = info.xy_axes(degree)
+    s = dict(info.mesh.shape)
+    dx = math.prod(s[a] for a in x_ax) if x_ax else 1
+    dy = math.prod(s[a] for a in y_ax) if y_ax else 1
+    return x_ax, y_ax, dx, dy
+
+
+def _attn_specs(cfg, info: MeshInfo, degree, *, prefix="", layout="auto"):
+    x_ax, y_ax, dx, dy = info_xy(info, degree, layout)
+    plan = attn_plan(cfg, dx)
     d, hd = cfg.d_model, cfg.resolved_head_dim
     dt = cfg.dtype
-    q_sh = P(None, tp_ax) if plan.sharded else P(None, None)
-    kv_sh = P(None, tp_ax) if plan.kv_sharded else P(None, None)
-    o_sh = P(tp_ax, None) if plan.sharded else P(None, None)
+    # 2D: the contraction (d_model) dim shards over y.  The exit weight's
+    # *output* columns may only shard over y when the row-matmul path runs
+    # (x-sharded heads, or dx == 1 where the psum_x degenerates).
+    d_sh = y_ax if (dy > 1 and d % dy == 0) else None
+    o_d_sh = d_sh if (plan.sharded or dx == 1) else None
+    q_sh = P(d_sh, x_ax if plan.sharded else None)
+    kv_sh = P(d_sh, x_ax if plan.kv_sharded else None)
+    o_sh = P(x_ax if plan.sharded else None, o_d_sh)
     out = {
         prefix + "wq": Spec((d, cfg.num_heads * hd), q_sh, dt),
         prefix + "wk": Spec((d, cfg.num_kv_heads * hd), kv_sh, dt),
@@ -99,15 +117,16 @@ def _attn_specs(cfg, info: MeshInfo, degree, *, prefix="", kv_from_ctx=False):
     return out
 
 
-def _mlp_specs(cfg, info, degree):
-    tp_ax = info.tp_axes(degree)
-    tp = info_tp(info, degree)
-    f_sh = tp_ax if (tp > 1 and cfg.d_ff % tp == 0) else ()
+def _mlp_specs(cfg, info, degree, layout="auto"):
+    x_ax, y_ax, dx, dy = info_xy(info, degree, layout)
     d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    f_sh = x_ax if (dx > 1 and f % dx == 0) else ()
+    d_sh = y_ax if (dy > 1 and d % dy == 0) else ()
+    out_sh = d_sh if (f_sh or dx == 1) else ()
     return {
-        "wg": Spec((d, f), P(None, f_sh or None), dt),
-        "wu": Spec((d, f), P(None, f_sh or None), dt),
-        "wd": Spec((f, d), P(f_sh or None, None), dt,
+        "wg": Spec((d, f), P(d_sh or None, f_sh or None), dt),
+        "wu": Spec((d, f), P(d_sh or None, f_sh or None), dt),
+        "wd": Spec((f, d), P(f_sh or None, out_sh or None), dt,
                    scale=0.02 / math.sqrt(2 * cfg.num_layers)),
     }
 
@@ -134,34 +153,39 @@ def _moe_specs(cfg, info, degree):
     }
 
 
-def _rglru_specs(cfg, info, degree):
-    tp_ax = info.tp_axes(degree)
-    tp = info_tp(info, degree)
+def _rglru_specs(cfg, info, degree, layout="auto"):
+    x_ax, y_ax, dx, dy = info_xy(info, degree, layout)
     w = cfg.rglru_width or cfg.d_model
-    sh = tp_ax if (tp > 1 and w % tp == 0) else ()
+    sh = x_ax if (dx > 1 and w % dx == 0) else ()
     d, dt = cfg.d_model, cfg.dtype
+    d_sh = y_ax if (dy > 1 and d % dy == 0) else ()
+    out_sh = d_sh if (sh or dx == 1) else ()
     vec = P(sh or None)
     return {
-        "w_in_x": Spec((d, w), P(None, sh or None), dt),
-        "w_in_g": Spec((d, w), P(None, sh or None), dt),
+        "w_in_x": Spec((d, w), P(d_sh or None, sh or None), dt),
+        "w_in_g": Spec((d, w), P(d_sh or None, sh or None), dt),
         "conv": Spec((4, w), P(None, sh or None), dt),
         "w_a": Spec((w,), vec, jnp.float32),
         "b_a": Spec((w,), vec, jnp.float32, scale=0.0),
         "w_x": Spec((w,), vec, jnp.float32),
         "b_x": Spec((w,), vec, jnp.float32, scale=0.0),
         "a_param": Spec((w,), vec, jnp.float32, scale=-1.0),
-        "w_out": Spec((w, d), P(sh or None, None), dt,
+        "w_out": Spec((w, d), P(sh or None, out_sh or None), dt,
                       scale=0.02 / math.sqrt(2 * cfg.num_layers)),
     }
 
 
-def _ssd_specs(cfg, info, degree):
-    # mamba2-130m: replicated mixer (see DESIGN.md §Arch-applicability)
+def _ssd_specs(cfg, info, degree, layout="auto"):
+    # mamba2-130m: replicated mixer (see DESIGN.md §Arch-applicability);
+    # 2D still shards in_proj's contraction rows over y (the entry proj
+    # AllReduces the partials), the rest stays replicated.
+    _, y_ax, _, dy = info_xy(info, degree, layout)
     d_inner, nheads, n = ssd_dims(cfg)
     d, dt = cfg.d_model, cfg.dtype
+    d_sh = y_ax if (dy > 1 and d % dy == 0) else None
     in_dim = 2 * d_inner + 2 * n + nheads
     return {
-        "in_proj": Spec((d, in_dim), P(None, None), dt),
+        "in_proj": Spec((d, in_dim), P(d_sh, None), dt),
         "conv": Spec((cfg.ssm_conv, d_inner + 2 * n), P(None, None), dt),
         "A_log": Spec((nheads,), P(None), jnp.float32, scale=-1.0),
         "Dskip": Spec((nheads,), P(None), jnp.float32, scale=-1.0),
@@ -179,27 +203,31 @@ def info_tp(info: MeshInfo, degree) -> int:
 
 
 def layer_specs(cfg: ArchConfig, kind: str, info: MeshInfo,
-                degree=None, *, causal=True) -> Dict[str, Spec]:
+                degree=None, *, causal=True,
+                layout: str = "auto") -> Dict[str, Spec]:
     d, dt = cfg.d_model, cfg.dtype
     out: Dict[str, Any] = {"ln": Spec((d,), P(None), jnp.float32, scale=0.0)}
     if kind in (GLOBAL_ATTN, LOCAL_ATTN, CROSS_ATTN):
-        out.update(_attn_specs(cfg, info, degree))
+        out.update(_attn_specs(cfg, info, degree, layout=layout))
         if kind == CROSS_ATTN:
             out["c_ln"] = Spec((d,), P(None), jnp.float32, scale=0.0)
-            out.update(_attn_specs(cfg, info, degree, prefix="c_"))
+            out.update(_attn_specs(cfg, info, degree, prefix="c_",
+                                   layout=layout))
             out["c_gate"] = Spec((1,), P(None), jnp.float32, scale=0.0)
     elif kind == RGLRU:
-        out.update(_rglru_specs(cfg, info, degree))
+        out.update(_rglru_specs(cfg, info, degree, layout=layout))
     elif kind == SSD:
-        out.update(_ssd_specs(cfg, info, degree))
+        out.update(_ssd_specs(cfg, info, degree, layout=layout))
     else:
         raise ValueError(kind)
     if kind != SSD and cfg.d_ff:
         out["ln2"] = Spec((d,), P(None), jnp.float32, scale=0.0)
         if cfg.moe is not None:
+            # MoE stays 1D over the flattened model group (expert/e_ff
+            # sharding composes with the combined axes, not per-axis rings)
             out.update(_moe_specs(cfg, info, degree))
         else:
-            out.update(_mlp_specs(cfg, info, degree))
+            out.update(_mlp_specs(cfg, info, degree, layout=layout))
         if cfg.post_norms:
             out["pn1"] = Spec((d,), P(None), jnp.float32, scale=0.0)
             out["pn2"] = Spec((d,), P(None), jnp.float32, scale=0.0)
@@ -224,12 +252,15 @@ def stack_layout(cfg: ArchConfig) -> Tuple[int, Sequence[str], Sequence[str]]:
 
 
 def model_specs(cfg: ArchConfig, info: MeshInfo, *,
-                degrees: Optional[Sequence[int]] = None,
-                max_pos: int = 0) -> Dict[str, Any]:
-    """degrees: optional per-layer TMP degrees (planner mode; factored mesh).
+                degrees: Optional[Sequence] = None,
+                max_pos: int = 0, layout: str = "auto") -> Dict[str, Any]:
+    """degrees: optional per-layer TMP degrees (planner mode; factored
+    mesh); each entry may be an int (1D) or an ``(dx, dy)`` tuple (2D).
 
     Uniform mode (degrees=None) stacks `n` repeats of the pattern for scan;
     planner mode groups consecutive same-degree layers (see lm.py).
+    Embedding/head stay vocab-sharded over the *combined* model group in
+    every layout.
     """
     tp_ax = info.tp_axes(None)
     d, dt = cfg.d_model, cfg.dtype
@@ -246,17 +277,19 @@ def model_specs(cfg: ArchConfig, info: MeshInfo, *,
     if degrees is None:
         n, pat, tail = stack_layout(cfg)
         out["blocks"] = [
-            _stack(layer_specs(cfg, k, info), n) for k in pat] if n else []
-        out["tail"] = [layer_specs(cfg, k, info) for k in tail]
+            _stack(layer_specs(cfg, k, info, layout=layout), n)
+            for k in pat] if n else []
+        out["tail"] = [layer_specs(cfg, k, info, layout=layout)
+                       for k in tail]
     else:
         assert info.factored and len(degrees) == cfg.num_layers
         out["groups"] = [
-            _stack(layer_specs(cfg, kind, info, deg), n)
+            _stack(layer_specs(cfg, kind, info, deg, layout=layout), n)
             for (kind, deg, n) in plan_groups(cfg, degrees)]
 
     if cfg.is_encdec:
         n_enc = cfg.encoder_layers
-        enc_layer = layer_specs(cfg, GLOBAL_ATTN, info)
+        enc_layer = layer_specs(cfg, GLOBAL_ATTN, info, layout=layout)
         out["encoder"] = {
             "pos_embed": Spec((cfg.context_len, d), P(None, None), dt),
             "blocks": _stack(enc_layer, n_enc),
@@ -284,11 +317,11 @@ def plan_groups(cfg: ArchConfig, degrees: Sequence[int]):
 # decode/prefill state (KV caches, recurrent states) specs
 # --------------------------------------------------------------------------
 def cache_specs(cfg: ArchConfig, info: MeshInfo, *, batch: int, seq: int,
-                batch_spec) -> Dict[str, Any]:
-    """State tree for serve_step.  Global shapes; kv-head dim sharded when the
-    attention plan shards it (replicated+sliced layouts store tp*kv_slice)."""
-    tp = info_tp(info, None)
-    tp_ax = info.tp_axes(None)
+                batch_spec, layout: str = "auto") -> Dict[str, Any]:
+    """State tree for serve_step.  Global shapes; kv-head dim sharded when
+    the attention plan shards it (replicated+sliced layouts store
+    tp*kv_slice).  2D: heads shard over the x-axes only (dx)."""
+    tp_ax, _, tp, _ = info_xy(info, None, layout)
     plan = attn_plan(cfg, tp)
     hd = cfg.resolved_head_dim
     dt = cfg.dtype

@@ -70,13 +70,20 @@ class Trainer:
     def __init__(self, cfg: ArchConfig, mesh, hp: TrainHParams, *,
                  global_batch: int, seq_len: int, ckpt_dir: str,
                  injector: Optional[FailureInjector] = None,
-                 log_fn: Callable[[str], None] = print):
+                 log_fn: Callable[[str], None] = print,
+                 degrees=None):
         self.cfg = cfg
         self.mesh = mesh
         info = mesh_info(mesh)
-        self.hp = steps_mod.resolve_hp(hp, "train", global_batch, info.dp,
+        # planner mode: low-degree layers reuse model sub-axes as extra
+        # data parallelism, so the microbatcher must see that dp (same
+        # resolution build_train_step applies)
+        dp_eff = (info.dp * (info.tp // steps_mod._min_degree(degrees))
+                  if degrees else info.dp)
+        self.hp = steps_mod.resolve_hp(hp, "train", global_batch, dp_eff,
                                        seq_len=seq_len, d_model=cfg.d_model,
                                        num_layers=cfg.num_layers)
+        self.degrees = degrees
         self.global_batch = global_batch
         self.seq_len = seq_len
         self.ckpt_dir = ckpt_dir
@@ -86,7 +93,8 @@ class Trainer:
         self.checkpointer = store.AsyncCheckpointer(ckpt_dir)
 
         self.step_fn, self.specs = steps_mod.build_train_step(
-            cfg, mesh, self.hp, global_batch=global_batch, seq_len=seq_len)
+            cfg, mesh, self.hp, global_batch=global_batch, seq_len=seq_len,
+            degrees=degrees)
         # buffer donation deadlocks XLA:CPU's intra-process collective
         # rendezvous (execution only — the dry-run donates at compile time);
         # enable it on real accelerators.

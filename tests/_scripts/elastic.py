@@ -1,33 +1,29 @@
 """Subprocess body: elastic re-mesh — train on a 2x4 mesh, checkpoint, then
 resume on a 1x4 mesh (a 'pod' dropped); loss stays continuous."""
-import os
+import runner  # noqa: F401  (must be first: sets XLA_FLAGS before jax)
+
 import tempfile
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax
-
 from repro.configs.base import TrainHParams
-from repro.configs.registry import get_config
 from repro.runtime import Trainer
 
-cfg = get_config("internlm2-1.8b").reduced().replace(dtype="float32")
+cfg = runner.reduced_config("internlm2-1.8b")
 ckpt = tempfile.mkdtemp()
 hp = TrainHParams(total_steps=16, warmup_steps=2, learning_rate=1e-3)
 
-mesh_a = jax.make_mesh((2, 4), ("data", "model"))
-t1 = Trainer(cfg, mesh_a, hp, global_batch=8, seq_len=64, ckpt_dir=ckpt,
-             log_fn=lambda s: None)
+t1 = Trainer(cfg, runner.mesh(2, 4), hp, global_batch=8, seq_len=64,
+             ckpt_dir=ckpt, log_fn=lambda s: None)
 r1 = t1.train(8, ckpt_every=4)
 
-mesh_b = jax.make_mesh((1, 4), ("data", "model"))   # half the devices
 logs = []
-t2 = Trainer(cfg, mesh_b, hp, global_batch=8, seq_len=64, ckpt_dir=ckpt,
-             log_fn=logs.append)
+t2 = Trainer(cfg, runner.mesh(1, 4), hp, global_batch=8, seq_len=64,
+             ckpt_dir=ckpt, log_fn=logs.append)   # half the devices
 r2 = t2.train(16, ckpt_every=4)
 
 restored = any("restored" in l for l in logs)
-ok = restored and r2["final_step"] >= 16 \
-    and abs(r2["losses"][0] - r1["losses"][-1]) < 0.5
-print(f"resumed_on_smaller_mesh={restored} "
-      f"loss {r1['losses'][-1]:.3f} -> {r2['losses'][0]:.3f}")
-print("PASS" if ok else "FAIL", flush=True)
+runner.report(
+    "elastic-remesh",
+    restored and r2["final_step"] >= 16
+    and abs(r2["losses"][0] - r1["losses"][-1]) < 0.5,
+    f"resumed={restored} loss {r1['losses'][-1]:.3f} -> "
+    f"{r2['losses'][0]:.3f}")

@@ -1,65 +1,31 @@
 """Subprocess body: TMP-sharded loss/grads must equal single-device values.
 Prints PASS/FAIL lines consumed by tests/test_distributed.py."""
-import os
-
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import dataclasses
+import runner  # noqa: F401  (must be first: sets XLA_FLAGS before jax)
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import compat
 from repro.configs.base import TrainHParams
-from repro.configs.registry import get_config
 from repro.models import lm
 from repro.models import params as prm
-
-
-def run(arch, mesh_shape, schedule="oases", fine=True):
-    cfg = get_config(arch).reduced().replace(dtype="float32")
-    if cfg.moe is not None:   # exactness needs no-drop, no per-shard aux
-        cfg = cfg.replace(moe=dataclasses.replace(
-            cfg.moe, capacity_factor=100.0, router_aux_weight=0.0))
-    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
-    hp = TrainHParams(schedule=schedule, fine_remat=fine)
-    loss_fn, specs, _ = lm.build_train_loss(cfg, mesh, hp, global_batch=4,
-                                            seq_len=64)
-    p = prm.init_params(specs, jax.random.PRNGKey(0))
-    k = jax.random.PRNGKey(42)
-    batch = {"tokens": jax.random.randint(k, (4, 64), 0, cfg.vocab_size,
-                                          jnp.int32),
-             "labels": jax.random.randint(k, (4, 64), 0, cfg.vocab_size,
-                                          jnp.int32)}
-    if cfg.context_len:
-        batch["ctx"] = 0.02 * jax.random.normal(
-            k, (4, cfg.context_len, cfg.d_model), jnp.float32)
-    with compat.set_mesh(mesh):
-        loss = jax.jit(loss_fn)(p, batch)[0]
-        grads = jax.jit(jax.grad(lambda p, b: loss_fn(p, b)[0]))(p, batch)
-    flat = {jax.tree_util.keystr(kp): np.asarray(jax.device_get(v))
-            for kp, v in jax.tree_util.tree_flatten_with_path(grads)[0]}
-    return float(loss), flat
-
 
 ARCHS = ["internlm2-1.8b", "gemma2-9b", "recurrentgemma-9b",
          "moonshot-v1-16b-a3b", "granite-moe-3b-a800m", "whisper-small",
          "mamba2-130m"]
 
 for arch in ARCHS:
-    l1, g1 = run(arch, (1, 1))
-    l2, g2 = run(arch, (2, 4))
-    gerr = max(np.max(np.abs(g1[k] - g2[k])) / (np.max(np.abs(g1[k])) + 1e-8)
-               for k in g1)
-    ok = abs(l1 - l2) < 2e-4 and gerr < 5e-3
-    print(f"{'PASS' if ok else 'FAIL'} {arch} dloss={abs(l1-l2):.2e} "
-          f"gerr={gerr:.2e}", flush=True)
+    l1, g1 = runner.train_loss_and_grads(arch, runner.mesh(1, 1))
+    l2, g2 = runner.train_loss_and_grads(arch, runner.mesh(2, 4))
+    gerr = runner.grads_err(g1, g2)
+    runner.report(arch, abs(l1 - l2) < 2e-4 and gerr < 5e-3,
+                  f"dloss={abs(l1 - l2):.2e} gerr={gerr:.2e}")
 
-# all four schedules agree on the loss
+# all four program-order schedules agree on the loss
 losses = {}
-mesh = jax.make_mesh((2, 4), ("data", "model"))
+mesh = runner.mesh(2, 4)
 for sched in ["megatron", "wang", "merak", "oases"]:
-    cfg = get_config("internlm2-1.8b").reduced().replace(dtype="float32")
+    cfg = runner.reduced_config("internlm2-1.8b")
     hp = TrainHParams(schedule=sched)
     fn, specs, _ = lm.build_train_loss(cfg, mesh, hp, global_batch=4,
                                        seq_len=64)
@@ -69,5 +35,4 @@ for sched in ["megatron", "wang", "merak", "oases"]:
     with compat.set_mesh(mesh):
         losses[sched] = float(jax.jit(fn)(p, b)[0])
 spread = max(losses.values()) - min(losses.values())
-print(f"{'PASS' if spread < 1e-5 else 'FAIL'} schedules spread={spread:.2e}",
-      flush=True)
+runner.report("schedules", spread < 1e-5, f"spread={spread:.2e}")

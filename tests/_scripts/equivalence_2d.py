@@ -1,0 +1,56 @@
+"""Subprocess body: 2D hybrid-partition equivalence.
+
+Part 1 — uniform 2D: a (data=2, model_x=2, model_y=2) mesh must reproduce
+the single-device oracle's loss AND gradients for every layer family and
+for the megatron/oases/fused schedules (the per-axis decomposition — entry
+proj psum_y, exit psum_x + all-gather_y — is numerically exact).
+
+Part 2 — planner-mode mixed degrees on the factored mesh: every 1D/2D
+degree assignment of the same grouping structure must agree (same init),
+including transitions between groups whose x/y splits differ — the case
+that exposed the pre-PR batch-resharding permutation bug.
+
+Prints PASS/FAIL lines consumed by tests/test_distributed.py.
+"""
+import runner  # noqa: F401  (must be first: sets XLA_FLAGS before jax)
+
+from repro.configs.base import TrainHParams
+
+# ---- part 1: uniform 2D vs single-device oracle --------------------------
+# (MoE archs included: their MLP keeps the flattened-group 1D layout while
+# attention uses the per-axis decomposition — the interplay needs pinning)
+for arch in ["internlm2-1.8b", "gemma2-9b", "recurrentgemma-9b",
+             "mamba2-130m", "whisper-small", "moonshot-v1-16b-a3b",
+             "granite-moe-3b-a800m"]:
+    l1, g1 = runner.train_loss_and_grads(arch, runner.mesh(1, 1))
+    for sched in ("oases", "megatron", "fused"):
+        l2, g2 = runner.train_loss_and_grads(
+            arch, runner.mesh(2, 2, 2), TrainHParams(schedule=sched))
+        gerr = runner.grads_err(g1, g2)
+        runner.report(f"2d-{arch}-{sched}",
+                      abs(l1 - l2) < 2e-4 and gerr < 5e-3,
+                      f"dloss={abs(l1 - l2):.2e} gerr={gerr:.2e}")
+
+# ---- part 2: mixed 1D/2D plans on the factored mesh ----------------------
+fm = runner.factored_mesh(1, (2, 2, 2))
+base_l, base_g = runner.train_loss_and_grads("internlm2-1.8b", fm,
+                                             batch=8, degrees=[4, 4])
+for degrees in ([2, 2], [8, 8], [(2, 2), (2, 2)], [(2, 4), (2, 4)],
+                [(4, 2), (4, 2)], [(1, 2), (1, 2)]):
+    l, g = runner.train_loss_and_grads("internlm2-1.8b", fm,
+                                       batch=8, degrees=degrees)
+    gerr = runner.grads_err(base_g, g)
+    runner.report(f"plan-{degrees}",
+                  abs(base_l - l) < 2e-4 and gerr < 5e-3,
+                  f"dloss={abs(base_l - l):.2e} gerr={gerr:.2e}")
+
+m_l, m_g = runner.train_loss_and_grads("internlm2-1.8b", fm,
+                                       batch=8, degrees=[2, 4])
+for degrees in ([4, 2], [2, 8], [(2, 2), 4], [2, (2, 2)],
+                [(2, 2), (4, 2)], [(1, 4), (2, 2)]):
+    l, g = runner.train_loss_and_grads("internlm2-1.8b", fm,
+                                       batch=8, degrees=degrees)
+    gerr = runner.grads_err(m_g, g)
+    runner.report(f"plan-mixed-{degrees}",
+                  abs(m_l - l) < 2e-4 and gerr < 5e-3,
+                  f"dloss={abs(m_l - l):.2e} gerr={gerr:.2e}")

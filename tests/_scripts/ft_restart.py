@@ -1,17 +1,14 @@
 """Subprocess body: failure injection -> supervisor restart -> checkpoint
 restore -> run to completion."""
-import os
+import runner  # noqa: F401  (must be first: sets XLA_FLAGS before jax)
+
 import tempfile
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax
-
 from repro.configs.base import TrainHParams
-from repro.configs.registry import get_config
 from repro.runtime import FailureInjector, Trainer, run_with_restarts
 
-mesh = jax.make_mesh((2, 4), ("data", "model"))
-cfg = get_config("internlm2-1.8b").reduced().replace(dtype="float32")
+mesh = runner.mesh(2, 4)
+cfg = runner.reduced_config("internlm2-1.8b")
 ckpt = tempfile.mkdtemp()
 logs = []
 calls = [0]
@@ -30,8 +27,9 @@ def factory():
 
 res = run_with_restarts(factory, total_steps=20, ckpt_every=5)
 restored = any("restored" in l for l in logs)
-ok = (calls[0] == 2 and restored and res["final_step"] >= 20
-      and res["losses"][-1] < res["losses"][0] + 0.5)
-print(f"restarts={calls[0]-1} final={res['final_step']} "
-      f"loss {res['losses'][0]:.3f}->{res['losses'][-1]:.3f}")
-print("PASS" if ok else "FAIL", flush=True)
+runner.report(
+    "ft-restart",
+    calls[0] == 2 and restored and res["final_step"] >= 20
+    and res["losses"][-1] < res["losses"][0] + 0.5,
+    f"restarts={calls[0]-1} final={res['final_step']} "
+    f"loss {res['losses'][0]:.3f}->{res['losses'][-1]:.3f}")

@@ -1,21 +1,19 @@
 """Subprocess body: fine-grained recomputation (§3.2) removes the recompute
 collectives — count psums in the grad jaxpr."""
-import os
+import runner  # noqa: F401  (must be first: sets XLA_FLAGS before jax)
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import jax.numpy as jnp
 
 from repro.core import compat
 from repro.configs.base import TrainHParams
-from repro.configs.registry import get_config
 from repro.models import lm
 from repro.models import params as prm
 
-mesh = jax.make_mesh((2, 4), ("data", "model"))
+mesh = runner.mesh(2, 4)
 counts = {}
 for fine in [False, True]:
-    cfg = get_config("internlm2-1.8b").reduced().replace(dtype="float32")
+    cfg = runner.reduced_config("internlm2-1.8b")
     hp = TrainHParams(schedule="oases", fine_remat=fine)
     fn, specs, _ = lm.build_train_loss(cfg, mesh, hp, global_batch=4,
                                        seq_len=64)
@@ -25,5 +23,5 @@ for fine in [False, True]:
     with compat.set_mesh(mesh):
         jx = jax.make_jaxpr(jax.grad(lambda p, b: fn(p, b)[0]))(p, b)
     counts[fine] = str(jx).count("psum")
-print(f"coarse={counts[False]} fine={counts[True]}")
-print("PASS" if counts[True] < counts[False] else "FAIL", flush=True)
+runner.report("remat-collectives", counts[True] < counts[False],
+              f"coarse={counts[False]} fine={counts[True]}")

@@ -1,33 +1,16 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp
-import numpy as np
-from repro.core import compat
-from repro.configs.registry import get_config
+"""Subprocess body: sequence-parallel (AG/RS) TMP must match the AllReduce
+scheme loss/grads exactly.  PASS/FAIL lines consumed by test_distributed."""
+import runner  # noqa: F401  (must be first: sets XLA_FLAGS before jax)
+
 from repro.configs.base import TrainHParams
-from repro.models import lm, params as prm
 
-def run(arch, sp, seq=64):
-    cfg = get_config(arch).reduced().replace(dtype='float32')
-    mesh = jax.make_mesh((2, 4), ('data', 'model'))
-    hp = TrainHParams(schedule='oases', fine_remat=True, seq_parallel=sp)
-    loss_fn, specs, _ = lm.build_train_loss(cfg, mesh, hp, global_batch=4, seq_len=seq)
-    p = prm.init_params(specs, jax.random.PRNGKey(0))
-    k = jax.random.PRNGKey(42)
-    batch = {'tokens': jax.random.randint(k, (4, seq), 0, cfg.vocab_size, jnp.int32),
-             'labels': jax.random.randint(k, (4, seq), 0, cfg.vocab_size, jnp.int32)}
-    if cfg.context_len:
-        batch['ctx'] = 0.02*jax.random.normal(k, (4, cfg.context_len, cfg.d_model), jnp.float32)
-    with compat.set_mesh(mesh):
-        loss = jax.jit(loss_fn)(p, batch)[0]
-        g = jax.jit(jax.grad(lambda p, b: loss_fn(p, b)[0]))(p, batch)
-    flat = {jax.tree_util.keystr(kp): np.asarray(jax.device_get(v))
-            for kp, v in jax.tree_util.tree_flatten_with_path(g)[0]}
-    return float(loss), flat
-
-for arch in ['internlm2-1.8b', 'gemma2-9b', 'recurrentgemma-9b', 'whisper-small', 'mamba2-130m']:
-    l1, g1 = run(arch, False)
-    l2, g2 = run(arch, True)
-    gerr = max(np.max(np.abs(g1[k]-g2[k]))/(np.max(np.abs(g1[k]))+1e-8) for k in g1)
-    ok = abs(l1 - l2) < 2e-4 and gerr < 5e-3
-    print(f'{"PASS" if ok else "FAIL"} {arch} dloss={abs(l1-l2):.2e} gerr={gerr:.2e}', flush=True)
+for arch in ["internlm2-1.8b", "gemma2-9b", "recurrentgemma-9b",
+             "whisper-small", "mamba2-130m"]:
+    mesh = runner.mesh(2, 4)
+    l1, g1 = runner.train_loss_and_grads(
+        arch, mesh, TrainHParams(schedule="oases", seq_parallel=False))
+    l2, g2 = runner.train_loss_and_grads(
+        arch, mesh, TrainHParams(schedule="oases", seq_parallel=True))
+    gerr = runner.grads_err(g1, g2)
+    runner.report(arch, abs(l1 - l2) < 2e-4 and gerr < 5e-3,
+                  f"dloss={abs(l1 - l2):.2e} gerr={gerr:.2e}")

@@ -87,6 +87,8 @@ def test_pallas_tile_matmul_sweep(dtype, m, k, n, bm, bn, bk):
 # multi-device ring numerics + schedule equivalence (subprocess: needs 8
 # virtual CPU devices, set before jax import)
 # --------------------------------------------------------------------------
+@pytest.mark.multidevice
+@pytest.mark.slow
 def test_fused_equivalence_subprocess():
     import os
     script = os.path.join(os.path.dirname(__file__), "_scripts",

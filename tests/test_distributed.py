@@ -1,6 +1,12 @@
-"""Multi-device integration tests.  Each spawns a subprocess with
-XLA_FLAGS=--xla_force_host_platform_device_count=8 (the in-process tests
-must keep the real 1-device topology)."""
+"""Multi-device integration tests — the first-class ``multidevice`` tier.
+
+Each test spawns a subprocess from tests/_scripts/ (all of which import
+the shared ``runner`` harness, which sets
+XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax loads; the
+in-process tests must keep the real 1-device topology).  Run the tier with
+``pytest -m multidevice``; the tests are also marked ``slow`` so the
+default fast loop can deselect them.
+"""
 import os
 import subprocess
 import sys
@@ -10,6 +16,8 @@ import pytest
 from conftest import subprocess_env
 
 SCRIPTS = os.path.join(os.path.dirname(__file__), "_scripts")
+
+multidevice = pytest.mark.multidevice
 
 
 def _run(name, timeout=900):
@@ -26,27 +34,41 @@ def _run(name, timeout=900):
     return lines
 
 
+@multidevice
 @pytest.mark.slow
 def test_tmp_equivalence_and_schedules():
     lines = _run("equivalence.py")
     assert len(lines) >= 8          # 7 archs + schedule agreement
 
 
+@multidevice
+@pytest.mark.slow
+def test_2d_hybrid_equivalence():
+    """2x2 model-mesh 2D forward+grad vs the single-device oracle, plus
+    mixed 1D/2D planner degrees on the factored mesh (PR acceptance)."""
+    lines = _run("equivalence_2d.py", timeout=1800)
+    assert len(lines) >= 26         # 7 archs x 3 schedules + plan cases
+
+
+@multidevice
 @pytest.mark.slow
 def test_fine_remat_removes_recompute_collectives():
     _run("remat_counts.py")
 
 
+@multidevice
 @pytest.mark.slow
 def test_fault_tolerant_restart():
     _run("ft_restart.py")
 
 
+@multidevice
 @pytest.mark.slow
 def test_elastic_remesh_resume():
     _run("elastic.py")
 
 
+@multidevice
 @pytest.mark.slow
 def test_sequence_parallel_equivalence():
     lines = _run("sp_equivalence.py")

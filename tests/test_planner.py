@@ -1,12 +1,14 @@
 """Oases planner: ILP validity, memory constraint behaviour, cost-model
-monotonicity, solve latency (paper: sub-second, Table 6)."""
+monotonicity, solve latency (paper: sub-second, Table 6), and the
+Planner-v2 2D hybrid-partition search space."""
 import time
 
 import pytest
 
 from repro.configs.base import SHAPES, TrainHParams
 from repro.configs.registry import get_config
-from repro.core.planner import V5E, estimate_iteration, overlapped_time, plan
+from repro.core.planner import (V5E, estimate_iteration, expand_options,
+                                overlapped_time, overlapped_time_2d, plan)
 from repro.core.planner.costmodel import HWConfig
 
 
@@ -153,3 +155,86 @@ def test_estimate_all_shapes():
         est = estimate_iteration(cfg, SHAPES[sname], hp,
                                  [16] * cfg.num_layers)
         assert est["iter_s"] > 0 and est["tokens_per_s"] > 0
+
+
+# --------------------------------------------------------------------------
+# Planner v2: 2D hybrid partitions
+# --------------------------------------------------------------------------
+def test_expand_options_spaces():
+    cfg = get_config("internlm2-1.8b")
+    hw = HWConfig(n_chips=16, node_size=8)
+    one_d = expand_options(cfg, hw, (2, 4, 8, 16), "1d")
+    assert one_d == [2, 4, 8, 16]
+    auto = expand_options(cfg, hw, (2, 4, 8, 16), "auto")
+    assert set(one_d) <= set(a for a in auto if isinstance(a, int))
+    for o in auto:
+        if isinstance(o, tuple):
+            dx, dy = o
+            assert dx * dy in one_d
+            assert dx <= hw.node_size          # x-ring stays intra-node
+            assert cfg.d_model % dy == 0
+    two_d = expand_options(cfg, hw, (2, 4, 8, 16), "2d")
+    assert all(isinstance(o, tuple) for o in two_d)
+    assert (16, 1) in two_d                    # 1D-equivalent degenerate
+    assert (16, 2) not in two_d                # dx must stay intra-node
+
+
+def test_estimate_iteration_accepts_tuple_degrees():
+    cfg = get_config("internlm2-1.8b")
+    hp = TrainHParams(schedule="fused")
+    e1 = estimate_iteration(cfg, SHAPES["train_4k"], hp,
+                            [8] * cfg.num_layers)
+    e2 = estimate_iteration(cfg, SHAPES["train_4k"], hp,
+                            [(8, 1)] * cfg.num_layers)
+    assert e1["iter_s"] == pytest.approx(e2["iter_s"], rel=1e-9)
+    e3 = estimate_iteration(cfg, SHAPES["train_4k"], hp,
+                            [(4, 2)] * cfg.num_layers)
+    assert e3["iter_s"] > 0
+    # same total degree -> same parameter memory
+    assert e3["mem_bytes"] == pytest.approx(e1["mem_bytes"], rel=1e-6)
+
+
+def test_y_traffic_charged_at_inter_node_bandwidth():
+    """2D comm splits per axis: throttling only the inter-node (y) links
+    must slow a (dx, dy>1) node but leave pure-1D intra-node plans alone."""
+    cfg = get_config("internlm2-1.8b")
+    hp = TrainHParams(schedule="fused")
+    fast = HWConfig(n_chips=16, node_size=8, link_bw_x=100e9,
+                    link_bw_y=100e9)
+    slow_y = HWConfig(n_chips=16, node_size=8, link_bw_x=100e9,
+                      link_bw_y=2e9)
+    d2 = [(8, 2)] * cfg.num_layers
+    d1 = [8] * cfg.num_layers
+    assert estimate_iteration(cfg, SHAPES["train_4k"], hp, d2, slow_y)["iter_s"] \
+        > estimate_iteration(cfg, SHAPES["train_4k"], hp, d2, fast)["iter_s"]
+    assert estimate_iteration(cfg, SHAPES["train_4k"], hp, d1, slow_y)["iter_s"] \
+        == pytest.approx(
+            estimate_iteration(cfg, SHAPES["train_4k"], hp, d1, fast)["iter_s"],
+            rel=1e-9)
+
+
+def test_1d_ring_spanning_nodes_pays_nic_bandwidth():
+    """AMP-style heterogeneity: a 16-way 1D ring over two 8-chip nodes is
+    bottlenecked by the inter-node hop, so the hybrid (8,2) plan must be
+    strictly cheaper there."""
+    cfg = get_config("internlm2-1.8b")
+    hp = TrainHParams(schedule="oases")
+    hetero = HWConfig(n_chips=16, node_size=8, link_bw_x=100e9,
+                      link_bw_y=2e9)
+    t1 = estimate_iteration(cfg, SHAPES["train_4k"], hp,
+                            [16] * cfg.num_layers, hetero)["iter_s"]
+    t2 = estimate_iteration(cfg, SHAPES["train_4k"], hp,
+                            [(8, 2)] * cfg.num_layers, hetero)["iter_s"]
+    assert t2 < t1
+
+
+def test_plan_layout_2d_valid_and_no_worse():
+    cfg = get_config("granite-8b")
+    hp = TrainHParams(schedule="fused")
+    hw = HWConfig(n_chips=16, node_size=8, link_bw_x=100e9, link_bw_y=2e9)
+    p1 = plan(cfg, SHAPES["train_4k"], hp, hw, layout="1d")
+    p2 = plan(cfg, SHAPES["train_4k"], hp, hw, layout="auto")
+    assert len(p2.degrees) == cfg.num_layers
+    assert p2.predicted_s <= p1.predicted_s * (1 + 1e-9)
+    pf = plan(cfg, SHAPES["train_4k"], hp, hw, layout="2d")
+    assert all(isinstance(d, tuple) for d in pf.degrees)

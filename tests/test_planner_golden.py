@@ -1,0 +1,84 @@
+"""Golden regression: pin the Planner-v2 decisions on the two fixture
+HWConfigs so cost-model edits that silently flip Table-6-style plans fail
+loudly.
+
+Fixtures (core/planner/costmodel.py):
+* ``COMMODITY_25GBE`` — two 8-GPU boxes over a 25 GbE NIC (the paper's
+  commodity-server regime, heterogeneous per-axis bandwidths);
+* ``NVLINK_BOX``      — one 16-GPU NVLink-class box (uniform fast links).
+
+If an intentional cost-model change moves a pinned plan, re-derive the
+goldens by running the printed `plan()` calls and update this file in the
+same commit — the point is that the move is *visible*.
+"""
+import pytest
+
+from repro.configs.base import TrainHParams
+from repro.configs.gpt_oases import PAPER_TABLE4, paper_shape
+from repro.core.planner import COMMODITY_25GBE, NVLINK_BOX, plan
+
+
+def _case(schedule, hw, **kw):
+    cfg, _tmp, _dp, gb = PAPER_TABLE4["gpt-h8192"]
+    return plan(cfg, paper_shape(gb), TrainHParams(schedule=schedule), hw,
+                **kw)
+
+
+# (schedule, fixture, plan kwargs) -> expected uniform degree
+FREE_SPACE_GOLDEN = {
+    ("oases", "25gbe"): 2,
+    ("oases", "nvlink"): 2,
+    ("fused", "25gbe"): 4,
+    ("fused", "nvlink"): 8,
+}
+# options pinned to the full 16-way group: the memory-bound regime where
+# the 1D ring must cross the NIC and the 2D hybrid pays off
+TIGHT_GOLDEN = {
+    ("oases", "25gbe"): (8, 2),
+    ("oases", "nvlink"): 16,
+    ("fused", "25gbe"): (8, 2),
+    ("fused", "nvlink"): 16,
+}
+HW = {"25gbe": COMMODITY_25GBE, "nvlink": NVLINK_BOX}
+
+
+@pytest.mark.parametrize("schedule", ["oases", "fused"])
+@pytest.mark.parametrize("fixture", ["25gbe", "nvlink"])
+def test_free_space_plan_pinned(schedule, fixture):
+    r = _case(schedule, HW[fixture], layout="auto")
+    expect = FREE_SPACE_GOLDEN[(schedule, fixture)]
+    assert r.degrees == [expect] * len(r.degrees), r.summary()
+    assert r.status == "0", r.summary()
+
+
+@pytest.mark.parametrize("schedule", ["oases", "fused"])
+@pytest.mark.parametrize("fixture", ["25gbe", "nvlink"])
+def test_spanning_regime_plan_pinned(schedule, fixture):
+    r = _case(schedule, HW[fixture], options=(16,), layout="auto")
+    expect = TIGHT_GOLDEN[(schedule, fixture)]
+    assert r.degrees == [expect] * len(r.degrees), r.summary()
+
+
+@pytest.mark.parametrize("schedule", ["oases", "fused"])
+def test_2d_wins_on_commodity_loses_nothing_on_nvlink(schedule):
+    """The acceptance shape of the whole feature: when the group must span
+    both commodity nodes, the hybrid beats 1D by a wide margin; on the
+    uniform NVLink box the 2D search space changes nothing."""
+    p1 = _case(schedule, COMMODITY_25GBE, options=(16,), layout="1d")
+    p2 = _case(schedule, COMMODITY_25GBE, options=(16,), layout="auto")
+    assert p2.predicted_s < p1.predicted_s * 0.8, (p1.summary(),
+                                                  p2.summary())
+    n1 = _case(schedule, NVLINK_BOX, options=(16,), layout="1d")
+    n2 = _case(schedule, NVLINK_BOX, options=(16,), layout="auto")
+    assert n2.predicted_s == pytest.approx(n1.predicted_s, rel=1e-9)
+
+
+@pytest.mark.parametrize("fixture", ["25gbe", "nvlink"])
+@pytest.mark.parametrize("schedule", ["oases", "fused", "megatron"])
+def test_2d_never_worse_than_1d(schedule, fixture):
+    """PR acceptance: plan() with 2D enabled returns a plan whose modeled
+    iteration time is <= the best 1D plan on both fixture HWConfigs."""
+    p1 = _case(schedule, HW[fixture], layout="1d")
+    p2 = _case(schedule, HW[fixture], layout="auto")
+    assert p2.predicted_s <= p1.predicted_s * (1 + 1e-9), (p1.summary(),
+                                                           p2.summary())

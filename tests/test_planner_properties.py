@@ -1,0 +1,127 @@
+"""Hypothesis property tests for Planner v2 (skipped gracefully when
+hypothesis is absent — see conftest.optional_hypothesis).
+
+Properties pinned here:
+* ``plan()`` always returns a *feasible* partition for random
+  ArchConfig/HWConfig draws: one degree per layer, every total a power of
+  two within the option space, every 2D dy dividing d_model (the per-axis
+  decomposition slices the contraction dim), and the memory bound holds
+  whenever the ILP reports an optimal solve.
+* the 2D search space never loses to 1D (it contains it).
+* ``overlapped_time(d, c, s)`` is monotone in d and c, never below
+  max(d, c), never above the serial sum; the 2D composition degenerates to
+  it at c_y == 0 and obeys the same bounds.
+"""
+import pytest
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+from repro.configs.base import ArchConfig, ShapeConfig, TrainHParams
+from repro.core.planner import (estimate_iteration, overlapped_time,
+                                overlapped_time_2d, plan)
+from repro.core.planner.costmodel import HWConfig, _dtot, _dxy
+
+SHAPE = ShapeConfig("prop_train", 512, 16, "train")
+
+
+def _arch(num_layers, d_model, heads, ff_mult):
+    return ArchConfig(
+        name="prop", family="dense", num_layers=num_layers,
+        d_model=d_model, num_heads=heads, num_kv_heads=heads // 2 or 1,
+        d_ff=d_model * ff_mult, vocab_size=1024, head_dim=d_model // heads)
+
+
+def _hw(n_chips, node_size, bw, bw_x, bw_y):
+    return HWConfig(n_chips=n_chips, node_size=node_size, peak_flops=1e14,
+                    hbm_bw=8e11, link_bw=bw, link_bw_x=bw_x, link_bw_y=bw_y,
+                    hbm_cap=32e9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(num_layers=st.integers(2, 5),
+       d_model=st.sampled_from([128, 256, 512]),
+       heads=st.sampled_from([4, 8]),
+       ff_mult=st.sampled_from([2, 4]),
+       n_chips=st.sampled_from([8, 16]),
+       node_size=st.sampled_from([0, 4, 8]),
+       bw=st.floats(1e9, 1e11),
+       bw_x=st.sampled_from([0.0, 5e10, 2e11]),
+       bw_y=st.sampled_from([0.0, 2e9, 1e10]),
+       layout=st.sampled_from(["1d", "2d", "auto"]),
+       schedule=st.sampled_from(["oases", "megatron", "fused"]))
+def test_plan_feasible(num_layers, d_model, heads, ff_mult, n_chips,
+                       node_size, bw, bw_x, bw_y, layout, schedule):
+    cfg = _arch(num_layers, d_model, heads, ff_mult)
+    hw = _hw(n_chips, node_size, bw, bw_x, bw_y)
+    hp = TrainHParams(schedule=schedule)
+    options = tuple(n for n in (2, 4, 8, 16) if n <= n_chips)
+    r = plan(cfg, SHAPE, hp, hw, options=options, layout=layout,
+             mem_cap=64e9)
+    assert len(r.degrees) == cfg.num_layers
+    for d in r.degrees:
+        dx, dy = _dxy(d)
+        total = dx * dy
+        assert total in options, d
+        assert dx & (dx - 1) == 0 and dy & (dy - 1) == 0, d
+        if dy > 1:
+            assert cfg.d_model % dy == 0, d       # proj slices d_model
+            ns = hw.node_size or hw.n_chips
+            assert dx <= ns, d                    # x-ring stays intra-node
+    est = estimate_iteration(cfg, SHAPE, hp, r.degrees, hw)
+    assert est["iter_s"] > 0
+    if not r.status.startswith("fallback"):
+        assert est["mem_bytes"] < 64e9 * 1.05
+
+
+@settings(max_examples=8, deadline=None)
+@given(num_layers=st.integers(2, 4),
+       d_model=st.sampled_from([256, 512]),
+       heads=st.sampled_from([4, 8]),
+       bw_y=st.sampled_from([2e9, 1e10]),
+       schedule=st.sampled_from(["oases", "fused"]))
+def test_2d_space_never_loses_to_1d(num_layers, d_model, heads, bw_y,
+                                    schedule):
+    """The 2D option space contains every 1D point, so the planned time
+    under layout='auto' can never exceed the best 1D plan."""
+    cfg = _arch(num_layers, d_model, heads, 2)
+    hw = _hw(16, 8, bw_y, 1e11, bw_y)
+    hp = TrainHParams(schedule=schedule)
+    p1 = plan(cfg, SHAPE, hp, hw, layout="1d")
+    p2 = plan(cfg, SHAPE, hp, hw, layout="auto")
+    assert p2.predicted_s <= p1.predicted_s * (1 + 1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(d=st.floats(0.0, 10.0), c=st.floats(0.0, 10.0),
+       eps=st.floats(0.0, 5.0), steps=st.integers(1, 16))
+def test_overlapped_time_monotone_and_bounded(d, c, eps, steps):
+    t = overlapped_time(d, c, steps)
+    assert t >= max(d, c) - 1e-12
+    assert t <= d + c + 1e-12
+    assert overlapped_time(d + eps, c, steps) >= t - 1e-12    # mono in d
+    assert overlapped_time(d, c + eps, steps) >= t - 1e-12    # mono in c
+
+
+@settings(max_examples=50, deadline=None)
+@given(d=st.floats(0.0, 10.0), cx=st.floats(0.0, 10.0),
+       cy=st.floats(0.0, 10.0), eps=st.floats(0.0, 5.0),
+       steps=st.integers(1, 16))
+def test_overlapped_time_2d_laws(d, cx, cy, eps, steps):
+    t = overlapped_time_2d(d, cx, cy, steps)
+    assert t >= max(d, cx) - 1e-12
+    assert t >= cy - 1e-12
+    assert t <= d + cx + cy + 1e-12
+    # degenerates to the 1D law when there is no y traffic
+    assert overlapped_time_2d(d, cx, 0.0, steps) == \
+        pytest.approx(overlapped_time(d, cx, steps))
+    # monotone in every argument
+    assert overlapped_time_2d(d + eps, cx, cy, steps) >= t - 1e-12
+    assert overlapped_time_2d(d, cx + eps, cy, steps) >= t - 1e-12
+    assert overlapped_time_2d(d, cx, cy + eps, steps) >= t - 1e-12
+
+
+def test_dtot_dxy_roundtrip():
+    assert _dxy(8) == (8, 1) and _dtot(8) == 8
+    assert _dxy((4, 2)) == (4, 2) and _dtot((4, 2)) == 8
