@@ -22,6 +22,10 @@ def main() -> None:
     ap.add_argument("--dry-run", action="store_true",
                     help="modeled paths only; skip the measured fig6 "
                          "subprocess (CI smoke)")
+    ap.add_argument("--tag", default="local",
+                    help="label for the machine-readable BENCH_<tag>.json "
+                         "written at the repo root (perf trajectory — "
+                         "future PRs diff against it)")
     args = ap.parse_args()
     root = os.path.join(os.path.dirname(__file__), "..")
     sys.path.insert(0, os.path.abspath(root))       # the benchmarks package
@@ -100,10 +104,55 @@ def main() -> None:
         print(f"roofline/{r['arch']}/{r['shape']},{dom_us:.0f},"
               f"dom={r['dominant']};frac={r['roofline_fraction']}")
 
+    # joint PP x TMP planner decisions on the fixture HWConfigs (modeled;
+    # the bubble fraction is the pipeline's idle share of the iteration)
+    from repro.configs.base import TrainHParams
+    from repro.configs.gpt_oases import PAPER_TABLE4, paper_shape
+    from repro.core.planner import COMMODITY_25GBE, NVLINK_BOX, plan_joint
+    cfg, _t, _d, gb = PAPER_TABLE4["gpt-h8192"]
+    joint = {}
+    for fixture, hw in (("commodity_25gbe", COMMODITY_25GBE),
+                        ("nvlink_box", NVLINK_BOX)):
+        r = plan_joint(cfg, paper_shape(gb), TrainHParams(schedule="oases"),
+                       hw, options=(16,))
+        joint[fixture] = {
+            "pp": r.pp, "n_micro": r.n_micro,
+            "degrees": [list(d) if isinstance(d, tuple) else d
+                        for d in r.degrees],
+            "predicted_ms": round(r.predicted_s * 1e3, 3),
+            "tmp_only_ms": round(r.tmp_only_s * 1e3, 3),
+            "bubble_fraction": round(r.bubble_fraction, 4),
+            "p2p_ms": round(r.p2p_s * 1e3, 3),
+        }
+        print(f"joint/{fixture},{r.predicted_s*1e6:.0f},"
+              f"pp={r.pp};bubble={r.bubble_fraction:.3f}")
+    report["joint_pp_planner"] = joint
+
     d = ensure_results_dir()
     with open(os.path.join(d, "bench_report.json"), "w") as f:
         json.dump(report, f, indent=1)
     print("# wrote results/bench_report.json", file=sys.stderr)
+
+    # machine-readable perf trajectory at the repo root: the numbers a
+    # future PR diffs against (tokens/s per schedule, planner decisions,
+    # bubble fraction)
+    bench = {
+        "tag": args.tag,
+        "time": time.time(),
+        "dry_run": bool(args.dry_run),
+        "tokens_per_s": {r["model"]: r["tokens_per_s"]
+                         for r in report["fig4_end_to_end"]},
+        "schedule_speedup_vs_megatron": {
+            r["model"]: r["speedup_vs_megatron"]
+            for r in report["table3_ablation"]},
+        "planner_decisions": {r["model"]: r["planned"]
+                              for r in report["table6_planner"]},
+        "joint_pp_planner": joint,
+    }
+    out = os.path.abspath(os.path.join(root, f"BENCH_{args.tag}.json"))
+    with open(out, "w") as f:
+        json.dump(bench, f, indent=1)
+    print(f"# wrote {out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

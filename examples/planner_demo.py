@@ -1,20 +1,41 @@
 """Oases planner demo (deliverable b): per-layer TMP degrees from the ILP
 for the paper's model table, plus the cost model's view of each schedule,
-and the Planner-v2 2D hybrid-partition search on a heterogeneous
-(commodity-server) bandwidth profile.
+the Planner-v2 2D hybrid-partition search on a heterogeneous
+(commodity-server) bandwidth profile, and the joint PP x TMP search
+(pipeline stages across boxes, TMP within).
 
-    PYTHONPATH=src python examples/planner_demo.py
+    PYTHONPATH=src python examples/planner_demo.py [--calibrate]
+
+``--calibrate`` replaces the hard-coded chip numbers with on-device
+micro-bench measurements (``HWConfig.from_measurements``) — the same
+profile-guided path as ``launch/dryrun.py --calibrate``.
 
 The same search spaces are reachable from the launchers via
-``--tmp-layout {1d,2d,auto}`` (train.py / dryrun.py).
+``--tmp-layout {1d,2d,auto}`` and ``--pp`` (train.py / dryrun.py).
 """
+import argparse
+import dataclasses
+
 from repro.configs.base import TrainHParams
 from repro.configs.gpt_oases import PAPER_TABLE4, paper_shape
-from repro.core.planner import COMMODITY_25GBE, estimate_iteration, plan
+from repro.core.planner import (COMMODITY_25GBE, NVLINK_BOX,
+                                estimate_iteration, plan, plan_joint)
 from repro.core.planner.costmodel import HWConfig
 
-HW = HWConfig(n_chips=32, peak_flops=71e12, hbm_bw=936e9, link_bw=8e9,
-              hbm_cap=24e9)
+ap = argparse.ArgumentParser()
+ap.add_argument("--calibrate", action="store_true",
+                help="fill flops/hbm/link bandwidths from on-device "
+                     "micro-benches instead of the stock chip numbers")
+args = ap.parse_args()
+
+if args.calibrate:
+    HW = HWConfig.from_measurements(n_chips=32, node_size=8, hbm_cap=24e9)
+    print("calibrated HWConfig:")
+    print(" ", {k: (f"{v:.3g}" if isinstance(v, float) else v)
+                for k, v in dataclasses.asdict(HW).items()})
+else:
+    HW = HWConfig(n_chips=32, peak_flops=71e12, hbm_bw=936e9, link_bw=8e9,
+                  hbm_cap=24e9)
 
 for key in ("gpt-h2048", "gpt-h4096", "gpt-h8192"):
     cfg, tmp, dp, gb = PAPER_TABLE4[key]
@@ -39,3 +60,12 @@ for key in ("gpt-h2048", "gpt-h4096", "gpt-h8192"):
     print(f"  25GbE 1d   {p1.summary()}")
     print(f"  25GbE 2d   {p2.summary()} "
           f"({p1.predicted_s / p2.predicted_s:.2f}x)")
+    # Planner v3: joint PP x TMP.  Same spanning regime — the joint search
+    # instead cuts the stack into stages (one per box) and keeps every TMP
+    # ring on the fast intra-node lanes; the NIC carries only the thin
+    # microbatch activations.  On the uniform NVLink box it stays TMP-only.
+    j = plan_joint(cfg, shape, hp, COMMODITY_25GBE, options=(16,))
+    n = plan_joint(cfg, shape, hp, NVLINK_BOX, options=(16,))
+    print(f"  25GbE PPxTMP  {j.summary()} "
+          f"({p2.predicted_s / j.predicted_s:.2f}x vs 2d)")
+    print(f"  NVLink PPxTMP {n.summary()}")

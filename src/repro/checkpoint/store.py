@@ -105,6 +105,39 @@ def restore(ckpt_dir: str, step: int, like_tree, *,
         if arr is None:
             out.append(None)
             continue
+        like_shape = tuple(getattr(like, "shape", arr.shape))
+        if tuple(arr.shape) != like_shape:
+            # same element count, different LEADING stacking only: the
+            # pipeline-stage layout [v, pp, n/S, ...] row-major-flattens to
+            # the canonical [n, ...] layer order (models/params.py), so
+            # PP <-> non-PP elastic re-meshes are a pure reshape.  Require
+            # the per-layer (trailing) dims to match and one side's
+            # remainder to be a single stack dim — anything else (e.g. a
+            # transposed weight from a config edit) must fail loudly, not
+            # restore scrambled.
+            a, b = tuple(arr.shape), like_shape
+
+            def _restack_ok(a, b):
+                # the two valid relations between a leaf's layouts: flat
+                # [n, *w] vs stage-stacked [v, pp, n/S, *w] (rank +2) and
+                # stacked vs stacked with different (pp, v) (equal rank >
+                # 3, same per-layer dims) — a transposed weight matches
+                # neither and fails loudly
+                if len(a) == len(b) + 2:
+                    return a[3:] == b[1:] and \
+                        int(np.prod(a[:3])) == b[0]
+                if len(b) == len(a) + 2:
+                    return _restack_ok(b, a)
+                return (len(a) == len(b) > 3 and a[3:] == b[3:]
+                        and int(np.prod(a[:3])) == int(np.prod(b[:3])))
+
+            if not _restack_ok(a, b):
+                raise ValueError(
+                    f"checkpoint leaf {key} has shape {tuple(arr.shape)}, "
+                    f"restore target wants {like_shape} — not a pipeline-"
+                    f"stage restacking; the checkpoint does not match "
+                    f"this model/mesh")
+            arr = arr.reshape(like_shape)
         if sh is not None:
             out.append(jax.device_put(arr, sh))
         elif hasattr(like, "sharding"):

@@ -215,6 +215,9 @@ class TrainHParams:
     grad_clip: float = 1.0
     zero1: bool = True
     grad_compress: bool = False       # int8 + error feedback on cross-pod axis
-    microbatch: int = 0               # 0 = no accumulation
+    microbatch: int = 0               # 0 = no accumulation; on a pipeline
+    #                                   mesh this is the 1F1B microbatch
+    #                                   count (0 = auto ~2*pp*v)
+    virtual_stages: int = 1           # interleaved-1F1B chunks per device
     use_pallas: bool = False          # swap in TPU Pallas kernels
     loss_chunk: int = 512             # chunked vocab-parallel xent seq chunk

@@ -18,6 +18,11 @@ Three mesh flavours exist:
 
 A per-layer TMP **degree** is either an ``int`` (1D) or an ``(dx, dy)``
 tuple (2D); every axis-algebra entry point accepts both.
+
+Any of these meshes may additionally carry a leading ``pipe`` axis
+(:mod:`repro.core.pipeline`): layer-stack stages shard over it, the batch
+and every TMP collective ignore it, and stage boundaries talk point-to-point
+via ``ppermute``.
 """
 from __future__ import annotations
 
@@ -31,6 +36,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 T_AXES: Tuple[str, ...] = ("t1", "t2", "t3", "t4")
 X_AXIS = "model_x"
 Y_AXIS = "model_y"
+PIPE_AXIS = "pipe"
 
 Degree = Union[int, Tuple[int, int], None]
 
@@ -61,11 +67,18 @@ class MeshInfo:
     mesh: Mesh
     batch_axes: Tuple[str, ...]   # ('pod','data') ∩ mesh axes
     model_axes: Tuple[str, ...]   # ('model',) or a prefix-factorable T_AXES
+    pipe_axes: Tuple[str, ...] = ()   # ('pipe',) when pipeline-parallel
 
     @property
     def tp(self) -> int:
         s = dict(self.mesh.shape)
         return math.prod(s[a] for a in self.model_axes) if self.model_axes else 1
+
+    @property
+    def pp(self) -> int:
+        """Pipeline-parallel degree (number of physical stages)."""
+        s = dict(self.mesh.shape)
+        return math.prod(s[a] for a in self.pipe_axes) if self.pipe_axes else 1
 
     @property
     def dp(self) -> int:
@@ -169,13 +182,15 @@ class MeshInfo:
 def mesh_info(mesh: Mesh) -> MeshInfo:
     names = tuple(mesh.axis_names)
     batch = tuple(a for a in ("pod", "data") if a in names)
+    pipe = tuple(a for a in (PIPE_AXIS,) if a in names)
     if "model" in names:
         model: Tuple[str, ...] = ("model",)
     elif X_AXIS in names or Y_AXIS in names:
         model = tuple(a for a in (X_AXIS, Y_AXIS) if a in names)
     else:
         model = tuple(a for a in T_AXES if a in names)
-    return MeshInfo(mesh=mesh, batch_axes=batch, model_axes=model)
+    return MeshInfo(mesh=mesh, batch_axes=batch, model_axes=model,
+                    pipe_axes=pipe)
 
 
 def batch_pspec(info: MeshInfo, global_batch: int,

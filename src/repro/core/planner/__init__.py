@@ -2,10 +2,14 @@ from repro.core.planner.costmodel import (COMMODITY_25GBE, HWConfig,
                                           NVLINK_BOX, V5E,
                                           estimate_iteration, layer_blocks,
                                           node_costs, overlapped_time,
-                                          overlapped_time_2d)
-from repro.core.planner.ilp import PlanResult, expand_options, plan
+                                          overlapped_time_2d,
+                                          p2p_hop_seconds, pipeline_time,
+                                          stage_hw)
+from repro.core.planner.ilp import (JointPlanResult, PlanResult,
+                                    expand_options, plan, plan_joint)
 
 __all__ = ["COMMODITY_25GBE", "HWConfig", "NVLINK_BOX", "V5E",
            "estimate_iteration", "layer_blocks", "node_costs",
-           "overlapped_time", "overlapped_time_2d", "PlanResult",
-           "expand_options", "plan"]
+           "overlapped_time", "overlapped_time_2d", "p2p_hop_seconds",
+           "pipeline_time", "stage_hw", "JointPlanResult", "PlanResult",
+           "expand_options", "plan", "plan_joint"]

@@ -64,6 +64,73 @@ class HWConfig:
         ns = self.node_size or self.n_chips
         return self.bw_x if degree <= ns else self.bw_y
 
+    @classmethod
+    def from_measurements(cls, *, max_devices: int = 8,
+                          matmul_dim: int = 1024, ring_bytes: int = 1 << 22,
+                          repeats: int = 5, **overrides) -> "HWConfig":
+        """Profile-guided calibration: short on-device micro-benches fill
+        the roofline terms this model otherwise takes on faith —
+
+        * a square matmul for ``peak_flops`` (achievable, so
+          ``mxu_base_eff`` is folded in and reset to 1.0),
+        * a large elementwise op for ``hbm_bw``,
+        * a ring AllReduce over the local devices for ``link_bw`` (and the
+          per-axis ``link_bw_x``/``link_bw_y`` defaults; single-device
+          hosts keep the configured link numbers).
+
+        Keyword ``overrides`` win over measurements — calibrate the chip,
+        keep the cluster description (``node_size``, ``link_bw_y``...).
+        Surfaced as ``--calibrate`` on ``examples/planner_demo.py`` and
+        ``launch/dryrun.py``.
+        """
+        import time as _time
+
+        import jax
+        import jax.numpy as jnp
+
+        devs = jax.devices()[:max_devices]
+
+        def _best(fn, *args):
+            fn(*args)                      # compile + warm
+            best = float("inf")
+            for _ in range(max(repeats, 1)):
+                t0 = _time.perf_counter()
+                jax.block_until_ready(fn(*args))
+                best = min(best, _time.perf_counter() - t0)
+            return best
+
+        d = matmul_dim
+        x = jnp.ones((d, d), jnp.float32)
+        t_mm = _best(jax.jit(lambda a: a @ a), x)
+        flops = 2.0 * d * d * d / max(t_mm, 1e-9)
+
+        big = jnp.ones((1 << 22,), jnp.float32)
+        t_cp = _best(jax.jit(lambda a: a * 2.0 + 1.0), big)
+        hbm = 2.0 * big.size * 4 / max(t_cp, 1e-9)      # read + write
+
+        fields = dict(n_chips=len(devs), peak_flops=flops, hbm_bw=hbm,
+                      mxu_base_eff=1.0, node_size=len(devs))
+        if len(devs) > 1:
+            from jax.sharding import PartitionSpec as P
+
+            from repro.core import compat
+            n = len(devs)
+            mesh = compat.make_mesh((n,), ("ring",),
+                                    axis_types=compat.auto_axis_types(1))
+            elems = max(ring_bytes // 4, n)
+            arr = jnp.ones((elems // n * n,), jnp.float32)
+            f = compat.shard_map(lambda a: jax.lax.psum(a, ("ring",)),
+                                 mesh=mesh, in_specs=P("ring"),
+                                 out_specs=P("ring"))
+            with compat.set_mesh(mesh):
+                t_ar = _best(jax.jit(f), arr)
+            # each chip holds a 1/n shard of the input (in_specs=P("ring"))
+            # and a ring AllReduce moves 2(n-1)/n of ITS payload
+            bw = (arr.size * 4 / n) * 2.0 * (n - 1) / n / max(t_ar, 1e-9)
+            fields.update(link_bw=bw, link_bw_x=bw, link_bw_y=bw)
+        fields.update(overrides)
+        return cls(**fields)
+
 
 V5E = HWConfig()
 
@@ -339,10 +406,16 @@ def edge_cost(cfg: ArchConfig, shape: ShapeConfig, hw: HWConfig,
 
 def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                        degrees: Sequence, hw: HWConfig = V5E,
-                       options: Sequence = (2, 4, 8, 16)) -> Dict:
+                       options: Sequence = (2, 4, 8, 16),
+                       stages: int = 1) -> Dict:
     """Evaluate f(s) (Eq. 3–5) for a concrete per-layer strategy (entries
     int or ``(dx, dy)``).  Also the cost model used by benchmarks/fig6
-    (Spearman vs measured)."""
+    (Spearman vs measured).  ``stages`` > 1: each chip holds only 1/stages
+    of the layer stack (pipeline parallelism), scaling the per-layer
+    WEIGHT/optimizer memory; saved activations do NOT shrink — a 1F1B
+    stage keeps up to min(stages, n_micro) microbatches' residuals in
+    flight, which cancels the layer reduction (see
+    :func:`pipeline_mem_terms`)."""
     blocks = layer_blocks(cfg, shape)
     options = list(options)
     for d in degrees:                      # tolerate degrees ∉ options
@@ -398,9 +471,10 @@ def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
             t_e += edge_cost(cfg, shape, hw, n1, n2, seq[a][0], seq[a][1],
                              seq[a + 1][1]) * 2  # fwd + bwd reshard
     # memory (Eq. 6)
+    s_scale, t_scale = pipeline_mem_scales(stages, hp.microbatch)
     mem = 0.0
     for nc, j, n in seq:
-        mem += nc.mem_s[j] + nc.mem_t[j]
+        mem += nc.mem_s[j] * s_scale + nc.mem_t[j] * t_scale
     vp = cfg.padded_vocab()
     last = max(_dtot(degrees[-1]), 1)
     head = vp * cfg.d_model * (2.0 / last) * (1 if cfg.tie_embeddings else 2)
@@ -412,3 +486,68 @@ def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     return {"iter_s": total, "fwd_s": t_f, "bwd_s": t_b, "edge_s": t_e,
             "mem_bytes": mem, "fits": mem < hw.hbm_cap,
             "tokens_per_s": shape.global_batch * shape.seq_len / total}
+
+
+# --------------------------------------------------------------------------
+# pipeline-parallel composition (PP x TMP, Megatron/AMP-style)
+# --------------------------------------------------------------------------
+def pipeline_mem_scales(stages: int, n_micro: int) -> Tuple[float, float]:
+    """Per-stage scaling of the Eq. 6 memory terms: weights/optimizer state
+    (mem_s) shrink 1/stages, but live activations (mem_t) do not — a 1F1B
+    stage holds up to min(stages, n_micro) in-flight microbatches, which
+    cancels the 1/stages layer reduction.  Returns (s_scale, t_scale)."""
+    s = max(stages, 1)
+    in_flight = min(s, n_micro) if n_micro > 0 else s
+    return 1.0 / s, in_flight / s
+
+
+def stage_hw(hw: HWConfig, pp: int) -> HWConfig:
+    """The hardware slice one pipeline stage owns: n_chips/pp chips with
+    the same node topology — a stage that fits inside one node keeps every
+    TMP ring on the fast intra-node lanes, which is the whole point of
+    placing PP across boxes on commodity clusters."""
+    import dataclasses
+    return dataclasses.replace(hw, n_chips=max(hw.n_chips // pp, 1))
+
+
+def p2p_hop_seconds(cfg: ArchConfig, shape: ShapeConfig, hw: HWConfig,
+                    pp: int, n_micro: int, degree=1) -> float:
+    """One microbatch's activation transfer across one stage boundary.
+
+    Activations are replicated over the stage's TMP group and sharded over
+    its data axes, so each chip ships its dp-shard of the microbatch's
+    [mb, s, d] tensor to its peer in the next stage.  The hop rides the
+    inter-node links when stages occupy whole nodes, the intra-node lanes
+    when several stages share one."""
+    chips = max(hw.n_chips // max(pp, 1), 1)
+    ns = hw.node_size or hw.n_chips
+    bw = hw.bw_y if chips >= ns else hw.bw_x
+    dp = max(chips // max(_dtot(degree), 1), 1)
+    mb_tokens = shape.global_batch * shape.seq_len / max(n_micro, 1)
+    return (mb_tokens / dp) * cfg.d_model * hw.bytes_act / bw \
+        + hw.comm_latency
+
+
+def pipeline_time(t_tmp: float, pp: int, n_micro: int,
+                  virtual_stages: int = 1,
+                  t_hop: float = 0.0) -> Tuple[float, float, float]:
+    """Compose a full-stack TMP iteration time (modeled on one stage's
+    chips — :func:`stage_hw`) into the interleaved-1F1B estimate.
+
+    Each stage is busy ``t_tmp / pp`` per iteration; the fill/drain bubble
+    adds ``(pp-1)/v`` microbatch slots; P2P transfers expose the fill/drain
+    hops (fwd + bwd) on the critical path plus whatever part of each
+    steady-state hop the next microbatch's compute cannot hide.  Returns
+    ``(total_s, bubble_fraction, p2p_s)``; degenerates to
+    ``(t_tmp, 0, 0)`` at pp == 1.
+    """
+    if pp <= 1:
+        return t_tmp, 0.0, 0.0
+    m = max(n_micro, 1)
+    v = max(virtual_stages, 1)
+    t_mb = t_tmp / (pp * m)              # per-stage per-microbatch slot
+    bubble = (pp - 1) * t_mb / v
+    p2p = 2.0 * (pp - 1) * t_hop \
+        + 2.0 * max(m - 1, 0) * max(t_hop - t_mb, 0.0)
+    total = t_tmp / pp + bubble + p2p
+    return total, bubble / total if total else 0.0, p2p

@@ -91,11 +91,16 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
          options: Sequence[int] = (2, 4, 8, 16),
          mem_cap: Optional[float] = None,
          time_limit: float = 20.0,
-         layout: str = "1d") -> PlanResult:
+         layout: str = "1d",
+         stages: int = 1) -> PlanResult:
     """``layout`` is the explicit search-space knob (it deliberately does
     NOT read ``hp.tmp_layout``, which governs the *execution* layout and
     defaults to mesh-following 'auto'): '1d' preserves the paper's search
-    space; pass '2d' or 'auto' to enable hybrid partitions."""
+    space; pass '2d' or 'auto' to enable hybrid partitions.  ``stages``:
+    pipeline-stage count — weight/optimizer rows of Eq. 6 scale 1/stages
+    (each chip holds that fraction of the layers) while live activations
+    keep their in-flight-microbatch factor (costmodel.pipeline_mem_scales;
+    used by :func:`plan_joint`)."""
     t0 = time.time()
     options = expand_options(cfg, hw, options, layout)
     L = cfg.num_layers
@@ -118,12 +123,13 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     # block's compute), matching estimate_iteration — aggregating d/c
     # first and applying max{} after would understate comm-bound layers
     fused_f = np.zeros((L, P)); fused_b = np.zeros((L, P))
+    s_sc, t_sc = cm.pipeline_mem_scales(stages, hp.microbatch)
     for i, layer in enumerate(blocks):
         for blk in layer:
             nc = cm.node_costs(cfg, blk, shape, hp, hw, options)
             d_f[i] += nc.d_f; c_f[i] += nc.c_f
             d_b[i] += nc.d_b; c_b[i] += nc.c_b
-            mem[i] += np.array(nc.mem_s) + np.array(nc.mem_t)
+            mem[i] += np.array(nc.mem_s) * s_sc + np.array(nc.mem_t) * t_sc
             if fused:
                 for j in range(P):
                     dx_j, _ = cm._dxy(options[j])
@@ -273,3 +279,176 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     est = cm.estimate_iteration(cfg, shape, hp, degrees, hw, options)
     return PlanResult(degrees, est["iter_s"], solve_ms,
                       str(res.status), _runs(degrees))
+
+
+# --------------------------------------------------------------------------
+# joint PP x TMP search (the pipeline axis of core/pipeline.py)
+# --------------------------------------------------------------------------
+@dataclass
+class JointPlanResult:
+    pp: int                                # pipeline stages (1 = TMP-only)
+    n_micro: int                           # 1F1B microbatch count
+    virtual_stages: int
+    degrees: List[object]                  # per-layer TMP degrees per stage
+    predicted_s: float                     # composed pipeline iteration time
+    tmp_s: float                           # the stage-internal TMP time
+    bubble_fraction: float
+    p2p_s: float
+    mem_bytes: float
+    fits: bool
+    tmp_only_s: float                      # best pp=1 candidate (baseline)
+    solve_ms: float
+    status: str
+    groups: List[Tuple[object, int]]
+
+    def summary(self) -> str:
+        runs = " + ".join(f"[{_fmt_degree(d)}] * {n}"
+                          for d, n in self.groups)
+        return (f"pp={self.pp} x [{runs}] m={self.n_micro} "
+                f"v={self.virtual_stages} predicted "
+                f"{self.predicted_s*1e3:.1f} ms/iter (bubble "
+                f"{self.bubble_fraction*100:.1f}%, p2p "
+                f"{self.p2p_s*1e3:.2f} ms; tmp-only "
+                f"{self.tmp_only_s*1e3:.1f} ms; {self.status})")
+
+
+def _default_pp_options(cfg: ArchConfig, hw: cm.HWConfig,
+                        virtual_stages: int = 1) -> List[int]:
+    """Power-of-two stage counts that divide both the chips and the
+    EXECUTABLE layer unit — the scan-group count num_layers/|pattern|
+    (models/params.stack_layout), which is what
+    core/pipeline.validate_stage_layout enforces at training time — capped
+    at 8 (deeper pipes need more microbatches than the Eq. 3 shapes
+    carry)."""
+    v = max(virtual_stages, 1)
+    pat = max(len(cfg.layer_pattern), 1)
+    groups = cfg.num_layers // pat if cfg.num_layers % pat == 0 else 0
+    out = [1]
+    p = 2
+    while p <= min(hw.n_chips // 2, 8):
+        if hw.n_chips % p == 0 and groups and groups % (p * v) == 0:
+            out.append(p)
+        p *= 2
+    return out
+
+
+def _default_microbatch_options(pp: int, v: int,
+                                shape: ShapeConfig) -> List[int]:
+    """Candidate 1F1B microbatch counts: pp..8*pp*v, divisors of the
+    global batch (more microbatches shrink the bubble; fewer keep each
+    matmul fat — the search arbitrates via the cost model)."""
+    if pp == 1:
+        return [0]                        # resolve_hp semantics (auto)
+    out = [m for m in (pp, 2 * pp, 4 * pp * v, 8 * pp * v)
+           if m <= shape.global_batch and shape.global_batch % m == 0]
+    seen: List[int] = []
+    for m in out:
+        if m not in seen:
+            seen.append(m)
+    if seen:
+        return seen
+    # no power-of-two-ish candidate divides the batch: fall back to the
+    # largest divisor <= pp so the winning plan stays executable
+    # (resolve_microbatch rejects non-divisors at training time)
+    m = min(pp, shape.global_batch)
+    while m > 1 and shape.global_batch % m:
+        m -= 1
+    return [m]
+
+
+def plan_joint(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
+               hw: cm.HWConfig = cm.V5E,
+               options: Sequence[int] = (2, 4, 8, 16),
+               mem_cap: Optional[float] = None,
+               time_limit: float = 20.0,
+               layout: str = "auto",
+               pp_options: Optional[Sequence[int]] = None,
+               virtual_stages: int = 1) -> JointPlanResult:
+    """Joint (pp, per-stage TMP degrees, microbatch count) search.
+
+    ``options`` name the TOTAL model-parallel capacity exactly as in
+    :func:`plan` — a pp-stage candidate searches per-stage TMP degrees
+    ``option / pp``, which hold per-chip weight memory constant across
+    candidates (a stage owns 1/pp of the layers), so ``options=(16,)``
+    expresses the same "weights must spread over 16 chips" regime whether
+    the spread is one 16-way ring or 2 stages x 8-way rings.
+
+    For every candidate stage count the per-layer TMP ILP runs on the
+    *stage's* hardware slice (n_chips/pp chips, same node topology), then
+    the pipeline-bubble + P2P terms compose the stage time into an
+    iteration estimate (:func:`costmodel.pipeline_time`).  On commodity
+    fixtures this is the AMP decision: stages across boxes (activations,
+    thin) x TMP within a box (weight collectives, fat); on a uniform
+    NVLink box the bubble buys nothing and the search stays TMP-only.
+    Ties break toward lower pp, then fewer microbatches.
+    """
+    import dataclasses as _dc
+    t0 = time.time()
+    cap = mem_cap if mem_cap is not None else hw.hbm_cap
+    v = max(virtual_stages, 1)
+    pps = list(pp_options) if pp_options is not None \
+        else _default_pp_options(cfg, hw, v)
+    candidates: List[JointPlanResult] = []
+    # (pp, m, opts) worklist first, so the per-ILP budget spreads
+    # time_limit across ALL solves (floored at 1 s each — HiGHS under a
+    # sub-second cap returns junk incumbents, so a long worklist can
+    # overrun a very small time_limit by up to len(work) seconds)
+    work: List[Tuple[int, int, List[int]]] = []
+    for pp in pps:
+        chips = max(hw.n_chips // pp, 1)
+        # clamp (not filter) to the stage's chip count so tiny hosts —
+        # e.g. a 1-device --calibrate run — still get a plan
+        opts = sorted({min(max(int(n) // pp, 1), chips) for n in options})
+        if not opts:
+            continue
+        for m in _default_microbatch_options(pp, v, shape):
+            work.append((pp, m, opts))
+            if pp == 1:
+                break                      # microbatch=auto covers pp=1
+    per_solve = max(time_limit / max(len(work), 1), 1.0)
+    for pp, m, opts in work:
+        hw_s = cm.stage_hw(hw, pp)
+        hp_m = _dc.replace(hp, microbatch=m,
+                           virtual_stages=v if pp > 1 else 1)
+        pr = plan(cfg, shape, hp_m, hw_s, options=opts,
+                  mem_cap=cap, time_limit=per_solve, layout=layout,
+                  stages=pp)
+        deg_max = max(cm._dtot(d) for d in pr.degrees)
+        # executability: the runtime (pipeline.resolve_microbatch) needs
+        # n_micro to divide the PER-SHARD batch under this plan's dp, not
+        # just the global batch — clamp to the largest dividing count
+        dp = max((hw.n_chips // pp) // max(deg_max, 1), 1)
+        local = max(shape.global_batch // dp, 1)
+        n_micro = min(max(m, 1), local)
+        while n_micro > 1 and local % n_micro:
+            n_micro -= 1
+        if n_micro != max(m, 1):
+            # the candidate's costs must describe the clamped count, not
+            # the one the ILP was seeded with
+            hp_m = _dc.replace(hp_m, microbatch=n_micro)
+        est = cm.estimate_iteration(cfg, shape, hp_m, pr.degrees,
+                                    hw_s, opts, stages=pp)
+        t_hop = cm.p2p_hop_seconds(cfg, shape, hw, pp, n_micro,
+                                   deg_max) if pp > 1 else 0.0
+        total, bfrac, p2p = cm.pipeline_time(est["iter_s"], pp,
+                                             n_micro, v, t_hop)
+        candidates.append(JointPlanResult(
+            pp=pp, n_micro=n_micro,
+            virtual_stages=v if pp > 1 else 1,
+            degrees=pr.degrees, predicted_s=total,
+            tmp_s=est["iter_s"], bubble_fraction=bfrac, p2p_s=p2p,
+            mem_bytes=est["mem_bytes"],
+            fits=est["mem_bytes"] < cap,
+            tmp_only_s=0.0, solve_ms=0.0, status=pr.status,
+            groups=pr.groups))
+    if not candidates:
+        raise ValueError(
+            f"no feasible (pp, degree) candidates for {cfg.name} on "
+            f"{hw.n_chips} chips with options {tuple(options)}")
+    fitting = [c for c in candidates if c.fits] or candidates
+    best = min(fitting, key=lambda c: (c.predicted_s, c.pp, c.n_micro))
+    tmp_only = [c for c in candidates if c.pp == 1]
+    best.tmp_only_s = min(c.predicted_s for c in tmp_only) if tmp_only \
+        else float("inf")
+    best.solve_ms = (time.time() - t0) * 1e3
+    return best

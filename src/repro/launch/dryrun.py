@@ -40,22 +40,17 @@ def model_flops_per_chip(cfg, shape, n_chips: int) -> float:
 
 
 def parse_degrees(spec: str):
-    """'8,4x2,16' -> [8, (4, 2), 16]: per-layer TMP degrees, 'AxB' = 2D."""
-    out = []
-    for tok in spec.split(","):
-        if "x" in tok:
-            dx, dy = tok.split("x")
-            out.append((int(dx), int(dy)))
-        else:
-            out.append(int(tok))
-    return out
+    """'8,4x2,16' -> [8, (4, 2), 16] (validated; see launch/mesh.py)."""
+    from repro.launch.mesh import parse_degrees as _parse
+    return _parse(spec)
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              schedule: str = "oases", fine_remat: bool = True,
              planner_degrees=None, seq_parallel: bool = False,
              split: int = 2, microbatch: int = 0,
-             mesh_shape: str = "", tmp_layout: str = "auto") -> dict:
+             mesh_shape: str = "", tmp_layout: str = "auto",
+             pp: int = 1, virtual_stages: int = 1, hw=None) -> dict:
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     rec = {
@@ -63,7 +58,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         "mesh": "multi" if multi_pod else "single",
         "schedule": schedule, "fine_remat": fine_remat,
         "planner": planner_degrees is not None,
-        "tmp_layout": tmp_layout,
+        "tmp_layout": tmp_layout, "pp": pp,
     }
     if shape.name not in {s.name for s in applicable_shapes(cfg)}:
         rec["status"] = "SKIP"
@@ -74,19 +69,43 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     if mesh_shape:
         # hillclimb lever: reshape the 256 chips (e.g. "32x8" = more DP,
-        # less TMP; "16x8x2" = a 2D hybrid model grid). The baseline table
-        # always uses the 16x16 mesh.
+        # less TMP; "16x8x2" = a 2D hybrid model grid; --pp prepends the
+        # pipeline stage axis). The baseline table always uses 16x16.
         from repro.launch.mesh import parse_mesh_shape
-        mesh = parse_mesh_shape(mesh_shape)
+        mesh = parse_mesh_shape(mesh_shape, pp=pp)
         rec["mesh_shape"] = mesh_shape
+    elif pp > 1:
+        from repro.launch.mesh import make_pipeline_mesh
+        # 256 chips: pp stages x dp x 16-way TMP
+        if 256 % (pp * 16):
+            raise ValueError(
+                f"--pp {pp} does not divide the 256-chip production mesh "
+                f"(pp x 16-way TMP must divide 256 — pick pp in "
+                f"1/2/4/8/16, or pass an explicit --mesh-shape)")
+        mesh = make_pipeline_mesh(pp, 256 // (pp * 16), 16)
     else:
         mesh = (make_factored_mesh(multi_pod=multi_pod) if planner_degrees
                 else make_production_mesh(multi_pod=multi_pod))
     info = mesh_info(mesh)
     hp = TrainHParams(schedule=schedule, fine_remat=fine_remat,
                       seq_parallel=seq_parallel, split=split,
-                      microbatch=microbatch, tmp_layout=tmp_layout)
+                      microbatch=microbatch, tmp_layout=tmp_layout,
+                      virtual_stages=virtual_stages)
     rec["microbatch"] = microbatch
+    if hw is not None and shape.kind == "train":
+        # profile-guided planning: feed the calibrated chip numbers to the
+        # joint PP x TMP search and record its decision next to the
+        # measured-HLO terms of this cell
+        from repro.core.planner import plan_joint
+        jp = plan_joint(cfg, shape, hp, hw, virtual_stages=virtual_stages)
+        rec["calibrated_joint_plan"] = {
+            "pp": jp.pp, "n_micro": jp.n_micro,
+            "degrees": [list(d) if isinstance(d, tuple) else d
+                        for d in jp.degrees],
+            "predicted_ms": round(jp.predicted_s * 1e3, 3),
+            "bubble_fraction": round(jp.bubble_fraction, 4),
+        }
+        print(f"calibrated joint plan: {jp.summary()}")
     inputs = input_specs(cfg, shape, mesh, hp, degrees=planner_degrees)
     fn = step_fn_for(cfg, shape, mesh, hp, degrees=planner_degrees)
     # donate params+opt (train) / kv-cache (decode): buffers alias in place
@@ -207,9 +226,19 @@ def main():
                     choices=["auto", "1d", "2d"],
                     help="partition layout (1d classic / 2d hybrid / auto)")
     ap.add_argument("--microbatch", type=int, default=0,
-                    help="force gradient-accumulation count (0 = auto)")
+                    help="force gradient-accumulation / 1F1B microbatch "
+                         "count (0 = auto)")
     ap.add_argument("--mesh-shape", default="",
                     help="override single-pod mesh, e.g. 32x8")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline-parallel stages (prepends a 'pipe' "
+                         "axis to the mesh)")
+    ap.add_argument("--virtual-stages", type=int, default=1,
+                    help="interleaved-1F1B virtual stages per device")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run on-device micro-benches and print the "
+                         "calibrated planner HWConfig "
+                         "(HWConfig.from_measurements)")
     ap.add_argument("--sweep", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--timeout", type=int, default=2400)
@@ -221,6 +250,14 @@ def main():
         _sweep(args)
         return
 
+    hw_cal = None
+    if args.calibrate:
+        import dataclasses as _dc
+        from repro.core.planner.costmodel import HWConfig
+        hw_cal = HWConfig.from_measurements()
+        print("calibrated HWConfig (profile-guided planner inputs):")
+        print(json.dumps(_dc.asdict(hw_cal), indent=1))
+
     degrees = parse_degrees(args.degrees) if args.degrees else None
     meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
     for m in meshes:
@@ -231,7 +268,10 @@ def main():
                            seq_parallel=args.seq_parallel,
                            microbatch=args.microbatch,
                            mesh_shape=args.mesh_shape,
-                           tmp_layout=args.tmp_layout)
+                           tmp_layout=args.tmp_layout,
+                           pp=args.pp,
+                           virtual_stages=args.virtual_stages,
+                           hw=hw_cal)
         except Exception:
             rec = {"arch": args.arch, "shape": args.shape, "mesh": m,
                    "schedule": args.schedule, "status": "ERROR",

@@ -42,14 +42,98 @@ def make_2d_mesh(data: int, dx: int, dy: int):
     return _mk((data, dx, dy), ("data", "model_x", "model_y"))
 
 
-def parse_mesh_shape(spec: str):
-    """'dxm' -> 1D ('data','model'); 'dxm1xm2' -> 2D mesh."""
-    parts = [int(x) for x in spec.split("x")]
-    if len(parts) == 2:
-        return _mk(tuple(parts), ("data", "model"))
-    if len(parts) == 3:
-        return make_2d_mesh(*parts)
-    raise ValueError(f"mesh spec must be dxm or dxmxm2, got {spec!r}")
+def make_pipeline_mesh(pp: int, data: int, model: int):
+    """``('pipe','data','model')`` — pipeline stages outermost (on
+    commodity clusters the stage boundaries ride the thin inter-node
+    links), TMP innermost on the fast lanes."""
+    return _mk((pp, data, model), ("pipe", "data", "model"))
+
+
+_MESH_HELP = ("expected 'DxM' (data x model, e.g. '32x8') or 'DxMxxMy' "
+              "(2D hybrid, e.g. '16x8x2'); a pipeline axis is prepended "
+              "with pp= / --pp, giving PxDxM")
+
+
+def parse_mesh_spec(spec: str, *, pp: int = 0):
+    """Pure parser (no device construction): ``spec`` -> (shape, axes).
+
+    Friendly-errors every malformed form instead of crashing deep in mesh
+    construction: non-integer components, wrong component counts, and bad
+    pipeline degrees all name the offending token and the accepted grammar.
+    """
+    parts = [t.strip() for t in str(spec).split("x")]
+    shape = []
+    for tok in parts:
+        if not tok.isdigit() or int(tok) <= 0:
+            raise ValueError(
+                f"bad mesh spec {spec!r}: component {tok!r} is not a "
+                f"positive integer — {_MESH_HELP}")
+        shape.append(int(tok))
+    if len(shape) == 2:
+        axes = ("data", "model")
+    elif len(shape) == 3:
+        axes = ("data", "model_x", "model_y")
+    else:
+        raise ValueError(
+            f"bad mesh spec {spec!r}: {len(shape)} component(s) — "
+            f"{_MESH_HELP}")
+    if pp:
+        if not isinstance(pp, int) or pp < 1:
+            raise ValueError(
+                f"bad pipeline degree pp={pp!r}: must be a positive int")
+        if pp > 1:
+            shape = [pp] + shape
+            axes = ("pipe",) + axes
+    return tuple(shape), axes
+
+
+def parse_mesh_shape(spec: str, *, pp: int = 0):
+    """'dxm' -> 1D ('data','model'); 'dxm1xm2' -> 2D mesh; ``pp > 1``
+    prepends a 'pipe' axis (PxDxM)."""
+    shape, axes = parse_mesh_spec(spec, pp=pp)
+    return _mk(shape, axes)
+
+
+def parse_degrees(spec: str):
+    """'8,4x2,16' -> [8, (4, 2), 16]: per-layer TMP degrees, 'AxB' = 2D.
+
+    Validates every token up front (positive power-of-two components) so a
+    typo'd plan fails with the grammar instead of a deep axis-algebra
+    crash."""
+    def _pow2(tok: str, n: int) -> int:
+        if n <= 0 or n & (n - 1):
+            raise ValueError(
+                f"bad degree spec {spec!r}: component {tok!r} — TMP "
+                f"degrees must be positive powers of two (paper §4.2)")
+        return n
+
+    def _int(tok: str, part: str) -> int:
+        if not part.isdigit():
+            raise ValueError(
+                f"bad degree spec {spec!r}: component {tok!r} is not a "
+                f"degree — expected comma-separated entries 'N' (1D) or "
+                f"'AxB' (2D), e.g. '8,4x2,16'")
+        return int(part)
+
+    out = []
+    for tok in (t.strip() for t in str(spec).split(",")):
+        if "x" in tok:
+            parts = tok.split("x")
+            if len(parts) != 2:
+                raise ValueError(
+                    f"bad degree spec {spec!r}: 2D entry {tok!r} must be "
+                    f"exactly 'AxB', e.g. '4x2'")
+            out.append((_pow2(tok, _int(tok, parts[0])),
+                        _pow2(tok, _int(tok, parts[1]))))
+        elif tok:
+            out.append(_pow2(tok, _int(tok, tok)))
+        else:
+            raise ValueError(
+                f"bad degree spec {spec!r}: empty entry — expected "
+                f"comma-separated 'N' or 'AxB' tokens, e.g. '8,4x2,16'")
+    if not out:
+        raise ValueError(f"bad degree spec {spec!r}: no entries")
+    return out
 
 
 def make_smoke_mesh(devices=None):

@@ -53,21 +53,46 @@ def resolve_hp(hp: TrainHParams, shape_kind: str, global_batch: int,
     return hp
 
 
+def resolve_for_mesh(cfg: ArchConfig, info, hp: TrainHParams,
+                     global_batch: int, seq_len: int,
+                     degrees=None) -> TrainHParams:
+    """One resolution used by build_train_step, the abstract-input builder
+    and the Trainer so they always agree on the microbatch semantics.
+
+    On a pipeline mesh ``hp.microbatch`` becomes the 1F1B microbatch count
+    (gradient accumulation is folded into the schedule — no outer loop);
+    otherwise the classic gradient-accumulation auto-sizing applies."""
+    import dataclasses
+    from repro.core import pipeline as pl
+    if info.pp > 1:
+        if degrees is not None:
+            raise ValueError(
+                "per-layer planner degrees do not compose with pipeline "
+                "parallelism yet — drop degrees= or the 'pipe' mesh axis")
+        n_micro = pl.resolve_microbatch(
+            max(global_batch // max(info.dp, 1), 1), info.pp,
+            max(hp.virtual_stages, 1), hp.microbatch)
+        return dataclasses.replace(hp, microbatch=n_micro,
+                                   seq_parallel=False)
+    dp_eff = info.dp * (info.tp // _min_degree(degrees)) if degrees \
+        else info.dp
+    return resolve_hp(hp, "train", global_batch, dp_eff, seq_len=seq_len,
+                      d_model=cfg.d_model, num_layers=cfg.num_layers,
+                      tp=info.tp)
+
+
 def build_train_step(cfg: ArchConfig, mesh, hp: TrainHParams, *,
                      global_batch: int, seq_len: int,
                      degrees: Optional[Sequence[int]] = None):
     """returns (train_step(params, opt_state, batch) ->
                 (params, opt_state, metrics), specs)."""
     info = mesh_info(mesh)
-    # planner mode: low-degree layers reuse model sub-axes as extra data
-    # parallelism, so the effective dp (and the per-chip batch the
-    # microbatcher sees) is set by the SMALLEST degree in the plan
-    dp_eff = info.dp * (info.tp // _min_degree(degrees)) if degrees else info.dp
-    hp = resolve_hp(hp, "train", global_batch, dp_eff, seq_len=seq_len,
-                    d_model=cfg.d_model, num_layers=cfg.num_layers,
-                    tp=info.tp)
-    micro_b = global_batch // hp.microbatch if hp.microbatch > 1 \
-        else global_batch
+    hp = resolve_for_mesh(cfg, info, hp, global_batch, seq_len, degrees)
+    # pipeline mode: the microbatch loop IS the 1F1B schedule, folded into
+    # loss_fn — the step sees the full batch and a single value_and_grad
+    pipelined = info.pp > 1
+    micro_b = global_batch // hp.microbatch \
+        if (hp.microbatch > 1 and not pipelined) else global_batch
     loss_fn, specs, _ = lm.build_train_loss(
         cfg, mesh, hp, global_batch=micro_b, seq_len=seq_len,
         degrees=degrees)
@@ -92,7 +117,7 @@ def build_train_step(cfg: ArchConfig, mesh, hp: TrainHParams, *,
             .astype(jnp.float32), g, g_shardings)
 
     def train_step(params, opt_state, batch):
-        if hp.microbatch and hp.microbatch > 1:
+        if hp.microbatch and hp.microbatch > 1 and not pipelined:
             # gradient accumulation: batch arrives pre-shaped
             # [n_micro, B/n, ...] with the batch dim sharded on axis 1, so
             # indexing axis 0 never reshards.
@@ -134,15 +159,14 @@ def train_abstract_inputs(cfg: ArchConfig, mesh, hp: TrainHParams, *,
     With gradient accumulation the batch arrives pre-shaped
     [n_micro, B/n, ...], batch dim sharded on axis 1."""
     info = mesh_info(mesh)
-    dp_eff = info.dp * (info.tp // _min_degree(degrees)) if degrees else info.dp
-    hp = resolve_hp(hp, "train", global_batch, dp_eff, seq_len=seq_len,
-                    d_model=cfg.d_model, num_layers=cfg.num_layers,
-                    tp=info.tp)
+    hp = resolve_for_mesh(cfg, info, hp, global_batch, seq_len, degrees)
     specs = prm.model_specs(cfg, info, degrees=degrees, max_pos=seq_len,
-                            layout=hp.tmp_layout)
+                            layout=hp.tmp_layout,
+                            virtual_stages=hp.virtual_stages)
     params = prm.abstract_params(specs, mesh)
     opt_state = adamw.abstract_opt_state(specs, info, mesh, zero1=hp.zero1)
-    n = hp.microbatch if hp.microbatch > 1 else 1
+    # pipeline meshes take the flat batch; 1F1B slices microbatches itself
+    n = hp.microbatch if (hp.microbatch > 1 and info.pp == 1) else 1
     micro_b = global_batch // n
     bp = batch_pspec(info, micro_b)
     lead = (n,) if n > 1 else ()

@@ -32,6 +32,14 @@ def main():
                     help="partition layout: 1d (classic), 2d (hybrid "
                          "model_x*model_y), auto (follow the mesh; the "
                          "planner searches both spaces)")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline-parallel stages (prepends a 'pipe' mesh "
+                         "axis; composes with --mesh dxm specs)")
+    ap.add_argument("--virtual-stages", type=int, default=1,
+                    help="interleaved-1F1B virtual stages per device")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="1F1B microbatch count / grad-accumulation steps "
+                         "(0 = auto)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -52,16 +60,30 @@ def main():
     from repro.configs.base import TrainHParams
     from repro.configs.registry import get_config
     from repro.core.axes import mesh_info
-    from repro.launch.mesh import (make_factored_mesh, make_production_mesh,
-                                   make_smoke_mesh, parse_mesh_shape)
+    from repro.launch.mesh import (make_factored_mesh, make_pipeline_mesh,
+                                   make_production_mesh, make_smoke_mesh,
+                                   parse_mesh_shape)
     from repro.runtime import Trainer
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced().replace(dtype="float32")
 
+    pp = max(args.pp, 1)
+    if pp > 1 and args.mesh in ("production", "multipod", "factored"):
+        raise SystemExit(
+            f"--pp does not compose with --mesh {args.mesh} yet — use an "
+            f"explicit 'dxm' spec (e.g. --pp {pp} --mesh 8x16) or "
+            f"--mesh auto")
     if args.mesh == "auto":
-        mesh = make_smoke_mesh()
+        if pp > 1:
+            n = len(jax.devices())
+            if n % pp:
+                raise SystemExit(f"--pp {pp} does not divide the "
+                                 f"{n} available devices")
+            mesh = make_pipeline_mesh(pp, max(n // pp, 1), 1)
+        else:
+            mesh = make_smoke_mesh()
     elif args.mesh == "production":
         mesh = make_production_mesh()
     elif args.mesh == "multipod":
@@ -69,13 +91,16 @@ def main():
     elif args.mesh == "factored":
         mesh = make_factored_mesh()
     else:
-        # 'dxm' (1D) or 'dxm1xm2' (2D hybrid) device grid
-        mesh = parse_mesh_shape(args.mesh)
+        # 'dxm' (1D) or 'dxm1xm2' (2D hybrid) device grid; --pp prepends
+        # the 'pipe' stage axis
+        mesh = parse_mesh_shape(args.mesh, pp=pp)
 
     hp = TrainHParams(schedule=args.schedule, fine_remat=args.fine_remat,
                       learning_rate=args.lr, total_steps=args.steps,
                       warmup_steps=max(args.steps // 20, 1),
-                      use_planner=args.planner, tmp_layout=args.tmp_layout)
+                      use_planner=args.planner, tmp_layout=args.tmp_layout,
+                      microbatch=args.microbatch,
+                      virtual_stages=args.virtual_stages)
     degrees = None
     if args.planner:
         from repro.configs.base import ShapeConfig

@@ -98,6 +98,66 @@ def _stack_scan(cfg, ctx, hp, params, xs, auxs, *, train=True):
 
 
 # --------------------------------------------------------------------------
+# pipeline-parallel forward (interleaved 1F1B over the 'pipe' mesh axis)
+# --------------------------------------------------------------------------
+def _pipeline_scan(cfg, ctx, info: MeshInfo, hp, params, x):
+    """Run the layer stack as an SPMD pipeline (core/pipeline.py).
+
+    ``x`` [b, s, d] is the embedded batch, replicated over ``pipe`` and
+    batch-sharded over the data axes as usual.  It is cut into
+    ``hp.microbatch`` microbatches that stream through the stages; each
+    stage applies its layer chunk with the unchanged TMP machinery
+    (``apply_layer`` + the schedule's sub-batch split), so stage-internal
+    collectives overlap exactly as without PP.  Returns ``(x, aux)`` where
+    ``x`` is valid on the last stage only (masked downstream)."""
+    from repro.core import pipeline as pl
+
+    pp = info.pp
+    v = max(hp.virtual_stages, 1)
+    n_micro = max(hp.microbatch, 1)
+    b, s = x.shape[0], x.shape[1]
+    if b % n_micro:
+        raise ValueError(
+            f"pipeline microbatch count {n_micro} must divide the "
+            f"per-shard batch {b} (global batch / dp)")
+    mb = b // n_micro
+    _, pat, _ = prm.stack_layout(cfg)
+    parts = {k: blk.train_parts(cfg, ctx, k) for k in set(pat)}
+    positions = _positions(mb, s)
+
+    def stage_fn(c, h):
+        # this device's virtual-stage chunk c: leading dims [v, 1(pipe), per]
+        chunk = tuple(jax.tree_util.tree_map(lambda t: t[c, 0], bl)
+                      for bl in params["blocks"])
+        split = effective_split(hp.schedule, hp.split, mb)
+        hs = split_tree(h, split)
+        auxs = [{"positions": positions[: mb // split]}
+                for _ in range(split)]
+
+        def body(carry, layer_params):
+            hs_c, a_c = carry
+            for pos, kind in enumerate(pat):
+                hs_c, a = apply_layer(parts[kind], layer_params[pos], hs_c,
+                                      auxs, hp.schedule)
+                a_c = a_c + a
+            return (hs_c, a_c), None
+
+        body = maybe_checkpoint(body, remat=hp.remat, fine=hp.fine_remat)
+        (hs, aux), _ = lax.scan(body, (hs, jnp.zeros((1,), jnp.float32)),
+                                chunk)
+        return merge_tree(hs) if len(hs) > 1 else hs[0], aux
+
+    x_mb = x.reshape((n_micro, mb) + tuple(x.shape[1:]))
+    out, aux = pl.pipeline_apply(stage_fn, x_mb,
+                                 pipe_axis=info.pipe_axes[0], pp=pp,
+                                 virtual_stages=v)
+    # each layer accumulates its (mean-normalized) aux once per microbatch
+    # here but once per pass in the non-PP paths — renormalize so the aux
+    # term does not grow with the 1F1B microbatch count
+    return out.reshape((b,) + tuple(x.shape[1:])), jnp.sum(aux) / n_micro
+
+
+# --------------------------------------------------------------------------
 # planner-mode (mixed per-layer TMP degrees on the factored mesh)
 # --------------------------------------------------------------------------
 def _grouped_scan(cfg, info, hp, params, x, degrees):
@@ -160,12 +220,15 @@ def build_train_loss(cfg: ArchConfig, mesh, hp: TrainHParams, *,
     """Returns (loss_fn(params, batch) -> (loss, aux), specs, in_specs)."""
     info = mesh_info(mesh)
     specs = prm.model_specs(cfg, info, degrees=degrees, max_pos=seq_len,
-                            layout=hp.tmp_layout)
+                            layout=hp.tmp_layout,
+                            virtual_stages=hp.virtual_stages)
     # SP composes with the 1D layout only: in 2D the block entries/exits
-    # are already per-axis collectives, not the SP AG/RS pair
+    # are already per-axis collectives, not the SP AG/RS pair.  Under PP
+    # the stage boundary ships the full-sequence activation, so SP is off.
     twod = TmpCtx(info, layout=hp.tmp_layout).is_2d
     sp = bool(hp.seq_parallel and info.tp > 1 and degrees is None
-              and seq_len % max(info.tp, 1) == 0 and not twod)
+              and seq_len % max(info.tp, 1) == 0 and not twod
+              and info.pp == 1)
     ctx = TmpCtx(info, schedule=hp.schedule, use_pallas=hp.use_pallas,
                  seq_parallel=sp, layout=hp.tmp_layout)
     bspec = batch_pspec(info, global_batch)
@@ -198,6 +261,8 @@ def build_train_loss(cfg: ArchConfig, mesh, hp: TrainHParams, *,
         positions = _positions(b, s)
         if degrees is not None:
             x, aux = _grouped_scan(cfg, info, hp, params, x, degrees)
+        elif info.pp > 1:
+            x, aux = _pipeline_scan(cfg, ctx, info, hp, params, x)
         else:
             split = effective_split(hp.schedule, hp.split, b)
             xs = split_tree(x, split)
@@ -217,11 +282,19 @@ def build_train_loss(cfg: ArchConfig, mesh, hp: TrainHParams, *,
         loss_sum, count = tmpc.vocab_parallel_xent(
             x, head, labels, ctx.tp_axes, chunk=hp.loss_chunk,
             softcap=cfg.final_softcap)
-        # aggregate over every batch-sharded axis
-        loss_sum = tmpc.reduce_from_tmp(loss_sum, info.batch_axes)
-        count = lax.psum(count, info.batch_axes) if info.batch_axes else count
+        # aggregate over every batch-sharded axis; under PP only the last
+        # stage holds real outputs — mask, then psum over pipe as well
+        agg_axes = info.batch_axes
+        if info.pp > 1:
+            from repro.core import pipeline as pl
+            loss_sum = pl.mask_to_last_stage(loss_sum, info.pipe_axes[0],
+                                             info.pp)
+            count = pl.mask_to_last_stage(count, info.pipe_axes[0], info.pp)
+            agg_axes = pl.pipeline_batch_axes(info)
+        loss_sum = tmpc.reduce_from_tmp(loss_sum, agg_axes)
+        count = lax.psum(count, agg_axes) if agg_axes else count
         aux = tmpc.reduce_from_tmp(aux / max(cfg.num_layers, 1),
-                                   info.batch_axes) / max(info.dp, 1)
+                                   agg_axes) / max(info.dp, 1)
         return loss_sum / count + aux, aux
 
     in_specs = (prm.pspec_tree(specs), batch_specs)
@@ -254,10 +327,19 @@ def _last_logits(cfg, params, x_last, ctx):
     return logits
 
 
+def _no_pipe(info: MeshInfo, what: str):
+    if info.pp > 1:
+        raise ValueError(
+            f"{what} does not support a 'pipe' mesh axis — pipeline "
+            f"parallelism is a training-time layout; serve/prefill on a "
+            f"data x model mesh instead")
+
+
 def build_prefill(cfg: ArchConfig, mesh, hp: TrainHParams, *,
                   global_batch: int, seq_len: int):
     """prefill_step(params, batch) -> (next_token [b], state)."""
     info = mesh_info(mesh)
+    _no_pipe(info, "prefill")
     specs = prm.model_specs(cfg, info, max_pos=seq_len + 1,
                             layout=hp.tmp_layout)
     ctx = TmpCtx(info, schedule=hp.schedule, use_pallas=hp.use_pallas,
@@ -317,6 +399,7 @@ def build_decode(cfg: ArchConfig, mesh, hp: TrainHParams, *,
                  global_batch: int, seq_len: int):
     """serve_step(params, state, tokens [b], pos [b]) -> (next [b], state)."""
     info = mesh_info(mesh)
+    _no_pipe(info, "decode")
     specs = prm.model_specs(cfg, info, max_pos=seq_len + 8,
                             layout=hp.tmp_layout)
     ctx = TmpCtx(info, schedule="megatron", use_pallas=hp.use_pallas,

@@ -240,6 +240,20 @@ def _stack(specs: Dict[str, Spec], n: int) -> Dict[str, Spec]:
                        s.dtype, s.scale), specs)
 
 
+def _stack_pipeline(specs: Dict[str, Spec], n: int, pp: int,
+                    v: int) -> Dict[str, Spec]:
+    """Pipeline-mode stacking: ``[n] -> [v, pp, n/(pp*v)]`` with only the
+    ``pp`` dim sharded over the ``pipe`` axis, so device ``d`` holds its
+    ``v`` strided virtual-stage chunks ``{d, pp+d, ...}`` and the row-major
+    flatten stays the canonical layer order (checkpoints move between PP
+    and non-PP meshes by pure reshape — see core/pipeline.py)."""
+    per = n // (pp * v)
+    return tree_map_specs(
+        lambda s: Spec((v, pp, per) + s.shape,
+                       P(*((None, "pipe", None) + tuple(s.pspec))),
+                       s.dtype, s.scale), specs)
+
+
 # --------------------------------------------------------------------------
 # whole-model specs
 # --------------------------------------------------------------------------
@@ -253,14 +267,17 @@ def stack_layout(cfg: ArchConfig) -> Tuple[int, Sequence[str], Sequence[str]]:
 
 def model_specs(cfg: ArchConfig, info: MeshInfo, *,
                 degrees: Optional[Sequence] = None,
-                max_pos: int = 0, layout: str = "auto") -> Dict[str, Any]:
+                max_pos: int = 0, layout: str = "auto",
+                virtual_stages: int = 1) -> Dict[str, Any]:
     """degrees: optional per-layer TMP degrees (planner mode; factored
     mesh); each entry may be an int (1D) or an ``(dx, dy)`` tuple (2D).
 
     Uniform mode (degrees=None) stacks `n` repeats of the pattern for scan;
-    planner mode groups consecutive same-degree layers (see lm.py).
+    planner mode groups consecutive same-degree layers (see lm.py).  On a
+    mesh with a ``pipe`` axis the stacks restructure to the stage-sharded
+    ``[v, pp, n/S]`` layout (``virtual_stages`` = interleaving depth).
     Embedding/head stay vocab-sharded over the *combined* model group in
-    every layout.
+    every layout and replicated over ``pipe``.
     """
     tp_ax = info.tp_axes(None)
     d, dt = cfg.d_model, cfg.dtype
@@ -276,12 +293,27 @@ def model_specs(cfg: ArchConfig, info: MeshInfo, *,
 
     if degrees is None:
         n, pat, tail = stack_layout(cfg)
-        out["blocks"] = [
-            _stack(layer_specs(cfg, k, info, layout=layout), n)
-            for k in pat] if n else []
-        out["tail"] = [layer_specs(cfg, k, info, layout=layout)
-                       for k in tail]
+        if info.pp > 1:
+            from repro.core.pipeline import validate_stage_layout
+            v = max(virtual_stages, 1)
+            validate_stage_layout(cfg, n, len(tail), info.pp, v)
+            out["blocks"] = [
+                _stack_pipeline(layer_specs(cfg, k, info, layout=layout),
+                                n, info.pp, v)
+                for k in pat]
+            out["tail"] = []
+        else:
+            out["blocks"] = [
+                _stack(layer_specs(cfg, k, info, layout=layout), n)
+                for k in pat] if n else []
+            out["tail"] = [layer_specs(cfg, k, info, layout=layout)
+                           for k in tail]
     else:
+        if info.pp > 1:
+            raise ValueError(
+                "per-layer planner degrees do not compose with pipeline "
+                "parallelism yet — use a uniform TMP degree per stage "
+                "(drop degrees= or the 'pipe' mesh axis)")
         assert info.factored and len(degrees) == cfg.num_layers
         out["groups"] = [
             _stack(layer_specs(cfg, kind, info, deg, layout=layout), n)

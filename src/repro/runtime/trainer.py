@@ -75,14 +75,11 @@ class Trainer:
         self.cfg = cfg
         self.mesh = mesh
         info = mesh_info(mesh)
-        # planner mode: low-degree layers reuse model sub-axes as extra
-        # data parallelism, so the microbatcher must see that dp (same
-        # resolution build_train_step applies)
-        dp_eff = (info.dp * (info.tp // steps_mod._min_degree(degrees))
-                  if degrees else info.dp)
-        self.hp = steps_mod.resolve_hp(hp, "train", global_batch, dp_eff,
-                                       seq_len=seq_len, d_model=cfg.d_model,
-                                       num_layers=cfg.num_layers)
+        # one shared resolution with build_train_step: planner mode sees the
+        # extra-dp-adjusted microbatcher; a pipeline mesh folds gradient
+        # accumulation into the 1F1B schedule (hp.microbatch = n_micro)
+        self.hp = steps_mod.resolve_for_mesh(cfg, info, hp, global_batch,
+                                             seq_len, degrees)
         self.degrees = degrees
         self.global_batch = global_batch
         self.seq_len = seq_len
@@ -136,8 +133,12 @@ class Trainer:
         psh, osh = self._shardings()
         (params, opt), meta = store.restore(
             self.ckpt_dir, last, (params, opt), shardings=(psh, osh))
+        src = meta.get("mesh_axes")
         self.log(f"[trainer] restored step {last} "
-                 f"(elastic mesh={tuple(self.mesh.shape.values())})")
+                 f"(elastic mesh={tuple(self.mesh.shape.values())}"
+                 f" pp={self.info.pp}"
+                 + (f" <- {src} pp={meta.get('pp', 1)}" if src else "")
+                 + ")")
         return params, opt, last
 
     def _heartbeat(self, step: int):
@@ -149,10 +150,13 @@ class Trainer:
               seed: int = 0) -> Dict:
         os.makedirs(self.ckpt_dir, exist_ok=True)
         params, opt, start = self.restore_or_init(seed)
+        # on a pipeline mesh the batch stays flat — the 1F1B schedule slices
+        # its own microbatches inside the step (steps.py)
         dcfg = DataConfig(global_batch=self.global_batch,
                           seq_len=self.seq_len,
                           vocab_size=self.cfg.vocab_size,
-                          microbatch=self.hp.microbatch)
+                          microbatch=(self.hp.microbatch
+                                      if self.info.pp == 1 else 0))
         ctx_shape = ((self.global_batch, self.cfg.context_len,
                       self.cfg.context_dim or self.cfg.d_model)
                      if self.cfg.context_len else None)
@@ -174,8 +178,16 @@ class Trainer:
                 losses.append(loss)
                 self._heartbeat(step)
                 if (step + 1) % ckpt_every == 0 or step + 1 == total_steps:
-                    self.checkpointer.save(step + 1, (params, opt),
-                                           metadata={"loss": loss})
+                    # stage-aware manifest: the source mesh/pp travel with
+                    # the checkpoint so elastic restores (incl. PP <-> pure
+                    # TMP) can log & sanity-check the layout change
+                    self.checkpointer.save(
+                        step + 1, (params, opt),
+                        metadata={"loss": loss,
+                                  "mesh_axes": {k: int(v) for k, v in
+                                                self.mesh.shape.items()},
+                                  "pp": self.info.pp,
+                                  "virtual_stages": self.hp.virtual_stages})
                 if step % 10 == 0:
                     self.log(f"[trainer] step {step} loss {loss:.4f} "
                              f"{dt*1e3:.0f} ms")

@@ -1,5 +1,8 @@
 """Subprocess body: elastic re-mesh — train on a 2x4 mesh, checkpoint, then
-resume on a 1x4 mesh (a 'pod' dropped); loss stays continuous."""
+resume on a 1x4 mesh (a 'pod' dropped); loss stays continuous.  Second
+case: train with pipeline parallelism (pp=2), checkpoint, then resume on a
+pure-TMP mesh — the stage-sharded [v, pp, n/S] param stacking reshapes onto
+the canonical [n] layout on restore (checkpoint/store.py)."""
 import runner  # noqa: F401  (must be first: sets XLA_FLAGS before jax)
 
 import tempfile
@@ -27,3 +30,34 @@ runner.report(
     and abs(r2["losses"][0] - r1["losses"][-1]) < 0.5,
     f"resumed={restored} loss {r1['losses'][-1]:.3f} -> "
     f"{r2['losses'][0]:.3f}")
+
+# ---- PP -> pure-TMP elastic re-mesh --------------------------------------
+ckpt_pp = tempfile.mkdtemp()
+pipe_mesh = runner.mesh(2, 2, 2, axes=("pipe", "data", "model"))
+t3 = Trainer(cfg, pipe_mesh, hp, global_batch=8, seq_len=64,
+             ckpt_dir=ckpt_pp, log_fn=lambda s: None)
+r3 = t3.train(8, ckpt_every=4)
+
+logs_pp = []
+t4 = Trainer(cfg, runner.mesh(2, 4), hp, global_batch=8, seq_len=64,
+             ckpt_dir=ckpt_pp, log_fn=logs_pp.append)   # pp dropped
+r4 = t4.train(16, ckpt_every=4)
+
+restored_pp = any("restored" in l for l in logs_pp)
+runner.report(
+    "elastic-pp-to-tmp",
+    restored_pp and r4["final_step"] >= 16
+    and abs(r4["losses"][0] - r3["losses"][-1]) < 0.5,
+    f"resumed={restored_pp} loss {r3['losses'][-1]:.3f} -> "
+    f"{r4['losses'][0]:.3f}")
+
+# and back: restore the now-TMP checkpoint onto a fresh pp=2 trainer
+logs_back = []
+t5 = Trainer(cfg, pipe_mesh, hp, global_batch=8, seq_len=64,
+             ckpt_dir=ckpt_pp, log_fn=logs_back.append)
+r5 = t5.train(24, ckpt_every=8)
+runner.report(
+    "elastic-tmp-to-pp",
+    any("restored" in l for l in logs_back) and r5["final_step"] >= 24
+    and abs(r5["losses"][0] - r4["losses"][-1]) < 0.5,
+    f"loss {r4['losses'][-1]:.3f} -> {r5['losses'][0]:.3f}")

@@ -1,0 +1,90 @@
+"""Subprocess body: pipeline-parallel (interleaved 1F1B) equivalence.
+
+On the 8-virtual-device CPU mesh, every pp in {2, 4} x TMP in {1, 2} x
+schedule in {megatron, oases, fused} combination must reproduce the
+single-device oracle's loss AND gradients: the microbatch injection /
+ppermute stage transfer / last-stage masking machinery of
+core/pipeline.py is numerically invisible, and the transposed loop is the
+correct reverse pipeline.  Also pinned: interleaved virtual stages
+(v=2), a second architecture family (gemma2: sandwich norms + softcaps +
+local attention), and PP composed with the 2D hybrid TMP layout.
+
+Pipeline grads come back in the stage-sharded [v, pp, n/S, ...] stacking;
+``runner.match_shapes`` flattens them onto the oracle layout (row-major
+order is the canonical layer order — the same property the elastic
+checkpoint reshape relies on).
+
+Prints PASS/FAIL lines consumed by tests/test_distributed.py.
+"""
+import runner  # noqa: F401  (must be first: sets XLA_FLAGS before jax)
+
+from repro.configs.base import TrainHParams
+
+BATCH = 8
+
+# ---- part 1: pp x tmp x schedule grid vs single-device oracle ------------
+cfg = runner.reduced_config("internlm2-1.8b").replace(num_layers=4)
+l1, g1 = runner.train_loss_and_grads(cfg, runner.mesh(1, 1), batch=BATCH)
+
+for pp in (2, 4):
+    for tmp in (1, 2):
+        data = 8 // (pp * tmp)
+        if data < 1:
+            continue
+        msh = runner.mesh(pp, data, tmp, axes=("pipe", "data", "model"))
+        for sched in ("megatron", "oases", "fused"):
+            hp = TrainHParams(schedule=sched, microbatch=2)
+            l2, g2 = runner.train_loss_and_grads(cfg, msh, hp, batch=BATCH)
+            gerr = runner.grads_err(g1, runner.match_shapes(g2, g1))
+            runner.report(f"pp{pp}-tmp{tmp}-{sched}",
+                          abs(l1 - l2) < 2e-4 and gerr < 5e-3,
+                          f"dloss={abs(l1 - l2):.2e} gerr={gerr:.2e}")
+
+# ---- part 2: interleaved virtual stages (v=2 -> 4 stages on 2 devices) ---
+msh = runner.mesh(2, 2, 2, axes=("pipe", "data", "model"))
+for n_micro in (2, 4):
+    hp = TrainHParams(schedule="oases", microbatch=n_micro, virtual_stages=2)
+    l2, g2 = runner.train_loss_and_grads(cfg, msh, hp, batch=BATCH)
+    gerr = runner.grads_err(g1, runner.match_shapes(g2, g1))
+    runner.report(f"pp2-v2-m{n_micro}",
+                  abs(l1 - l2) < 2e-4 and gerr < 5e-3,
+                  f"dloss={abs(l1 - l2):.2e} gerr={gerr:.2e}")
+
+# ---- part 3: second arch family (gemma2) + PP x 2D hybrid TMP ------------
+gcfg = runner.reduced_config("gemma2-9b")       # 4 layers, global/local mix
+gl1, gg1 = runner.train_loss_and_grads(gcfg, runner.mesh(1, 1), batch=BATCH)
+msh = runner.mesh(2, 2, 2, axes=("pipe", "data", "model"))
+for sched in ("oases", "fused"):
+    hp = TrainHParams(schedule=sched, microbatch=2)
+    l2, g2 = runner.train_loss_and_grads(gcfg, msh, hp, batch=BATCH)
+    gerr = runner.grads_err(gg1, runner.match_shapes(g2, gg1))
+    runner.report(f"gemma2-pp2-{sched}",
+                  abs(gl1 - l2) < 2e-4 and gerr < 5e-3,
+                  f"dloss={abs(gl1 - l2):.2e} gerr={gerr:.2e}")
+
+msh2d = runner.mesh(2, 1, 2, 2, axes=("pipe", "data", "model_x", "model_y"))
+hp = TrainHParams(schedule="oases", microbatch=2)
+l2, g2 = runner.train_loss_and_grads(cfg, msh2d, hp, batch=BATCH)
+gerr = runner.grads_err(g1, runner.match_shapes(g2, g1))
+runner.report("pp2-2d-hybrid",
+              abs(l1 - l2) < 2e-4 and gerr < 5e-3,
+              f"dloss={abs(l1 - l2):.2e} gerr={gerr:.2e}")
+
+# ---- part 4: MoE with the router aux weight ON ---------------------------
+# The 1F1B loop accumulates each layer's (mean-normalized) aux once per
+# microbatch; without the /n_micro renormalization in lm._pipeline_scan the
+# aux term grows with the microbatch count (observed dloss ~2e-2 vs the
+# ~2e-4 of a dp-split control).  Loss-only: per-slice load-balance terms
+# are nonlinear in the token set, so grads legitimately differ a little —
+# the same slicing variance non-PP gradient accumulation has.
+import dataclasses  # noqa: E402
+
+mcfg = runner.reduced_config("granite-moe-3b-a800m")
+mcfg = mcfg.replace(moe=dataclasses.replace(mcfg.moe,
+                                            router_aux_weight=0.01))
+ml1, _ = runner.train_loss_and_grads(mcfg, runner.mesh(1, 1), batch=BATCH)
+msh = runner.mesh(2, 2, 2, axes=("pipe", "data", "model"))
+ml2, _ = runner.train_loss_and_grads(
+    mcfg, msh, TrainHParams(microbatch=2), batch=BATCH)
+runner.report("moe-aux-pp2", abs(ml1 - ml2) < 2e-3,
+              f"dloss={abs(ml1 - ml2):.2e}")

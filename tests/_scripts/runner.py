@@ -118,6 +118,14 @@ def grads_err(g1: dict, g2: dict) -> float:
                / (float(np.max(np.abs(g1[k]))) + 1e-8) for k in g1)
 
 
+def match_shapes(g: dict, ref: dict) -> dict:
+    """Reshape a flat grad dict onto a reference layout.  Pipeline meshes
+    stack layer groups [v, pp, n/S, ...] whose row-major flatten is the
+    canonical [n, ...] order, so comparing against the single-device
+    oracle is a pure reshape per leaf."""
+    return {k: v.reshape(ref[k].shape) for k, v in g.items()}
+
+
 def report(name: str, ok: bool, detail: str = ""):
     _FAILED[0] += 0 if ok else 1
     print(f"{'PASS' if ok else 'FAIL'} {name}"

@@ -73,3 +73,13 @@ def test_elastic_remesh_resume():
 def test_sequence_parallel_equivalence():
     lines = _run("sp_equivalence.py")
     assert len(lines) >= 5
+
+
+@multidevice
+@pytest.mark.slow
+def test_pipeline_equivalence():
+    """Interleaved-1F1B PP x TMP vs the single-device oracle: pp in {2,4}
+    x tmp in {1,2} x {megatron,oases,fused}, plus virtual stages, a second
+    arch family and PP x 2D hybrid (PR acceptance)."""
+    lines = _run("pipeline_equivalence.py", timeout=1800)
+    assert len(lines) >= 14

@@ -1,0 +1,83 @@
+"""Friendly-validation units for mesh/degree spec parsing (launch/mesh.py).
+
+``parse_mesh_spec`` is the pure parser (no device construction), so these
+run on the 1-device tier; malformed specs must fail with the grammar in
+the message instead of a deep axis-algebra crash."""
+import pytest
+
+from repro.launch.mesh import parse_degrees, parse_mesh_spec
+
+
+# --------------------------------------------------------------------------
+# mesh specs
+# --------------------------------------------------------------------------
+def test_parse_mesh_spec_accepts_1d_2d_and_pipeline():
+    assert parse_mesh_spec("32x8") == ((32, 8), ("data", "model"))
+    assert parse_mesh_spec("16x8x2") == ((16, 8, 2),
+                                         ("data", "model_x", "model_y"))
+    assert parse_mesh_spec("4x2", pp=2) == ((2, 4, 2),
+                                            ("pipe", "data", "model"))
+    assert parse_mesh_spec("1x2x2", pp=2) == (
+        (2, 1, 2, 2), ("pipe", "data", "model_x", "model_y"))
+    # pp=1 is a no-op, not a 1-sized axis
+    assert parse_mesh_spec("4x2", pp=1) == ((4, 2), ("data", "model"))
+
+
+@pytest.mark.parametrize("bad", ["8,4x2", "axb", "4x", "x4", "-2x4",
+                                 "0x4", "4x2.5", "", "4"])
+def test_parse_mesh_spec_rejects_malformed(bad):
+    with pytest.raises(ValueError, match="mesh spec"):
+        parse_mesh_spec(bad)
+
+
+def test_parse_mesh_spec_too_many_components():
+    with pytest.raises(ValueError, match="component"):
+        parse_mesh_spec("2x2x2x2")
+
+
+def test_parse_mesh_spec_bad_pp():
+    with pytest.raises(ValueError, match="pipeline degree"):
+        parse_mesh_spec("4x2", pp=-1)
+
+
+def test_parse_mesh_spec_errors_name_the_offender():
+    with pytest.raises(ValueError, match="component 'p'"):
+        parse_mesh_spec("pxdxm")
+
+
+# --------------------------------------------------------------------------
+# degree specs
+# --------------------------------------------------------------------------
+def test_parse_degrees_accepts_1d_and_2d_entries():
+    assert parse_degrees("8,4x2,16") == [8, (4, 2), 16]
+    assert parse_degrees("1") == [1]
+    assert parse_degrees(" 2 , 4x4 ") == [2, (4, 4)]
+
+
+@pytest.mark.parametrize("bad", ["8,,2", "axb", "4x", "4x2x2", "-2",
+                                 "0", "3x0", ""])
+def test_parse_degrees_rejects_malformed(bad):
+    with pytest.raises(ValueError, match="degree spec"):
+        parse_degrees(bad)
+
+
+@pytest.mark.parametrize("bad", ["3", "8,6x2", "5x4"])
+def test_parse_degrees_rejects_non_power_of_two(bad):
+    """Paper §4.2: partitioning degrees are powers of two — the axis
+    algebra would otherwise crash deep in _log2_exact."""
+    with pytest.raises(ValueError, match="powers of two"):
+        parse_degrees(bad)
+
+
+def test_dryrun_parse_degrees_is_the_validated_one():
+    """launch/dryrun.py must route through the validated parser (without
+    importing dryrun, which would set XLA device flags in-process)."""
+    import ast
+    import os
+    src = open(os.path.join(os.path.dirname(__file__), "..", "src",
+                            "repro", "launch", "dryrun.py")).read()
+    tree = ast.parse(src)
+    fns = [n for n in ast.walk(tree) if isinstance(n, ast.FunctionDef)
+           and n.name == "parse_degrees"]
+    assert fns and "from repro.launch.mesh import" in ast.get_source_segment(
+        src, fns[0])
