@@ -1,0 +1,88 @@
+"""Perf-trajectory regression gate: diff two BENCH_<tag>.json files.
+
+    python benchmarks/bench_diff.py BENCH_baseline.json BENCH_ci.json
+
+Compares the machine-readable perf trajectory written by
+``benchmarks/run.py`` — modeled tokens/s per schedule, planner decisions
+(per-layer TMP plans, joint PP x TMP, serving latency meshes) — against
+the checked-in baseline and exits non-zero on ANY deviation beyond the
+tolerance: numeric drift in either direction (the numbers are modeled and
+deterministic, so a silent change means a cost-model edit nobody pinned)
+and exact mismatches for planner decisions.
+
+To move the baseline deliberately (an intentional cost-model or planner
+change), regenerate it in the same PR:
+
+    PYTHONPATH=src python benchmarks/run.py --dry-run --tag baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# run metadata, not perf trajectory
+SKIP_KEYS = {"tag", "time", "dry_run"}
+
+
+def _walk(base, new, path, tol, errors):
+    if isinstance(base, dict):
+        if not isinstance(new, dict):
+            errors.append(f"{path}: shape changed ({type(new).__name__})")
+            return
+        for k, v in base.items():
+            if k in SKIP_KEYS and not path:
+                continue
+            if k not in new:
+                errors.append(f"{path}/{k}: missing from candidate")
+                continue
+            _walk(v, new[k], f"{path}/{k}", tol, errors)
+        for k in new:
+            if k not in base and not (k in SKIP_KEYS and not path):
+                errors.append(f"{path}/{k}: new key absent from baseline "
+                              f"(regenerate BENCH_baseline.json)")
+    elif isinstance(base, bool) or not isinstance(base, (int, float)):
+        if base != new:
+            errors.append(f"{path}: {base!r} -> {new!r}")
+    else:
+        if not isinstance(new, (int, float)) or isinstance(new, bool):
+            errors.append(f"{path}: {base!r} -> {new!r}")
+            return
+        denom = max(abs(float(base)), 1e-12)
+        rel = abs(float(new) - float(base)) / denom
+        if rel > tol:
+            errors.append(f"{path}: {base} -> {new} "
+                          f"(rel drift {rel:.1%} > tol {tol:.1%})")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--tol", type=float, default=0.02,
+                    help="relative tolerance for numeric drift (default "
+                         "2%%; the numbers are modeled, so this only "
+                         "absorbs solver/library jitter)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.candidate) as f:
+        new = json.load(f)
+    errors: list = []
+    _walk(base, new, "", args.tol, errors)
+    if errors:
+        print(f"PERF TRAJECTORY REGRESSION vs {args.baseline} "
+              f"({len(errors)} deviation(s)):")
+        for e in errors:
+            print(f"  {e}")
+        print("If intentional, regenerate the baseline in this PR:\n"
+              "  PYTHONPATH=src python benchmarks/run.py --dry-run "
+              "--tag baseline")
+        return 1
+    print(f"perf trajectory OK: {args.candidate} matches {args.baseline} "
+          f"within {args.tol:.1%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

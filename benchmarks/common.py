@@ -3,17 +3,11 @@ and the measured-on-CPU calibration path (the paper's 'offline profiling',
 §4.2) used by the cost-model-accuracy figure."""
 from __future__ import annotations
 
-import json
 import os
-import subprocess
-import sys
-import time
-from typing import Dict, List
 
-from repro.configs.base import ShapeConfig, TrainHParams
-from repro.configs.gpt_oases import PAPER_TABLE4, PAPER_TABLE5, paper_shape
-from repro.configs.registry import get_config
-from repro.core.planner import V5E, estimate_iteration, plan
+from repro.configs.base import TrainHParams
+from repro.configs.gpt_oases import PAPER_TABLE4
+from repro.core.planner import V5E, estimate_iteration
 from repro.core.planner.costmodel import HWConfig
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")

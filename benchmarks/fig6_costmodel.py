@@ -11,9 +11,7 @@ import json
 import os
 import subprocess
 import sys
-import time
 
-import numpy as np
 from scipy.stats import spearmanr
 
 from benchmarks.common import ensure_results_dir
@@ -58,8 +56,8 @@ def run(force=False):
     pred, meas = [], []
     for key, t_meas in measured.items():
         name, s_s, b_s, tmp_s, sched_s = key.split("|")
-        _, d, l, f = name.split("-")
-        cfg = make_cfg(int(d[1:]), int(l[1:]), int(f[1:]))
+        _, d, nl, f = name.split("-")
+        cfg = make_cfg(int(d[1:]), int(nl[1:]), int(f[1:]))
         shape = ShapeConfig("bench", int(s_s[1:]), int(b_s[1:]), "train")
         tmp = int(tmp_s[3:])
         fine = not sched_s.endswith("-coarse")

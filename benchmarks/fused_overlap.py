@@ -41,7 +41,6 @@ def build_step(mesh, schedule, *, layers, batch, seq, d_model, d_ff):
     blocked-AllReduce path of Fig. 2/3 isolated from everything else."""
     info = mesh_info(mesh)
     ctx = TmpCtx(info, schedule=schedule)
-    tp = info.tp
 
     def body(ws, x):
         split = effective_split(schedule, 2, x.shape[0])

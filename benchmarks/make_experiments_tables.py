@@ -3,8 +3,6 @@ results/*.jsonl (run after a sweep)."""
 from __future__ import annotations
 
 import json
-import os
-import sys
 
 
 def load(path):

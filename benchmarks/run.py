@@ -128,6 +128,28 @@ def main() -> None:
               f"pp={r.pp};bubble={r.bubble_fraction:.3f}")
     report["joint_pp_planner"] = joint
 
+    # serving latency planner decisions (modeled per-token decode latency;
+    # plan(objective="latency") over (dx, dy, pp) serving meshes)
+    from repro.configs.base import ShapeConfig
+    from repro.core.planner import plan
+    serve_shape = ShapeConfig("serve_b8_4k", 4096, 8, "decode")
+    serving = {}
+    for fixture, hw in (("commodity_25gbe", COMMODITY_25GBE),
+                        ("nvlink_box", NVLINK_BOX)):
+        r = plan(cfg, serve_shape, TrainHParams(schedule="fused"), hw,
+                 options=(16,), objective="latency")
+        serving[fixture] = {
+            "degree": list(r.degree) if isinstance(r.degree, tuple)
+            else r.degree,
+            "pp": r.pp, "n_micro": r.n_micro,
+            "predicted_ms": round(r.predicted_s * 1e3, 4),
+            "tok_per_s": round(r.tok_per_s, 1),
+            "tmp_only_ms": round(r.tmp_only_s * 1e3, 4),
+        }
+        print(f"serve/{fixture},{r.predicted_s*1e6:.0f},"
+              f"pp={r.pp};tok_per_s={r.tok_per_s:.0f}")
+    report["serving_latency_planner"] = serving
+
     d = ensure_results_dir()
     with open(os.path.join(d, "bench_report.json"), "w") as f:
         json.dump(report, f, indent=1)
@@ -148,6 +170,7 @@ def main() -> None:
         "planner_decisions": {r["model"]: r["planned"]
                               for r in report["table6_planner"]},
         "joint_pp_planner": joint,
+        "serving_latency_planner": serving,
     }
     out = os.path.abspath(os.path.join(root, f"BENCH_{args.tag}.json"))
     with open(out, "w") as f:

@@ -2,7 +2,7 @@
 recomputation -> +planner, throughput (k tokens/s) and speedups."""
 from __future__ import annotations
 
-from benchmarks.common import hp_for, paper_hw, tokens_per_s
+from benchmarks.common import paper_hw, tokens_per_s
 from repro.configs.base import TrainHParams
 from repro.configs.gpt_oases import PAPER_TABLE4, paper_shape
 from repro.core.planner import plan

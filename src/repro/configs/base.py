@@ -6,7 +6,7 @@ shape is a ``ShapeConfig``.  The dry-run sweeps the cross product.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # Layer kinds used in ``layer_pattern`` (repeating cycle over the stack).

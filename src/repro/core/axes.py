@@ -30,7 +30,6 @@ import math
 from dataclasses import dataclass
 from typing import Optional, Tuple, Union
 
-import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 T_AXES: Tuple[str, ...] = ("t1", "t2", "t3", "t4")

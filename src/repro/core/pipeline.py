@@ -75,23 +75,32 @@ def validate_stage_layout(cfg, n_blocks: int, n_tail: int, pp: int,
     return n_blocks // stages
 
 
+def _resolve_divisor(local_batch: int, cap: int, requested: int,
+                     what: str) -> int:
+    """Shared micro-count resolution: the requested value must divide the
+    per-shard batch (raises otherwise); auto (0) takes the largest divisor
+    up to ``cap``."""
+    local = max(local_batch, 1)
+    if requested:
+        if requested < 1 or local % requested:
+            raise ValueError(
+                f"{what} {requested} must be a positive divisor of the "
+                f"per-shard batch {local}")
+        return requested
+    n = min(local, max(cap, 1))
+    while n > 1 and local % n:
+        n -= 1
+    return max(n, 1)
+
+
 def resolve_microbatch(local_batch: int, pp: int, virtual_stages: int = 1,
                        requested: int = 0) -> int:
     """Pipeline microbatch count: the requested value (validated), else the
     largest divisor of the per-shard batch up to ``2 * pp * v`` — enough
     microbatches in flight to keep the bubble below ~1/(2v), without
     shrinking each microbatch past usefulness."""
-    local = max(local_batch, 1)
-    if requested:
-        if requested < 1 or local % requested:
-            raise ValueError(
-                f"pipeline microbatch count {requested} must be a positive "
-                f"divisor of the per-shard batch {local}")
-        return requested
-    n = min(local, 2 * pp * max(virtual_stages, 1))
-    while n > 1 and local % n:
-        n -= 1
-    return max(n, 1)
+    return _resolve_divisor(local_batch, 2 * pp * max(virtual_stages, 1),
+                            requested, "pipeline microbatch count")
 
 
 def bubble_fraction(pp: int, n_micro: int, virtual_stages: int = 1) -> float:
@@ -173,6 +182,101 @@ def pipeline_apply(stage_fn: Callable, x_micro, *, pipe_axis: str, pp: int,
         tick, (buf0, aux0), jnp.arange(n_micro + stages - 1,
                                        dtype=jnp.int32))
     return ys[stages - 1:], aux_total
+
+
+def decode_stream(stage_fn: Callable, x_micro, state, *, pipe_axis: str,
+                  pp: int, virtual_stages: int = 1
+                  ) -> Tuple[jax.Array, object]:
+    """Stream decode micro-steps through the pipeline stages.
+
+    The serving analogue of :func:`pipeline_apply`: the slot batch of one
+    decode step is cut into ``n_micro`` micro-groups that flow through the
+    stages tick by tick, so stage ``s`` decodes micro-group ``g`` while
+    stage ``s-1`` decodes micro-group ``g+1`` — every stage is busy in the
+    steady state instead of waiting for the full stack to traverse.  Unlike
+    training there is no backward pass and the per-stage KV caches are
+    *stateful*: they stay put on their stage (only activations ride the
+    ``ppermute`` ring) and are updated in place for the micro-group a slot
+    currently holds.
+
+    ``x_micro``  — ``[n_micro, mb, ...]`` micro-grouped token activations,
+    identical on every pipe shard.
+    ``state``    — pytree of per-stage caches, local leaves
+    ``[v, 1(pipe), per_stage, batch, ...]`` (models/params.cache_specs
+    pipeline stacking); the batch dim (axis 3) spans all micro-groups.
+    ``stage_fn(c, h, st_c, m)`` — run this device's virtual chunk ``c`` on
+    micro-group tensor ``h`` with its cache slice ``st_c`` (leaves
+    ``[per_stage, mb, ...]``, batch rows of micro-group ``m``); returns
+    ``(y, st_c_new)``.
+
+    Out-of-window slots process zeros/stale buffers whose outputs are
+    discarded and whose cache writes are masked off — the cache is only
+    ever written by the tick that legitimately owns micro-group ``m`` at
+    that stage, which is what keeps sharded decode token-identical to the
+    single-device oracle.  Returns ``(out [n_micro, mb, ...], state)``
+    where ``out`` is valid on the last stage's shards (combine with
+    :func:`mask_to_last_stage` + a psum over ``pipe`` to broadcast).
+    """
+    v = max(virtual_stages, 1)
+    stages = pp * v
+    n_micro = int(x_micro.shape[0])
+    mb = int(x_micro.shape[1])
+    d_idx = lax.axis_index(pipe_axis)
+    perm = [(i, (i + 1) % pp) for i in range(pp)]
+    tmap = jax.tree_util.tree_map
+
+    def slice_state(st, c, start):
+        return tmap(lambda leaf: lax.dynamic_slice_in_dim(
+            leaf[c, 0], start, mb, axis=1), st)
+
+    def write_state(st, c, start, new, valid):
+        def upd(leaf, nl):
+            cur = leaf[c, 0]
+            nxt = lax.dynamic_update_slice_in_dim(
+                cur, nl.astype(leaf.dtype), start, axis=1)
+            return leaf.at[c, 0].set(jnp.where(valid, nxt, cur))
+        return tmap(upd, st, new)
+
+    def tick(carry, t):
+        buf, st = carry
+        inject = lax.dynamic_index_in_dim(
+            x_micro, jnp.minimum(t, n_micro - 1), 0, keepdims=False)
+        buf = buf.at[0].set(jnp.where((t < n_micro) & (d_idx == 0),
+                                      inject, buf[0]))
+        new_chunks = []
+        for c in range(v):
+            m = t - (c * pp + d_idx)
+            valid = (m >= 0) & (m < n_micro)
+            mc = jnp.clip(m, 0, n_micro - 1)
+            start = mc * mb
+            y, st_new = stage_fn(c, buf[c], slice_state(st, c, start), mc)
+            st = write_state(st, c, start, st_new, valid)
+            new_chunks.append(y)
+        buf = jnp.stack(new_chunks)
+        out_t = buf[v - 1]
+        buf = lax.ppermute(buf, pipe_axis, perm)
+        rolled = jnp.concatenate(
+            [jnp.zeros_like(buf[:1]), buf[:-1]], axis=0) if v > 1 \
+            else jnp.zeros_like(buf)
+        buf = jnp.where(d_idx == 0, rolled, buf)
+        return (buf, st), out_t
+
+    buf0 = jnp.zeros((v,) + tuple(x_micro.shape[1:]), x_micro.dtype)
+    (_, state), ys = lax.scan(
+        tick, (buf0, state), jnp.arange(n_micro + stages - 1,
+                                        dtype=jnp.int32))
+    return ys[stages - 1:], state
+
+
+def resolve_decode_micro(local_batch: int, pp: int, virtual_stages: int = 1,
+                         requested: int = 0) -> int:
+    """Decode micro-group count: the requested value (validated), else the
+    largest divisor of the slot batch up to ``pp * v`` — exactly enough
+    in-flight micro-groups to fill the pipe.  More would re-stream each
+    stage's (memory-bound) weights extra times per engine step; fewer
+    leaves stages idle."""
+    return _resolve_divisor(local_batch, pp * max(virtual_stages, 1),
+                            requested, "decode micro-group count")
 
 
 def pipeline_batch_axes(info: MeshInfo) -> Tuple[str, ...]:

@@ -48,6 +48,10 @@ class HWConfig:
     link_bw_x: float = 0.0           # intra-node (x-axis ring) bytes/s
     link_bw_y: float = 0.0           # inter-node (y-axis ring) bytes/s
     node_size: int = 0               # chips per fast-interconnect node
+    # per-hop latency of an inter-node (NIC) crossing; 0 -> comm_latency.
+    # Only the decode/serving latency model reads this (training payloads
+    # are bandwidth-bound, so the per-hop split would be noise there).
+    comm_latency_y: float = 0.0
 
     @property
     def bw_x(self) -> float:
@@ -57,12 +61,32 @@ class HWConfig:
     def bw_y(self) -> float:
         return self.link_bw_y or self.link_bw
 
+    @property
+    def lat_y(self) -> float:
+        return self.comm_latency_y or self.comm_latency
+
     def ring_bw(self, degree: int) -> float:
         """Effective per-hop bandwidth of a ring over ``degree`` chips: a
         ring confined to one node runs at the intra-node rate; a ring that
         spans nodes is bottlenecked by the slowest (inter-node) hop."""
         ns = self.node_size or self.n_chips
         return self.bw_x if degree <= ns else self.bw_y
+
+    def collective_latency(self, degree: int) -> float:
+        """Critical-path latency of one all-reduce over ``degree`` chips at
+        decode payloads (bandwidth ~free, hops everything).  Intra-node
+        segments ride a switched fabric — log2 depth per phase — while
+        every node-boundary crossing pays a full inter-node hop, twice
+        (reduce-scatter + all-gather phases)."""
+        if degree <= 1:
+            return 0.0
+        ns = self.node_size or self.n_chips
+        intra = 2.0 * self.comm_latency * math.ceil(
+            math.log2(min(degree, ns)))
+        if degree <= ns:
+            return intra
+        crossings = math.ceil(degree / ns)
+        return intra + 2.0 * crossings * self.lat_y
 
     @classmethod
     def from_measurements(cls, *, max_devices: int = 8,
@@ -146,7 +170,8 @@ V5E = HWConfig()
 #   the 2D split buys nothing and the planner should stay effectively 1D.
 COMMODITY_25GBE = HWConfig(
     n_chips=16, node_size=8, peak_flops=125e12, hbm_bw=1008e9,
-    link_bw=3.1e9, link_bw_x=120e9, link_bw_y=3.1e9, hbm_cap=24e9)
+    link_bw=3.1e9, link_bw_x=120e9, link_bw_y=3.1e9, hbm_cap=24e9,
+    comm_latency_y=30e-6)
 NVLINK_BOX = HWConfig(
     n_chips=16, node_size=16, peak_flops=125e12, hbm_bw=1008e9,
     link_bw=250e9, hbm_cap=24e9)
@@ -526,6 +551,144 @@ def p2p_hop_seconds(cfg: ArchConfig, shape: ShapeConfig, hw: HWConfig,
     mb_tokens = shape.global_batch * shape.seq_len / max(n_micro, 1)
     return (mb_tokens / dp) * cfg.d_model * hw.bytes_act / bw \
         + hw.comm_latency
+
+
+# --------------------------------------------------------------------------
+# serving latency model (per-token decode, batch = concurrent slots)
+# --------------------------------------------------------------------------
+def _decode_layer_time(cfg: ArchConfig, kind: str, hw: HWConfig, degree,
+                       rows: int, kv_len: int, schedule: str) -> float:
+    """One layer's decode-step seconds for ``rows`` slot rows at KV context
+    ``kv_len`` under per-stage degree ``(dx, dy)``.
+
+    Decode inverts the training regime: matmuls are memory-bound (the
+    whole weight matrix streams from HBM for a handful of rows) and the
+    collectives are LATENCY-bound (the payload is ``rows * d_model`` bytes
+    — kilobytes, not megabytes).  A fused ring still hides the *bandwidth*
+    component under the tile matmuls, but the per-hop latency floor is
+    serial and has nothing to hide behind at single-token shapes — the
+    overlap term saturates, which is what pushes the latency planner off
+    wide rings (toward 2D splits or pipeline stages) on commodity links.
+    """
+    dx, dy = _dxy(degree)
+    n = dx * dy
+    total = 0.0
+    for blk in _block_costs(cfg, kind, rows, kv_len):
+        w_bytes = blk.params * hw.bytes_act / n
+        kv_bytes = 0.0
+        if blk.name in ("attn", "xattn"):
+            kv_bytes = (2.0 * rows * kv_len * cfg.num_kv_heads
+                        * cfg.resolved_head_dim * hw.bytes_act / dx)
+        width = max(cfg.d_ff, cfg.num_heads * cfg.resolved_head_dim) // dx
+        eff = _mxu_eff(hw, width, rows)
+        d = max((w_bytes + kv_bytes) / hw.hbm_bw,
+                blk.flops_fwd / n / (hw.peak_flops * eff))
+        if not blk.n_collectives:
+            total += d
+            continue
+        k_bytes = rows * cfg.d_model * hw.bytes_act
+        c_bw = c_lat = 0.0
+        if dx > 1:
+            c_bw += (k_bytes / dy) * 2.0 * (dx - 1) / dx / hw.ring_bw(dx)
+            c_lat += hw.collective_latency(dx)
+        if dy > 1:
+            c_bw += k_bytes * 2.0 * (dy - 1) / dy / hw.ring_bw(n)
+            # the y hops cross nodes whenever the whole group spills out
+            # of one (the 2D layout's intended placement)
+            ns = hw.node_size or hw.n_chips
+            lat_hop = hw.lat_y if n > ns else hw.comm_latency
+            c_lat += 2.0 * (dy - 1) * lat_hop
+        if schedule == "fused":
+            total += max(d, c_bw) + c_lat
+        else:
+            total += d + c_bw + c_lat
+    return total
+
+
+def _decode_head_time(cfg: ArchConfig, hw: HWConfig, rows: int,
+                      n_tmp: int) -> float:
+    """LM-head matmul + greedy top-1 all-gather, paid once per engine
+    step outside the layer stack.  The embed/head are vocab-sharded over
+    the TMP group only and REPLICATED over ``pipe`` (models/params.py) —
+    every stage computes the full local head after the broadcast — so the
+    sharding divisor is the per-stage group ``n_tmp``, not n_tmp * pp."""
+    vp = cfg.padded_vocab()
+    w_bytes = vp * cfg.d_model * hw.bytes_act / max(n_tmp, 1)
+    flops = 2.0 * rows * cfg.d_model * vp / max(n_tmp, 1)
+    t = max(w_bytes / hw.hbm_bw, flops / (hw.peak_flops * hw.mxu_base_eff))
+    # greedy argmax all-gather over the TMP group (one phase)
+    t += hw.collective_latency(n_tmp) / 2.0
+    return t
+
+
+def decode_step_time(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
+                     hw: HWConfig, degree=1, pp: int = 1, *,
+                     virtual_stages: int = 1, n_micro: int = 0) -> Dict:
+    """Per-engine-step latency of sharded decode on a ``(dx, dy, pp)``
+    serving mesh — one token for every one of ``shape.global_batch``
+    concurrent slots at KV context ``shape.seq_len``.
+
+    ``degree`` is the PER-STAGE TMP degree (int or ``(dx, dy)``); ``pp``
+    stages each own ``num_layers / pp`` of the stack on ``n_chips / pp``
+    chips.  Under PP the slot batch streams through the stages as
+    ``n_micro`` micro-groups (``core/pipeline.decode_stream``):
+    ``ticks = n_micro + pp*v - 1`` and every tick runs one stage's layers
+    on one micro-group — fewer layers per tick, but the stage weights
+    re-stream from HBM once per micro-group, which is the latency/
+    throughput trade the planner arbitrates.
+    """
+    batch = max(shape.global_batch, 1)
+    kv_len = shape.seq_len
+    pat = cfg.layer_pattern
+    v = max(virtual_stages, 1)
+    dx, dy = _dxy(degree)
+    n_s = dx * dy
+
+    if pp <= 1:
+        layers = sum(_decode_layer_time(cfg, pat[i % len(pat)], hw, degree,
+                                        batch, kv_len, hp.schedule)
+                     for i in range(cfg.num_layers))
+        total = layers + _decode_head_time(cfg, hw, batch, n_s)
+        micro, t_hop = 1, 0.0
+    else:
+        # the execution path's resolver, so the planner never reports an
+        # n_micro the engine would refuse (explicit non-divisors raise
+        # there too)
+        from repro.core.pipeline import resolve_decode_micro
+        micro = resolve_decode_micro(batch, pp, v, n_micro)
+        mb = batch // micro
+        per_tick = sum(
+            _decode_layer_time(cfg, pat[i % len(pat)], hw, degree, mb,
+                               kv_len, hp.schedule)
+            for i in range(cfg.num_layers)) / pp
+        chips = max(hw.n_chips // pp, 1)
+        ns = hw.node_size or hw.n_chips
+        spans = chips >= ns            # stages own whole nodes
+        bw = hw.bw_y if spans else hw.bw_x
+        lat = hw.lat_y if spans else hw.comm_latency
+        t_hop = mb * cfg.d_model * hw.bytes_act / bw + lat
+        ticks = micro + pp * v - 1
+        total = ticks * (per_tick + t_hop)
+        # broadcast of the last stage's hidden state (psum over pipe)
+        total += (batch * cfg.d_model * hw.bytes_act * 2.0 * (pp - 1) / pp
+                  / bw + 2 * (pp - 1) * lat)
+        total += _decode_head_time(cfg, hw, batch, n_s)
+
+    # memory: bf16 weights /(pp * n_s) per chip + the KV cache of the
+    # stage's layers, head-sharded over dx
+    params = sum(b.params for i in range(cfg.num_layers)
+                 for b in _block_costs(cfg, pat[i % len(pat)], 1, kv_len))
+    mem = params * hw.bytes_act / (pp * n_s)
+    # head/embed replicated over pipe: sharded by the TMP group only
+    mem += cfg.padded_vocab() * cfg.d_model * hw.bytes_act / max(n_s, 1)
+    kv_layers = sum(1 for i in range(cfg.num_layers)
+                    if pat[i % len(pat)] in (GLOBAL_ATTN, LOCAL_ATTN,
+                                             CROSS_ATTN))
+    mem += (kv_layers / pp) * (2.0 * batch * kv_len * cfg.num_kv_heads
+                               * cfg.resolved_head_dim * hw.bytes_act / dx)
+    return {"step_s": total, "tok_per_s": batch / total,
+            "n_micro": micro, "t_hop": t_hop,
+            "mem_bytes": mem, "fits": mem < hw.hbm_cap}
 
 
 def pipeline_time(t_tmp: float, pp: int, n_micro: int,

@@ -92,7 +92,8 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
          mem_cap: Optional[float] = None,
          time_limit: float = 20.0,
          layout: str = "1d",
-         stages: int = 1) -> PlanResult:
+         stages: int = 1,
+         objective: str = "throughput") -> "PlanResult | ServingPlanResult":
     """``layout`` is the explicit search-space knob (it deliberately does
     NOT read ``hp.tmp_layout``, which governs the *execution* layout and
     defaults to mesh-following 'auto'): '1d' preserves the paper's search
@@ -100,7 +101,25 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     pipeline-stage count — weight/optimizer rows of Eq. 6 scale 1/stages
     (each chip holds that fraction of the layers) while live activations
     keep their in-flight-microbatch factor (costmodel.pipeline_mem_scales;
-    used by :func:`plan_joint`)."""
+    used by :func:`plan_joint`).
+
+    ``objective='latency'`` retargets the search at serving: instead of
+    the per-layer throughput ILP it runs :func:`plan_serving` — a
+    ``(dx, dy, pp)`` mesh search minimizing per-token decode-step latency
+    (``costmodel.decode_step_time``) — and returns a
+    :class:`ServingPlanResult`."""
+    if objective == "latency":
+        # the serving search defaults to the full layout space ('1d' here
+        # is plan()'s paper-faithful TRAINING default, not a user choice;
+        # call plan_serving directly to force a 1D-only latency search)
+        return plan_serving(cfg, shape, hp, hw, options=options,
+                            mem_cap=mem_cap,
+                            layout="auto" if layout == "1d" else layout)
+    if objective != "throughput":
+        raise ValueError(
+            f"unknown planner objective {objective!r}: expected "
+            f"'throughput' (training iteration time, the default) or "
+            f"'latency' (serving per-token decode latency)")
     t0 = time.time()
     options = expand_options(cfg, hw, options, layout)
     L = cfg.num_layers
@@ -115,20 +134,25 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     overlap = hp.schedule in ("oases", "merak") and split > 1
     fused = hp.schedule == "fused"
 
-    d_f = np.zeros((L, P)); c_f = np.zeros((L, P))
-    d_b = np.zeros((L, P)); c_b = np.zeros((L, P))
+    d_f = np.zeros((L, P))
+    c_f = np.zeros((L, P))
+    d_b = np.zeros((L, P))
+    c_b = np.zeros((L, P))
     mem = np.zeros((L, P))
     # fused node costs must be summed over blocks PER BLOCK (the kernel
     # rings are per-block: one block's comm never hides under another
     # block's compute), matching estimate_iteration — aggregating d/c
     # first and applying max{} after would understate comm-bound layers
-    fused_f = np.zeros((L, P)); fused_b = np.zeros((L, P))
+    fused_f = np.zeros((L, P))
+    fused_b = np.zeros((L, P))
     s_sc, t_sc = cm.pipeline_mem_scales(stages, hp.microbatch)
     for i, layer in enumerate(blocks):
         for blk in layer:
             nc = cm.node_costs(cfg, blk, shape, hp, hw, options)
-            d_f[i] += nc.d_f; c_f[i] += nc.c_f
-            d_b[i] += nc.d_b; c_b[i] += nc.c_b
+            d_f[i] += nc.d_f
+            c_f[i] += nc.c_f
+            d_b[i] += nc.d_b
+            c_b[i] += nc.c_b
             mem[i] += np.array(nc.mem_s) * s_sc + np.array(nc.mem_t) * t_sc
             if fused:
                 for j in range(P):
@@ -224,7 +248,6 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
 
     # edge products + costs
     for e, (a, b) in enumerate(edges):
-        nca = None
         for j in range(P):
             for k in range(P):
                 yi = nS + nU + e * P * P + j * P + k
@@ -452,3 +475,87 @@ def plan_joint(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
         else float("inf")
     best.solve_ms = (time.time() - t0) * 1e3
     return best
+
+
+# --------------------------------------------------------------------------
+# serving-mesh search (objective="latency")
+# --------------------------------------------------------------------------
+@dataclass
+class ServingPlanResult:
+    degree: object                         # per-stage TMP degree: int | (dx, dy)
+    pp: int                                # pipeline stages (1 = TMP-only)
+    n_micro: int                           # decode micro-groups in flight
+    predicted_s: float                     # per-engine-step (per-token) latency
+    tok_per_s: float                       # batch tokens per step / latency
+    mem_bytes: float
+    fits: bool
+    tmp_only_s: float                      # best pp=1 candidate (baseline)
+    solve_ms: float
+    status: str
+
+    @property
+    def dxy(self) -> Tuple[int, int]:
+        return cm._dxy(self.degree)
+
+    def summary(self) -> str:
+        return (f"serve pp={self.pp} x [{_fmt_degree(self.degree)}] "
+                f"m={self.n_micro} predicted "
+                f"{self.predicted_s*1e3:.2f} ms/token "
+                f"({self.tok_per_s:.0f} tok/s; tmp-only "
+                f"{self.tmp_only_s*1e3:.2f} ms; {self.status})")
+
+
+def plan_serving(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
+                 hw: cm.HWConfig = cm.V5E,
+                 options: Sequence[int] = (2, 4, 8, 16),
+                 mem_cap: Optional[float] = None,
+                 layout: str = "auto",
+                 pp_options: Optional[Sequence[int]] = None,
+                 virtual_stages: int = 1) -> ServingPlanResult:
+    """Search ``(dx, dy, pp)`` serving meshes for minimum per-token decode
+    latency (``costmodel.decode_step_time``).
+
+    ``options`` name the TOTAL model-parallel capacity exactly as in
+    :func:`plan`/:func:`plan_joint`: a pp-stage candidate shards each
+    stage ``option / pp`` ways, holding per-chip weight memory constant
+    across candidates.  ``shape`` describes the serving point —
+    ``global_batch`` concurrent decode slots at KV context ``seq_len``
+    (e.g. ``configs.base.DECODE_32K``).  At these shapes collectives are
+    latency-bound, so on commodity fixtures wide 1D rings that span boxes
+    lose to 2D splits or cross-box pipeline stages; on a uniform NVLink
+    box the 1D ring stays optimal.  Ties break toward fewer stages, then
+    the 1D layout, then the thinnest y split.
+    """
+    t0 = time.time()
+    cap = mem_cap if mem_cap is not None else hw.hbm_cap
+    v = max(virtual_stages, 1)
+    candidates = []
+    for n_total in (int(n) for n in options):
+        pps = list(pp_options) if pp_options is not None \
+            else _default_pp_options(cfg, hw, v)
+        for pp in pps:
+            if n_total % pp or n_total // pp < 1:
+                continue
+            n_s = n_total // pp
+            for deg in expand_options(cfg, hw, [n_s], layout):
+                est = cm.decode_step_time(cfg, shape, hp, hw, deg, pp,
+                                          virtual_stages=v)
+                dx, dy = cm._dxy(deg)
+                fits = est["mem_bytes"] < cap
+                candidates.append((est["step_s"], pp, dy, dx, deg, est,
+                                   fits))
+    if not candidates:
+        raise ValueError(
+            f"no feasible (degree, pp) serving candidates for {cfg.name} "
+            f"on {hw.n_chips} chips with options {tuple(options)}")
+    fitting = [c for c in candidates if c[6]] or candidates
+    best = min(fitting, key=lambda c: c[:4])
+    tmp_only = [c for c in candidates if c[1] == 1]
+    _, pp, _, _, deg, est, fits = best
+    return ServingPlanResult(
+        degree=deg, pp=pp, n_micro=est["n_micro"],
+        predicted_s=est["step_s"], tok_per_s=est["tok_per_s"],
+        mem_bytes=est["mem_bytes"], fits=fits,
+        tmp_only_s=min(c[0] for c in tmp_only) if tmp_only else float("inf"),
+        solve_ms=(time.time() - t0) * 1e3,
+        status="fits" if fits else "over-memory")

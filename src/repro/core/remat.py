@@ -11,8 +11,6 @@
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 
 from repro.core.tmp import COLLECTIVE_NAME

@@ -22,7 +22,7 @@ comm/compute overlap (DESIGN.md §2):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -138,7 +138,9 @@ class TmpCtx:
             if self.schedule == "fused" and xy.ndim >= 2:
                 from repro.kernels import collective_matmul as cm
                 y = cm.fused_matmul_allreduce(
-                    xy, w, self.y_axes, scatter_dim=min(1, xy.ndim - 2),
+                    xy, w, self.y_axes,
+                    scatter_dim=self._ring_dim(xy, min(1, xy.ndim - 2),
+                                               self.y_axes),
                     use_pallas=self.use_pallas)
                 return checkpoint_name(y, tmpc.COLLECTIVE_NAME)
             return tmpc.tmp_reduce(jnp.dot(xy, w), self.y_axes)
@@ -157,6 +159,27 @@ class TmpCtx:
         if self.y_axes and w_rows != x.shape[-1]:
             return tmpc.batch_split(x, self.y_axes, x.ndim - 1), True
         return x, False
+
+    def _ring_dim(self, x, preferred: int, axes: Tuple[str, ...]) -> int:
+        """Chunking dim for the fused all-reduce rings.
+
+        Training activations ring over the sequence dim; at decode shapes
+        the sequence dim is 1 (a single token), so the ring would silently
+        fall back to the blocking reference.  The all-reduce flavour is free
+        to chunk along ANY non-contraction dim (the output is replicated
+        either way), so when the preferred dim has collapsed to 1 we stream
+        the ring over the slot-batch dim instead — this is what keeps
+        ``schedule="fused"`` overlapping at batch-1 decode shapes.  Dims
+        that the group size does not divide are left to the kernel's own
+        reference fallback.
+        """
+        if x.shape[preferred] != 1:
+            return preferred
+        n = self._size(axes)
+        for dim in range(x.ndim - 1):
+            if dim != preferred and n > 1 and x.shape[dim] % n == 0:
+                return dim
+        return preferred
 
     def row_matmul(self, x, w, seq_dim: int = 1, full_out: Optional[int] = None):
         """x [..., K_local] @ w [K_local, D] followed by AllReduce (or
@@ -182,7 +205,9 @@ class TmpCtx:
             if self.schedule == "fused" and self.x_axes and x.ndim >= 2:
                 from repro.kernels import collective_matmul as cm
                 y = cm.fused_matmul_allreduce(
-                    x, w, self.x_axes, scatter_dim=min(seq_dim, x.ndim - 2),
+                    x, w, self.x_axes,
+                    scatter_dim=self._ring_dim(x, min(seq_dim, x.ndim - 2),
+                                               self.x_axes),
                     use_pallas=self.use_pallas)
                 y = checkpoint_name(y, tmpc.COLLECTIVE_NAME)
             else:
@@ -200,7 +225,9 @@ class TmpCtx:
                     x, w, self.tp_axes, seq_dim, self.use_pallas)
             else:
                 y = cm.fused_matmul_allreduce(
-                    x, w, self.tp_axes, scatter_dim=min(seq_dim, x.ndim - 2),
+                    x, w, self.tp_axes,
+                    scatter_dim=self._ring_dim(x, min(seq_dim, x.ndim - 2),
+                                               self.tp_axes),
                     use_pallas=self.use_pallas)
             return checkpoint_name(y, tmpc.COLLECTIVE_NAME)
         if self.schedule == "wang" and not self.seq_parallel and x.ndim >= 2:

@@ -18,7 +18,7 @@ custom-VJPs consistent with that convention.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

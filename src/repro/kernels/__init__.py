@@ -1,4 +1,4 @@
-"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §6).
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §2).
 
 Each kernel module is a ``pl.pallas_call`` with explicit BlockSpec VMEM
 tiling; ``ops.py`` holds the jit'd public wrappers (interpret=True off-TPU)

@@ -15,7 +15,6 @@ and gemma2-style attention-logit softcap.  Validated against
 from __future__ import annotations
 
 import functools
-import math
 from typing import Optional
 
 import jax

@@ -17,8 +17,6 @@ loop-free modules in tests/test_hlo_cost.py.
 """
 from __future__ import annotations
 
-import json
-import math
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field

@@ -1,8 +1,20 @@
 """Serving launcher: batched requests through the continuous-batching
-engine.
+engine, on single-device or TMP / pipeline-parallel meshes.
 
+    # single device (CPU smoke)
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --reduced --requests 8 --slots 4
+
+    # 2-way TMP with fused collective-matmul decode
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --reduced --mesh 1x2 --schedule fused
+
+    # 2 pipeline stages x 2-way TMP (decode micro-steps stream through
+    # the stages)
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --reduced --pp 2 --mesh 1x2 --schedule fused
 """
 from __future__ import annotations
 
@@ -13,33 +25,88 @@ import numpy as np
 
 
 def main():
+    from repro.core.schedule import SCHEDULES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--prefill-len", type=int, default=0,
+                    help="longest admissible prompt (engine admission "
+                         "contract); 0 = derive max_seq // 2")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--schedule", default="oases", choices=list(SCHEDULES),
+                    help="TMP overlap schedule for the decode matmuls "
+                         "('fused' rings the collectives over the slot "
+                         "batch)")
+    ap.add_argument("--mesh", default="auto",
+                    help="auto | dxm (e.g. 1x4) | dxm1xm2 (2D hybrid, "
+                         "e.g. 1x2x2); --pp prepends a 'pipe' stage axis")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline-parallel stages: decode micro-steps "
+                         "stream through the stages (stage s decodes "
+                         "micro-group g while stage s-1 decodes g+1)")
+    ap.add_argument("--tmp-layout", default="auto",
+                    choices=["auto", "1d", "2d"])
+    ap.add_argument("--decode-micro", type=int, default=0,
+                    help="decode micro-group count on a pipeline mesh "
+                         "(0 = auto: pp * virtual stages)")
+    ap.add_argument("--plan", default="", choices=["", "commodity", "nvlink"],
+                    help="print the latency-objective serving plan "
+                         "(plan(objective='latency')) for this arch on a "
+                         "fixture HWConfig before serving")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import jax
 
+    from repro.configs.base import TrainHParams
     from repro.configs.registry import get_config
-    from repro.launch.mesh import make_smoke_mesh
+    from repro.launch.mesh import make_smoke_mesh, parse_mesh_shape
     from repro.serving import Request, ServingEngine
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced().replace(dtype="float32")
-    mesh = make_smoke_mesh()
-    eng = ServingEngine(cfg, mesh, slots=args.slots, max_seq=args.max_seq)
+
+    if args.plan:
+        from repro.configs.base import ShapeConfig
+        from repro.core.planner import COMMODITY_25GBE, NVLINK_BOX, plan
+        hw = COMMODITY_25GBE if args.plan == "commodity" else NVLINK_BOX
+        shape = ShapeConfig("serve_cli", args.max_seq, args.slots, "decode")
+        pr = plan(cfg, shape, TrainHParams(schedule=args.schedule), hw,
+                  options=tuple(n for n in (2, 4, 8, 16)
+                                if n <= hw.n_chips) or (hw.n_chips,),
+                  objective="latency")
+        print(f"latency planner ({args.plan}): {pr.summary()}")
+
+    pp = max(args.pp, 1)
+    if args.mesh == "auto":
+        if pp > 1:
+            from repro.launch.mesh import make_pipeline_mesh
+            n = len(jax.devices())
+            if n % pp:
+                raise SystemExit(f"--pp {pp} does not divide the "
+                                 f"{n} available devices")
+            mesh = make_pipeline_mesh(pp, max(n // pp, 1), 1)
+        else:
+            mesh = make_smoke_mesh()
+    else:
+        mesh = parse_mesh_shape(args.mesh, pp=pp)
+
+    hp = TrainHParams(schedule=args.schedule, tmp_layout=args.tmp_layout)
+    eng = ServingEngine(cfg, mesh, slots=args.slots, max_seq=args.max_seq,
+                        hp=hp, prefill_len=args.prefill_len or None,
+                        decode_micro=args.decode_micro)
     eng.load(seed=args.seed)
 
     rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
-        plen = int(rng.integers(4, 12))
+        hi = max(min(12, eng.prefill_len + 1), 2)
+        plen = int(rng.integers(min(4, hi - 1), hi))
         r = Request(rid=i,
                     prompt=rng.integers(3, cfg.vocab_size, plen,
                                         dtype=np.int32),
@@ -48,6 +115,9 @@ def main():
         eng.submit(r)
     stats = eng.run_until_drained()
     print(json.dumps({**stats,
+                      "mesh": dict(mesh.shape),
+                      "schedule": args.schedule,
+                      "prefill_len": eng.prefill_len,
                       "sample_output": reqs[0].out_tokens[:8]}, indent=1))
 
 

@@ -2,12 +2,11 @@
 benchmarks: train_step (fwd+bwd+AdamW), prefill_step, serve_step."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ArchConfig, ShapeConfig, TrainHParams
 from repro.core.axes import batch_pspec, deg_total, mesh_info
@@ -128,9 +127,9 @@ def build_train_step(cfg: ArchConfig, mesh, hp: TrainHParams, *,
                 mb = jax.tree_util.tree_map(
                     lambda t: jax.lax.dynamic_index_in_dim(
                         t, i, 0, keepdims=False), batch)
-                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                (ls, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
                 return (jax.tree_util.tree_map(
-                    jnp.add, g_acc, _constrain(g)), l_acc + l)
+                    jnp.add, g_acc, _constrain(g)), l_acc + ls)
 
             zero_g = jax.tree_util.tree_map(
                 lambda w, s: jax.lax.with_sharding_constraint(
@@ -216,11 +215,13 @@ def build_serve_step(cfg, mesh, hp, *, global_batch, seq_len):
 def serve_abstract_inputs(cfg, mesh, hp, *, global_batch, seq_len):
     info = mesh_info(mesh)
     specs = prm.model_specs(cfg, info, max_pos=seq_len + 8,
-                            layout=hp.tmp_layout)
+                            layout=hp.tmp_layout,
+                            virtual_stages=hp.virtual_stages)
     params = prm.abstract_params(specs, mesh)
     bspec = batch_pspec(info, global_batch)
     st_specs = prm.cache_specs(cfg, info, batch=global_batch, seq=seq_len,
-                               batch_spec=bspec, layout=hp.tmp_layout)
+                               batch_spec=bspec, layout=hp.tmp_layout,
+                               virtual_stages=hp.virtual_stages)
     state = prm.abstract_params(st_specs, mesh)
     bs = NamedSharding(mesh, bspec)
     tokens = jax.ShapeDtypeStruct((global_batch,), jnp.int32, sharding=bs)

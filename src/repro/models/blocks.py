@@ -10,7 +10,6 @@
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Callable, Dict, List
 
 import jax

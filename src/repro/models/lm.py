@@ -13,14 +13,13 @@ the latency-hiding scheduler can overlap it with remaining compute).
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, TrainHParams
 from repro.core import compat
@@ -327,12 +326,29 @@ def _last_logits(cfg, params, x_last, ctx):
     return logits
 
 
+def _decode_embed(cfg, ctx, params, tokens, pos):
+    """Shared decode-step preamble: vocab-parallel embed of the current
+    token + family scaling + clamped pos-embed gather (one source for the
+    plain and pipeline decode bodies)."""
+    x = tmpc.vocab_parallel_embed(tokens[:, None], params["embed"],
+                                  ctx.tp_axes)
+    if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if "pos_embed" in params:
+        pe = jnp.take(params["pos_embed"], jnp.minimum(
+            pos, params["pos_embed"].shape[0] - 1), axis=0)
+        x = x + pe[:, None].astype(x.dtype)
+    return x
+
+
 def _no_pipe(info: MeshInfo, what: str):
     if info.pp > 1:
         raise ValueError(
-            f"{what} does not support a 'pipe' mesh axis — pipeline "
-            f"parallelism is a training-time layout; serve/prefill on a "
-            f"data x model mesh instead")
+            f"{what} does not support a 'pipe' mesh axis yet — decode "
+            f"streams through pipeline stages (build_decode) but the "
+            f"batched prefill path runs on a data x model mesh; drop the "
+            f"pipe axis or admit prompts through decode steps (the "
+            f"serving engine's default)")
 
 
 def build_prefill(cfg: ArchConfig, mesh, hp: TrainHParams, *,
@@ -396,29 +412,36 @@ def build_prefill(cfg: ArchConfig, mesh, hp: TrainHParams, *,
 
 
 def build_decode(cfg: ArchConfig, mesh, hp: TrainHParams, *,
-                 global_batch: int, seq_len: int):
-    """serve_step(params, state, tokens [b], pos [b]) -> (next [b], state)."""
+                 global_batch: int, seq_len: int, n_micro: int = 0):
+    """serve_step(params, state, tokens [b], pos [b]) -> (next [b], state).
+
+    Decode runs under the same ``TmpCtx`` schedule machinery as training:
+    ``hp.schedule == "fused"`` streams the projection all-reduces as rings
+    chunked over the slot batch (the seq dim is 1 at decode — see
+    ``TmpCtx._ring_dim``), so the collective transfers hide under the
+    matmul tiles even at batch-1 shapes.  On a mesh with a ``pipe`` axis
+    the layer stack is stage-sharded and the slot batch streams through the
+    stages as ``n_micro`` micro-groups (``core/pipeline.decode_stream``):
+    stage ``s`` decodes micro-group ``g`` while stage ``s-1`` decodes
+    ``g+1``, with per-stage KV caches staying put on their stage.
+    """
     info = mesh_info(mesh)
-    _no_pipe(info, "decode")
     specs = prm.model_specs(cfg, info, max_pos=seq_len + 8,
-                            layout=hp.tmp_layout)
-    ctx = TmpCtx(info, schedule="megatron", use_pallas=hp.use_pallas,
+                            layout=hp.tmp_layout,
+                            virtual_stages=hp.virtual_stages)
+    ctx = TmpCtx(info, schedule=hp.schedule, use_pallas=hp.use_pallas,
                  layout=hp.tmp_layout)
     bspec = batch_pspec(info, global_batch)
     st_specs = prm.cache_specs(cfg, info, batch=global_batch, seq=seq_len,
-                               batch_spec=bspec, layout=hp.tmp_layout)
+                               batch_spec=bspec, layout=hp.tmp_layout,
+                               virtual_stages=hp.virtual_stages)
     n, pat, tail = prm.stack_layout(cfg)
+    if info.pp > 1:
+        return _build_decode_pp(cfg, mesh, hp, info, ctx, specs, st_specs,
+                                bspec, global_batch, n_micro)
 
     def body(params, state, tokens, pos):
-        b = tokens.shape[0]
-        x = tmpc.vocab_parallel_embed(tokens[:, None], params["embed"],
-                                      ctx.tp_axes)
-        if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
-            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
-        if "pos_embed" in params:
-            pe = jnp.take(params["pos_embed"], jnp.minimum(
-                pos, params["pos_embed"].shape[0] - 1), axis=0)
-            x = x + pe[:, None].astype(x.dtype)
+        x = _decode_embed(cfg, ctx, params, tokens, pos)
         aux = {"pos": pos}
         fns = {k: blk.decode_fn(cfg, ctx, k) for k in set(pat) | set(tail)}
 
@@ -458,6 +481,80 @@ def build_decode(cfg: ArchConfig, mesh, hp: TrainHParams, *,
         x = tmpc.rms_norm(x, params["final_ln"], cfg.norm_eps)
         logits = _last_logits(cfg, params, x[:, 0], ctx)
         return greedy_token(logits, ctx.tp_axes), new_state
+
+    st_ps = prm.pspec_tree(st_specs)
+    sm = compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(prm.pspec_tree(specs), st_ps, bspec, bspec),
+        out_specs=(bspec, st_ps), check_vma=False)
+    return sm, specs, st_specs
+
+
+def _build_decode_pp(cfg, mesh, hp, info, ctx, specs, st_specs, bspec,
+                     global_batch, n_micro):
+    """Pipeline-parallel serve_step: per-stage token micro-step streaming.
+
+    Stage ``s = c*pp + d`` holds layers ``[s*n/S, (s+1)*n/S)`` of the
+    ``[v, pp, per]``-stacked params AND their KV caches; only activations
+    ride the ``pipe`` ppermute ring.  The final hidden state is valid on
+    the last stage — masked and psum-broadcast over ``pipe`` so every
+    device samples the identical greedy token (the engine reads one global
+    array)."""
+    from repro.core import pipeline as pl
+    from repro.core.axes import local_batch
+    n, pat, _tail = prm.stack_layout(cfg)
+    v = max(hp.virtual_stages, 1)
+    per = n // (info.pp * v)
+    pipe_ax = info.pipe_axes[0]
+    b_local = local_batch(info, global_batch)
+    micro = pl.resolve_decode_micro(b_local, info.pp, v, n_micro)
+    mb = b_local // micro
+
+    def body(params, state, tokens, pos):
+        b = tokens.shape[0]
+        x = _decode_embed(cfg, ctx, params, tokens, pos)
+        fns = {k: blk.decode_fn(cfg, ctx, k) for k in set(pat)}
+
+        def stage_fn(c, h, st_c, mc):
+            # this device's virtual-stage chunk c: leading dims [v, 1, per]
+            chunk = tuple(jax.tree_util.tree_map(lambda t: t[c, 0], bl)
+                          for bl in params["blocks"])
+            aux = {"pos": lax.dynamic_slice_in_dim(pos, mc * mb, mb,
+                                                   axis=0)}
+
+            def block_body(carry, inp):
+                xc, st_stack = carry
+                layer_params, j = inp
+                st_out = []
+                for p_, kind in enumerate(pat):
+                    st_j = jax.tree_util.tree_map(
+                        lambda t: lax.dynamic_index_in_dim(t, j, 0, False),
+                        st_stack[p_])
+                    xc, stn = fns[kind](layer_params[p_], xc, st_j, aux)
+                    st_out.append(stn)
+                st_stack = tuple(
+                    jax.tree_util.tree_map(
+                        lambda t, s: lax.dynamic_update_index_in_dim(
+                            t, s.astype(t.dtype), j, 0),
+                        st_stack[p_], st_out[p_])
+                    for p_ in range(len(pat)))
+                return (xc, st_stack), None
+
+            (h, st_c), _ = lax.scan(
+                block_body, (h, st_c),
+                (chunk, jnp.arange(per, dtype=jnp.int32)))
+            return h, st_c
+
+        x_mb = x.reshape((micro, mb) + tuple(x.shape[1:]))
+        outs, new_blocks = pl.decode_stream(
+            stage_fn, x_mb, tuple(state["blocks"]), pipe_axis=pipe_ax,
+            pp=info.pp, virtual_stages=v)
+        x = outs.reshape((b,) + tuple(x.shape[1:]))
+        x = lax.psum(pl.mask_to_last_stage(x, pipe_ax, info.pp), pipe_ax)
+        x = tmpc.rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = _last_logits(cfg, params, x[:, 0], ctx)
+        return greedy_token(logits, ctx.tp_axes), {"blocks": list(new_blocks),
+                                                   "tail": []}
 
     st_ps = prm.pspec_tree(st_specs)
     sm = compat.shard_map(

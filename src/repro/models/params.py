@@ -349,10 +349,17 @@ def plan_groups(cfg: ArchConfig, degrees: Sequence[int]):
 # decode/prefill state (KV caches, recurrent states) specs
 # --------------------------------------------------------------------------
 def cache_specs(cfg: ArchConfig, info: MeshInfo, *, batch: int, seq: int,
-                batch_spec, layout: str = "auto") -> Dict[str, Any]:
+                batch_spec, layout: str = "auto",
+                virtual_stages: int = 1) -> Dict[str, Any]:
     """State tree for serve_step.  Global shapes; kv-head dim sharded when
     the attention plan shards it (replicated+sliced layouts store
-    tp*kv_slice).  2D: heads shard over the x-axes only (dx)."""
+    tp*kv_slice).  2D: heads shard over the x-axes only (dx).
+
+    On a mesh with a ``pipe`` axis the stacked cache restructures to the
+    stage-sharded ``[v, pp, n/S, ...]`` layout mirroring
+    :func:`_stack_pipeline` — each stage owns exactly the cache of the
+    layers it holds, so decode state memory shards 1/pp alongside the
+    weights (the serving analogue of the Eq. 6 weight-memory row)."""
     tp_ax, _, tp, _ = info_xy(info, None, layout)
     plan = attn_plan(cfg, tp)
     hd = cfg.resolved_head_dim
@@ -403,6 +410,20 @@ def cache_specs(cfg: ArchConfig, info: MeshInfo, *, batch: int, seq: int,
             }
         raise ValueError(kind)
 
+    if info.pp > 1:
+        from repro.core.pipeline import validate_stage_layout
+        v = max(virtual_stages, 1)
+        per = validate_stage_layout(cfg, n, len(tail), info.pp, v)
+
+        def restack(tree):
+            return tree_map_specs(
+                lambda s: Spec((v, info.pp, per) + s.shape[1:],
+                               P(*((None, "pipe", None)
+                                   + tuple(s.pspec)[1:])),
+                               s.dtype, s.scale), tree)
+
+        return {"blocks": [restack(state_for(k, n)) for k in pat],
+                "tail": []}
     out: Dict[str, Any] = {
         "blocks": [state_for(k, n) for k in pat] if n else [],
         "tail": [state_for(k, 1) for k in tail],

@@ -6,7 +6,6 @@ Exact w.r.t. the sequential recurrence (tested in tests/test_ssd.py).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -34,7 +33,9 @@ def ssd_chunked(x, dt, A_log, B, C, D, *, chunk: int = 128, h0=None):
     Cf = C.astype(jnp.float32)
 
     # chunk views
-    r = lambda t, extra: t.reshape((b, nc, chunk) + extra)
+    def r(t, extra):
+        return t.reshape((b, nc, chunk) + extra)
+
     dta_c = r(dta, (h,))
     x_c = r(dtx, (h, p))
     B_c = r(Bf, (n,))

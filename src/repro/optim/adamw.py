@@ -8,13 +8,10 @@ via NamedShardings derived from the param spec tree.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.axes import MeshInfo
@@ -73,8 +70,10 @@ def opt_state_specs(param_specs, info: MeshInfo, *, zero1: bool = True):
 
 def init_opt_state(params, param_specs, info: MeshInfo, *, zero1: bool = True):
     specs = opt_state_specs(param_specs, info, zero1=zero1)
-    zeros = lambda tree: prm.tree_map_specs(
-        lambda s: jnp.zeros(s.shape, s.dtype), tree)
+    def zeros(tree):
+        return prm.tree_map_specs(
+            lambda s: jnp.zeros(s.shape, s.dtype), tree)
+
     return {
         "master": jax.tree_util.tree_map(
             lambda w: w.astype(jnp.float32), params),

@@ -20,7 +20,6 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import store
 from repro.configs.base import ArchConfig, TrainHParams

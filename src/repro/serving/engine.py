@@ -1,11 +1,21 @@
 """Batched serving engine: prefill + decode with slot-based continuous
-batching.
+batching, sharded over TMP / pipeline meshes.
 
 The engine owns a fixed pool of ``slots`` (the decode batch dimension).
-Requests are admitted into free slots (prefill fills the slot's KV range),
-every engine step decodes one token for all active slots, and finished
-sequences free their slots for the admission queue — continuous batching
-without re-compiling (all shapes static).
+Requests are admitted into free slots (prompt consumption fills the slot's
+KV range), every engine step decodes one token for all active slots, and
+finished sequences free their slots for the admission queue — continuous
+batching without re-compiling (all shapes static).
+
+Parallel serving: the engine is mesh-agnostic — ``lm.build_decode`` routes
+the decode matmuls through the same ``TmpCtx`` schedules as training (1D
+and 2D TMP layouts; ``schedule="fused"`` rings the projection collectives
+over the slot batch), shards the KV cache head-wise alongside the attention
+weights, and on a ``pipe`` mesh streams decode micro-steps through the
+stages (stage ``s`` decodes micro-group ``g`` while stage ``s-1`` decodes
+``g+1`` — ``core/pipeline.decode_stream``).  Greedy decode is
+token-identical to the single-device engine on every such mesh
+(tests/_scripts/serving_equivalence.py).
 """
 from __future__ import annotations
 
@@ -19,7 +29,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, TrainHParams
-from repro.core.axes import mesh_info
 from repro.models import lm
 from repro.models import params as prm
 
@@ -34,22 +43,42 @@ class Request:
 
 
 class ServingEngine:
+    """``prefill_len`` is the admission contract: the longest prompt a
+    request may carry (longer prompts fail at :meth:`submit`, not deep in
+    the decode loop).  It defaults to half of ``max_seq`` so a prompt-full
+    slot still has decode headroom; pass an explicit value to trade prompt
+    capacity against generation length (``launch/serve.py --prefill-len``).
+
+    ``decode_micro``: micro-group count for pipeline-mesh decode streaming
+    (0 = auto: one group per stage, ``pp * virtual_stages``)."""
+
     def __init__(self, cfg: ArchConfig, mesh, *, slots: int, max_seq: int,
-                 hp: Optional[TrainHParams] = None, eos_id: int = 2):
+                 hp: Optional[TrainHParams] = None, eos_id: int = 2,
+                 prefill_len: Optional[int] = None, decode_micro: int = 0):
         self.cfg = cfg
         self.mesh = mesh
         self.hp = hp or TrainHParams()
         self.slots = slots
         self.max_seq = max_seq
         self.eos_id = eos_id
-        info = mesh_info(mesh)
+        if prefill_len is None:
+            prefill_len = max(max_seq // 2, 1)
+        if not 1 <= prefill_len < max_seq:
+            raise ValueError(
+                f"prefill_len {prefill_len} must be in [1, max_seq) = "
+                f"[1, {max_seq}) — a prompt-full slot needs at least one "
+                f"position of decode headroom")
+        self.prefill_len = prefill_len
 
         self.decode_fn, self.specs, self.state_specs = lm.build_decode(
-            cfg, mesh, self.hp, global_batch=slots, seq_len=max_seq)
+            cfg, mesh, self.hp, global_batch=slots, seq_len=max_seq,
+            n_micro=decode_micro)
+        # donating the KV cache lets XLA alias it through the step on
+        # accelerators; the CPU backend ignores donation (and warns), so
+        # skip it there
         donate = (1,) if jax.default_backend() != "cpu" else ()
+        self.donate_argnums = donate
         self.decode_fn = jax.jit(self.decode_fn, donate_argnums=donate)
-        # single-sequence prefill reused across slots (static shapes)
-        self.prefill_len = 128
 
         self.params = None
         self.state = None
@@ -64,7 +93,20 @@ class ServingEngine:
             self.specs, jax.random.PRNGKey(seed))
         self.state = prm.zeros_state(self.state_specs)
 
+    @property
+    def queued(self) -> int:
+        """Requests waiting for a free slot (admission backlog depth)."""
+        return self.queue.qsize()
+
     def submit(self, req: Request):
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) > self.prefill_len:
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"exceeds prefill_len={self.prefill_len} (engine admission "
+                f"contract; raise --prefill-len / max_seq or chunk the "
+                f"prompt)")
         self.queue.put(req)
 
     def _admit(self):

@@ -23,7 +23,7 @@ t2 = Trainer(cfg, runner.mesh(1, 4), hp, global_batch=8, seq_len=64,
              ckpt_dir=ckpt, log_fn=logs.append)   # half the devices
 r2 = t2.train(16, ckpt_every=4)
 
-restored = any("restored" in l for l in logs)
+restored = any("restored" in ln for ln in logs)
 runner.report(
     "elastic-remesh",
     restored and r2["final_step"] >= 16
@@ -43,7 +43,7 @@ t4 = Trainer(cfg, runner.mesh(2, 4), hp, global_batch=8, seq_len=64,
              ckpt_dir=ckpt_pp, log_fn=logs_pp.append)   # pp dropped
 r4 = t4.train(16, ckpt_every=4)
 
-restored_pp = any("restored" in l for l in logs_pp)
+restored_pp = any("restored" in ln for ln in logs_pp)
 runner.report(
     "elastic-pp-to-tmp",
     restored_pp and r4["final_step"] >= 16
@@ -58,6 +58,6 @@ t5 = Trainer(cfg, pipe_mesh, hp, global_batch=8, seq_len=64,
 r5 = t5.train(24, ckpt_every=8)
 runner.report(
     "elastic-tmp-to-pp",
-    any("restored" in l for l in logs_back) and r5["final_step"] >= 24
+    any("restored" in ln for ln in logs_back) and r5["final_step"] >= 24
     and abs(r5["losses"][0] - r4["losses"][-1]) < 0.5,
     f"loss {r4['losses'][-1]:.3f} -> {r5['losses'][0]:.3f}")

@@ -37,20 +37,20 @@ base_l, base_g = runner.train_loss_and_grads("internlm2-1.8b", fm,
                                              batch=8, degrees=[4, 4])
 for degrees in ([2, 2], [8, 8], [(2, 2), (2, 2)], [(2, 4), (2, 4)],
                 [(4, 2), (4, 2)], [(1, 2), (1, 2)]):
-    l, g = runner.train_loss_and_grads("internlm2-1.8b", fm,
-                                       batch=8, degrees=degrees)
+    ls, g = runner.train_loss_and_grads("internlm2-1.8b", fm,
+                                        batch=8, degrees=degrees)
     gerr = runner.grads_err(base_g, g)
     runner.report(f"plan-{degrees}",
-                  abs(base_l - l) < 2e-4 and gerr < 5e-3,
-                  f"dloss={abs(base_l - l):.2e} gerr={gerr:.2e}")
+                  abs(base_l - ls) < 2e-4 and gerr < 5e-3,
+                  f"dloss={abs(base_l - ls):.2e} gerr={gerr:.2e}")
 
 m_l, m_g = runner.train_loss_and_grads("internlm2-1.8b", fm,
                                        batch=8, degrees=[2, 4])
 for degrees in ([4, 2], [2, 8], [(2, 2), 4], [2, (2, 2)],
                 [(2, 2), (4, 2)], [(1, 4), (2, 2)]):
-    l, g = runner.train_loss_and_grads("internlm2-1.8b", fm,
-                                       batch=8, degrees=degrees)
+    ls, g = runner.train_loss_and_grads("internlm2-1.8b", fm,
+                                        batch=8, degrees=degrees)
     gerr = runner.grads_err(m_g, g)
     runner.report(f"plan-mixed-{degrees}",
-                  abs(m_l - l) < 2e-4 and gerr < 5e-3,
-                  f"dloss={abs(m_l - l):.2e} gerr={gerr:.2e}")
+                  abs(m_l - ls) < 2e-4 and gerr < 5e-3,
+                  f"dloss={abs(m_l - ls):.2e} gerr={gerr:.2e}")

@@ -26,7 +26,7 @@ def factory():
 
 
 res = run_with_restarts(factory, total_steps=20, ckpt_every=5)
-restored = any("restored" in l for l in logs)
+restored = any("restored" in ln for ln in logs)
 runner.report(
     "ft-restart",
     calls[0] == 2 and restored and res["final_step"] >= 20

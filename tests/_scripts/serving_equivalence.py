@@ -1,0 +1,110 @@
+"""Subprocess body: sharded serving (TMP x PP decode) equivalence.
+
+On the 8-virtual-device CPU mesh, greedy decode through the continuous-
+batching engine must be TOKEN-IDENTICAL to the single-device oracle for
+every pp in {1, 2} x tmp in {1, 2} x schedule in {megatron, oases, fused}
+mesh — the sharded KV cache (head-wise alongside the attention weights),
+the fused collective-matmul rings chunked over the slot batch, and the
+pipeline micro-step streaming (core/pipeline.decode_stream: stage s
+decodes micro-group g while stage s-1 decodes g+1, caches staying put per
+stage) are all numerically invisible to the decoded token stream.
+
+Also pinned: the 2D hybrid decode layout, explicit decode micro-group
+counts (1 = sequential stage traversal, 4 = two groups in flight per
+stage), an indivisible slot count on a pipeline mesh, and a second arch
+family (gemma2: sandwich norms + softcaps + local-attention ring cache).
+
+The data axis is sized 8/(pp*tmp) as in pipeline_equivalence.py, so the
+slot batch is dp-sharded whenever divisible and exercises the replicated
+fallback when not (data=8 > slots).
+
+Prints PASS/FAIL lines consumed by tests/test_distributed.py.
+"""
+import runner  # noqa: F401  (must be first: sets XLA_FLAGS before jax)
+
+import numpy as np
+
+from repro.configs.base import TrainHParams
+from repro.serving import Request, ServingEngine
+
+SLOTS = 4
+MAX_SEQ = 48
+N_REQ = 6          # > SLOTS: exercises slot reuse + admission backlog
+
+
+def decode_all(cfg, mesh, hp, *, slots=SLOTS, decode_micro=0):
+    eng = ServingEngine(cfg, mesh, slots=slots, max_seq=MAX_SEQ, hp=hp,
+                        decode_micro=decode_micro)
+    eng.load(seed=0)
+    rng = np.random.default_rng(123)
+    reqs = []
+    for i in range(N_REQ):
+        plen = int(rng.integers(3, 8))
+        reqs.append(Request(rid=i,
+                            prompt=rng.integers(3, cfg.vocab_size, plen,
+                                                dtype=np.int32),
+                            max_new_tokens=6))
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run_until_drained()
+    assert stats["admitted"] == N_REQ, stats
+    return [r.out_tokens for r in reqs]
+
+
+def check_tokens(name, got, ref):
+    same = got == ref
+    detail = "" if same else \
+        f"first-mismatch={next(i for i in range(len(ref)) if got[i] != ref[i])}"
+    runner.report(name, same, detail)
+
+
+# ---- part 1: pp x tmp x schedule grid vs single-device oracle ------------
+cfg = runner.reduced_config("internlm2-1.8b")
+ref = decode_all(cfg, runner.mesh(1, 1), TrainHParams())
+
+for pp in (1, 2):
+    for tmp in (1, 2):
+        data = 8 // (pp * tmp)
+        if pp > 1:
+            msh = runner.mesh(pp, data, tmp, axes=("pipe", "data", "model"))
+        else:
+            msh = runner.mesh(data, tmp)
+        for sched in ("megatron", "oases", "fused"):
+            got = decode_all(cfg, msh, TrainHParams(schedule=sched))
+            check_tokens(f"serve-pp{pp}-tmp{tmp}-{sched}", got, ref)
+
+# ---- part 2: 2D hybrid decode layout -------------------------------------
+msh2d = runner.mesh(1, 2, 2, axes=("data", "model_x", "model_y"))
+for sched in ("oases", "fused"):
+    got = decode_all(cfg, msh2d, TrainHParams(schedule=sched))
+    check_tokens(f"serve-2d-2x2-{sched}", got, ref)
+
+# ---- part 3: explicit decode micro-group counts on the pipe mesh ---------
+# data=1 so the local slot batch is the full 4: micro=1 is the sequential
+# stage traversal, micro=4 puts two groups in flight per stage
+msh = runner.mesh(2, 1, 2, axes=("pipe", "data", "model"))
+for micro in (1, 2, 4):
+    got = decode_all(cfg, msh, TrainHParams(schedule="oases"),
+                     decode_micro=micro)
+    check_tokens(f"serve-pp2-micro{micro}", got, ref)
+
+# ---- part 4: indivisible slot count streams as one micro-group -----------
+ref3 = decode_all(cfg, runner.mesh(1, 1), TrainHParams(), slots=3)
+got = decode_all(cfg, runner.mesh(2, 1, 2, axes=("pipe", "data", "model")),
+                 TrainHParams(schedule="fused"), slots=3)
+check_tokens("serve-pp2-slots3", got, ref3)
+
+# ---- part 5: second arch family (gemma2) ---------------------------------
+gcfg = runner.reduced_config("gemma2-9b")   # sandwich norms, softcaps, local
+gref = decode_all(gcfg, runner.mesh(1, 1), TrainHParams())
+for name, msh in (("pp2-tmp2", runner.mesh(2, 2, 2,
+                                           axes=("pipe", "data", "model"))),
+                  ("2d-2x2", runner.mesh(1, 2, 2,
+                                         axes=("data", "model_x",
+                                               "model_y")))):
+    got = decode_all(gcfg, msh, TrainHParams(schedule="fused"))
+    check_tokens(f"serve-gemma2-{name}-fused", got, gref)
+
+import sys  # noqa: E402
+
+sys.exit(runner.exit_code())

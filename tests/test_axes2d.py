@@ -4,7 +4,7 @@ TmpCtx.  AbstractMesh keeps these in-process (no devices needed)."""
 import pytest
 from jax.sharding import AbstractMesh
 
-from repro.core.axes import (Degree, T_AXES, deg_total, deg_xy, mesh_info)
+from repro.core.axes import T_AXES, deg_total, deg_xy, mesh_info
 
 
 def _info(*shape_axes):

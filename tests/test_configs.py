@@ -1,6 +1,5 @@
 import pytest
 
-from repro.configs.base import SHAPES, applicable_shapes
 from repro.configs.registry import ASSIGNED, all_cells, get_config
 
 

@@ -26,10 +26,10 @@ def _run(name, timeout=900):
                        env=subprocess_env())
     out = p.stdout + p.stderr
     assert p.returncode == 0, out[-3000:]
-    lines = [l for l in p.stdout.splitlines()
-             if l.startswith(("PASS", "FAIL"))]
+    lines = [ln for ln in p.stdout.splitlines()
+             if ln.startswith(("PASS", "FAIL"))]
     assert lines, out[-2000:]
-    bad = [l for l in lines if l.startswith("FAIL")]
+    bad = [ln for ln in lines if ln.startswith("FAIL")]
     assert not bad, "\n".join(lines)
     return lines
 
@@ -83,3 +83,15 @@ def test_pipeline_equivalence():
     arch family and PP x 2D hybrid (PR acceptance)."""
     lines = _run("pipeline_equivalence.py", timeout=1800)
     assert len(lines) >= 14
+
+
+@multidevice
+@pytest.mark.slow
+def test_serving_equivalence():
+    """Sharded greedy decode through the continuous-batching engine is
+    token-identical to the single-device oracle: pp in {1,2} x tmp in
+    {1,2} x {megatron,oases,fused}, plus the 2D hybrid decode layout,
+    explicit micro-group counts, an indivisible slot count, and gemma2
+    (PR acceptance)."""
+    lines = _run("serving_equivalence.py", timeout=1800)
+    assert len(lines) >= 18

@@ -3,7 +3,6 @@ prefill/decode consistency, attention causality & masking properties."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from conftest import optional_hypothesis
 

@@ -7,8 +7,8 @@ import pytest
 
 from repro.configs.base import SHAPES, TrainHParams
 from repro.configs.registry import get_config
-from repro.core.planner import (V5E, estimate_iteration, expand_options,
-                                overlapped_time, overlapped_time_2d, plan)
+from repro.core.planner import (estimate_iteration, expand_options,
+                                overlapped_time, plan)
 from repro.core.planner.costmodel import HWConfig
 
 

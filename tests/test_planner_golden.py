@@ -13,9 +13,10 @@ same commit — the point is that the move is *visible*.
 """
 import pytest
 
-from repro.configs.base import TrainHParams
+from repro.configs.base import ShapeConfig, TrainHParams
 from repro.configs.gpt_oases import PAPER_TABLE4, paper_shape
-from repro.core.planner import COMMODITY_25GBE, NVLINK_BOX, plan
+from repro.core.planner import (COMMODITY_25GBE, NVLINK_BOX,
+                                decode_step_time, plan, plan_serving)
 
 
 def _case(schedule, hw, **kw):
@@ -82,3 +83,80 @@ def test_2d_never_worse_than_1d(schedule, fixture):
     p2 = _case(schedule, HW[fixture], layout="auto")
     assert p2.predicted_s <= p1.predicted_s * (1 + 1e-9), (p1.summary(),
                                                            p2.summary())
+
+
+# --------------------------------------------------------------------------
+# serving latency objective (plan(objective="latency") -> plan_serving)
+# --------------------------------------------------------------------------
+# The latency regime: a handful of concurrent decode slots at moderate KV
+# context, where the per-token collectives are LATENCY-bound (kilobyte
+# payloads) and the matmuls are weight-streaming-bound.  On the commodity
+# fixture a 16-way 1D ring pays NIC crossings every layer, so the hybrid
+# keeps the wide x-ring on the intra-node fabric; on the NVLink box the
+# switched fabric makes the 1D ring strictly cheapest.
+SERVE_SHAPE = ShapeConfig("serve_b8_4k", 4096, 8, "decode")
+# (fixture) -> expected (degree, pp) with options pinned to the full
+# 16-way group (the spanning regime, as in TIGHT_GOLDEN above)
+SERVING_GOLDEN = {
+    "25gbe": ((8, 2), 1),
+    "nvlink": (16, 1),
+}
+
+
+def _serve_case(fixture, **kw):
+    cfg, _tmp, _dp, _gb = PAPER_TABLE4["gpt-h8192"]
+    return plan(cfg, SERVE_SHAPE, TrainHParams(schedule="fused"),
+                HW[fixture], options=(16,), objective="latency", **kw)
+
+
+@pytest.mark.parametrize("fixture", ["25gbe", "nvlink"])
+def test_serving_latency_plan_pinned(fixture):
+    """The acceptance shape of the latency objective: a non-trivial
+    (dx, dy, pp) choice on COMMODITY_25GBE, 1D on NVLINK_BOX."""
+    r = _serve_case(fixture)
+    degree, pp = SERVING_GOLDEN[fixture]
+    assert (r.degree, r.pp) == (degree, pp), r.summary()
+    assert r.fits, r.summary()
+
+
+def test_serving_hybrid_wins_on_commodity_only():
+    cfg = PAPER_TABLE4["gpt-h8192"][0]
+    hp = TrainHParams(schedule="fused")
+    c_1d = decode_step_time(cfg, SERVE_SHAPE, hp, COMMODITY_25GBE, 16)
+    c_2d = decode_step_time(cfg, SERVE_SHAPE, hp, COMMODITY_25GBE, (8, 2))
+    assert c_2d["step_s"] < c_1d["step_s"] * 0.95, (c_1d, c_2d)
+    n_1d = decode_step_time(cfg, SERVE_SHAPE, hp, NVLINK_BOX, 16)
+    n_2d = decode_step_time(cfg, SERVE_SHAPE, hp, NVLINK_BOX, (8, 2))
+    assert n_1d["step_s"] < n_2d["step_s"], (n_1d, n_2d)
+
+
+def test_serving_fused_no_slower_than_blocking():
+    """The fused rings hide the bandwidth component under the decode
+    matmuls; the blocking schedule exposes it — fused must never lose."""
+    cfg = PAPER_TABLE4["gpt-h8192"][0]
+    for hw in (COMMODITY_25GBE, NVLINK_BOX):
+        for deg in (16, (8, 2)):
+            f = decode_step_time(cfg, SERVE_SHAPE,
+                                 TrainHParams(schedule="fused"), hw, deg)
+            m = decode_step_time(cfg, SERVE_SHAPE,
+                                 TrainHParams(schedule="megatron"), hw, deg)
+            assert f["step_s"] <= m["step_s"] + 1e-12, (deg, f, m)
+
+
+def test_serving_plan_objective_validation():
+    cfg = PAPER_TABLE4["gpt-h8192"][0]
+    with pytest.raises(ValueError, match="objective"):
+        plan(cfg, SERVE_SHAPE, TrainHParams(), COMMODITY_25GBE,
+             objective="wat")
+
+
+def test_serving_pp_candidates_searched():
+    """plan_serving with pp forced on returns an executable pipeline
+    candidate (per-stage degree x stages == total capacity) and reports
+    the TMP-only baseline it was compared against."""
+    cfg = PAPER_TABLE4["gpt-h8192"][0]
+    r = plan_serving(cfg, SERVE_SHAPE, TrainHParams(schedule="fused"),
+                     COMMODITY_25GBE, options=(16,), pp_options=(2,))
+    from repro.core.planner.costmodel import _dtot
+    assert r.pp == 2 and _dtot(r.degree) * r.pp == 16, r.summary()
+    assert r.n_micro >= 1 and r.predicted_s > 0

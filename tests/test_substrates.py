@@ -5,7 +5,6 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from conftest import optional_hypothesis
 
@@ -107,7 +106,8 @@ def test_adamw_decreases_quadratic_loss():
     opt = adamw.init_opt_state(params, specs, info)
     cfg = adamw.AdamWConfig(learning_rate=0.1, warmup_steps=0,
                             weight_decay=0.0)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
     l0 = float(loss(params))
     for _ in range(50):
         g = jax.grad(loss)(params)

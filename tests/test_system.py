@@ -1,11 +1,8 @@
 """End-to-end behaviour tests for the whole system (single-device mesh)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core import compat
-from repro.configs.base import SHAPES, TrainHParams
+from repro.configs.base import TrainHParams
 from repro.configs.registry import get_config
 from repro.launch import steps as steps_mod
 from repro.models import params as prm
@@ -67,4 +64,4 @@ def test_input_specs_cover_all_cells(smoke_mesh):
             continue
         got = steps_mod.input_specs(cfg, shape, smoke_mesh, TrainHParams())
         leaves = jax.tree_util.tree_leaves(got)
-        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+        assert all(isinstance(leaf, jax.ShapeDtypeStruct) for leaf in leaves)

@@ -3,7 +3,6 @@ collective axes are empty tuples, which must degrade to identity)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from conftest import optional_hypothesis
 
