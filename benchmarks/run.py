@@ -128,10 +128,40 @@ def main() -> None:
               f"pp={r.pp};bubble={r.bubble_fraction:.3f}")
     report["joint_pp_planner"] = joint
 
+    # per-layer (degree, schedule) executable-plan search — the paper's
+    # REAL search space.  Pins the mixed plan of the memory-cliff regime
+    # on the commodity fixture against the best uniform schedule (the
+    # tentpole golden, tests/test_planner_golden.py::MIXED_CASES).
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+    from repro.core.plan import SCHEDULES
+    from repro.core.planner import plan
+    mixed = {}
+    for arch, cap in (("llama-3.2-vision-11b", 18.5e9),
+                      ("granite-moe-3b-a800m", 5.6e9)):
+        mcfg = get_config(arch)
+        mhp = TrainHParams()
+        r = plan(mcfg, SHAPES["train_4k"], mhp, COMMODITY_25GBE,
+                 options=(8, 16), mem_cap=cap, schedules="auto",
+                 time_limit=30.0)
+        uni = {s: plan(mcfg, SHAPES["train_4k"], mhp, COMMODITY_25GBE,
+                       options=(8, 16), mem_cap=cap, schedules=(s,),
+                       time_limit=30.0).predicted_s for s in SCHEDULES}
+        best_s = min(uni, key=uni.get)
+        mixed[arch] = {
+            "plan": r.plan.summary(),
+            "predicted_ms": round(r.predicted_s * 1e3, 3),
+            "best_uniform": best_s,
+            "best_uniform_ms": round(uni[best_s] * 1e3, 3),
+            "mixed_speedup": round(uni[best_s] / r.predicted_s, 4),
+        }
+        print(f"planx/{arch},{r.predicted_s*1e6:.0f},"
+              f"speedup_vs_{best_s}={mixed[arch]['mixed_speedup']}")
+    report["mixed_schedule_planner"] = mixed
+
     # serving latency planner decisions (modeled per-token decode latency;
     # plan(objective="latency") over (dx, dy, pp) serving meshes)
     from repro.configs.base import ShapeConfig
-    from repro.core.planner import plan
     serve_shape = ShapeConfig("serve_b8_4k", 4096, 8, "decode")
     serving = {}
     for fixture, hw in (("commodity_25gbe", COMMODITY_25GBE),
@@ -171,6 +201,7 @@ def main() -> None:
                               for r in report["table6_planner"]},
         "joint_pp_planner": joint,
         "serving_latency_planner": serving,
+        "mixed_schedule_planner": mixed,
     }
     out = os.path.abspath(os.path.join(root, f"BENCH_{args.tag}.json"))
     with open(out, "w") as f:

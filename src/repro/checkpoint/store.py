@@ -81,10 +81,25 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """The checkpoint's manifest (step, leaves, metadata — including the
+    ParallelPlan the run trained under) without loading any arrays; the
+    elastic-resume path reads this first to decide whether a cross-plan
+    relayout is needed."""
+    with open(os.path.join(ckpt_dir, f"step_{step}",
+                           "manifest.json")) as f:
+        return json.load(f)
+
+
 def restore(ckpt_dir: str, step: int, like_tree, *,
-            shardings=None) -> Tuple[Any, dict]:
+            shardings=None, remap=None) -> Tuple[Any, dict]:
     """Restore into the structure of ``like_tree``; device_put with the
-    (possibly different) target shardings — the elastic reshard path."""
+    (possibly different) target shardings — the elastic reshard path.
+
+    ``remap``: optional ``{keystr: array} -> {keystr: array}`` transform
+    applied to the loaded leaves before matching — the cross-plan
+    relayout hook (runtime/trainer.py builds it from the manifest's plan
+    vs the current one via models/params.relayout_flat)."""
     d = os.path.join(ckpt_dir, f"step_{step}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
@@ -92,6 +107,8 @@ def restore(ckpt_dir: str, step: int, like_tree, *,
     by_key = {}
     for leaf in manifest["leaves"]:
         by_key[leaf["key"]] = None if leaf.get("none") else data[leaf["name"]]
+    if remap is not None:
+        by_key = remap(by_key)
 
     leaves, treedef = jax.tree_util.tree_flatten_with_path(
         like_tree, is_leaf=lambda x: x is None)

@@ -221,3 +221,14 @@ class TrainHParams:
     virtual_stages: int = 1           # interleaved-1F1B chunks per device
     use_pallas: bool = False          # swap in TPU Pallas kernels
     loss_chunk: int = 512             # chunked vocab-parallel xent seq chunk
+
+    def __post_init__(self):
+        # validate at construction: an unknown schedule string used to
+        # fall silently through the effective_split/TmpCtx branches to
+        # megatron-like behaviour (core/plan.py names the valid set)
+        from repro.core.plan import TMP_LAYOUTS, validate_schedule
+        validate_schedule(self.schedule)
+        if self.tmp_layout not in TMP_LAYOUTS:
+            raise ValueError(
+                f"unknown tmp_layout {self.tmp_layout!r}: valid layouts "
+                f"are {', '.join(TMP_LAYOUTS)}")

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import (ArchConfig, CROSS_ATTN, GLOBAL_ATTN,
                                 LOCAL_ATTN, RGLRU, SSD, ShapeConfig,
@@ -432,7 +432,8 @@ def edge_cost(cfg: ArchConfig, shape: ShapeConfig, hw: HWConfig,
 def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                        degrees: Sequence, hw: HWConfig = V5E,
                        options: Sequence = (2, 4, 8, 16),
-                       stages: int = 1) -> Dict:
+                       stages: int = 1,
+                       schedules: Optional[Sequence[str]] = None) -> Dict:
     """Evaluate f(s) (Eq. 3–5) for a concrete per-layer strategy (entries
     int or ``(dx, dy)``).  Also the cost model used by benchmarks/fig6
     (Spearman vs measured).  ``stages`` > 1: each chip holds only 1/stages
@@ -440,47 +441,60 @@ def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     WEIGHT/optimizer memory; saved activations do NOT shrink — a 1F1B
     stage keeps up to min(stages, n_micro) microbatches' residuals in
     flight, which cancels the layer reduction (see
-    :func:`pipeline_mem_terms`)."""
+    :func:`pipeline_mem_terms`).
+
+    ``schedules``: optional per-layer schedule names (the executable-plan
+    search space) — ``None`` runs every layer under ``hp.schedule``.  At
+    a transition out of an oases/merak overlap run the pending collective
+    is exposed (the next group's schedule gives it nothing to hide
+    behind), which is exactly the conservatism the grouped execution
+    shows; uniform inputs reproduce the single-schedule estimate
+    bit-for-bit."""
     blocks = layer_blocks(cfg, shape)
     options = list(options)
     for d in degrees:                      # tolerate degrees ∉ options
         if _dkey(d) not in {_dkey(o) for o in options}:
             options.append(_dkey(d))
     opt_index = {_dkey(o): i for i, o in enumerate(options)}
-    seq = []   # (NodeCosts, option_idx, degree)
-    for layer, degree in zip(blocks, degrees):
+    scheds = (list(schedules) if schedules is not None
+              else [hp.schedule] * cfg.num_layers)
+    seq = []   # (NodeCosts, option_idx, degree, schedule)
+    for layer, degree, sched in zip(blocks, degrees, scheds):
         for blk in layer:
             nc = node_costs(cfg, blk, shape, hp, hw, options)
-            seq.append((nc, opt_index[_dkey(degree)], degree))
+            seq.append((nc, opt_index[_dkey(degree)], degree, sched))
 
     split = max(hp.split, 1)
-    overlap = hp.schedule in ("oases", "merak")
 
     def pass_time(dkey, ckey, cykey):
         total = 0.0
         prev_c = 0.0
-        for nc, j, n in seq:
+        for nc, j, n, sched in seq:
             d = getattr(nc, dkey)[j]
             c = getattr(nc, ckey)[j]
-            if split > 1 and overlap:
+            if split > 1 and sched in ("oases", "merak"):
                 # Eq. 3: sub-batch 0 compute overlaps previous comm; sub-batch
                 # 1 compute overlaps own sub-batch-0 comm
                 total += max(d, prev_c) + max(d, c)
                 prev_c = c
-            elif hp.schedule == "fused":
+            elif sched == "fused":
                 # kernel-level collective matmul: comm is hidden under the
                 # tile matmuls of the same block.  2D nodes compose per
                 # axis: max(c_x, d) + max(c_y, fill) — the y collectives
                 # hide under the x-ring's pipeline fill when thin enough.
                 dx, dy = _dxy(n)
                 c_y = getattr(nc, cykey)[j]
+                total += prev_c   # leftover overlap-run cool-down exposed
                 total += overlapped_time_2d(split * d, split * (c - c_y),
                                             split * c_y, dx - 1)
                 prev_c = 0.0
-            elif hp.schedule == "wang":
+            elif sched == "wang":
                 # intra-op decomposition hides all but one chunk
+                total += prev_c
+                prev_c = 0.0
                 total += split * d + c / max(hp.split * 2, 1) + c * 0.1
             else:
+                total += prev_c
                 total += split * d + split * c
                 prev_c = 0.0
         total += prev_c   # cool-down: last collective exposed
@@ -498,7 +512,7 @@ def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     # memory (Eq. 6)
     s_scale, t_scale = pipeline_mem_scales(stages, hp.microbatch)
     mem = 0.0
-    for nc, j, n in seq:
+    for nc, j, n, _sched in seq:
         mem += nc.mem_s[j] * s_scale + nc.mem_t[j] * t_scale
     vp = cfg.padded_vocab()
     last = max(_dtot(degrees[-1]), 1)

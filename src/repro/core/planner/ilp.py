@@ -41,22 +41,100 @@ class PlanResult:
     solve_ms: float
     status: str
     groups: List[Tuple[object, int]]       # (degree, count) runs
+    schedules: Optional[List[str]] = None  # per-layer schedule names
+    plan: Optional[object] = None          # executable ParallelPlan
 
     def summary(self) -> str:
-        runs = " + ".join(f"[{_fmt_degree(d)}] * {n}"
-                          for d, n in self.groups)
+        if self.schedules is not None and len(set(self.schedules)) > 1:
+            runs = " + ".join(
+                f"[{_fmt_degree(d)}/{s}] * {n}"
+                for (d, s), n in _runs(list(zip(self.degrees,
+                                                self.schedules))))
+        else:
+            sched = f"/{self.schedules[0]}" if self.schedules else ""
+            runs = " + ".join(f"[{_fmt_degree(d)}{sched}] * {n}"
+                              for d, n in self.groups)
         return (f"[{runs}] predicted {self.predicted_s*1e3:.1f} ms/iter "
                 f"(ILP {self.solve_ms:.1f} ms, {self.status})")
 
 
-def _runs(degrees: Sequence) -> List[Tuple[object, int]]:
+def _runs(values: Sequence) -> List[Tuple[object, int]]:
     out = []
-    for d in degrees:
+    for d in values:
         if out and out[-1][0] == d:
             out[-1] = (d, out[-1][1] + 1)
         else:
             out.append((d, 1))
     return out
+
+
+def _as_plan(hp, degrees, schedules, *, pp: int = 1, virtual_stages: int = 1,
+             microbatch: Optional[int] = None, decode_micro: int = 0,
+             mesh_shape=(), mesh_axes=()):
+    """Wrap an ILP decision as an executable ParallelPlan.
+
+    Under pipeline parallelism the per-stage TMP degree lives in the MESH
+    (stage-internal model axes), not in per-layer pinned degrees — the
+    grouped layout does not compose with PP — so pp > 1 plans record
+    mesh-following (``None``) degrees and should carry the mesh signature
+    instead."""
+    import dataclasses as _dc
+
+    from repro.core.plan import ParallelPlan
+    if microbatch is not None:
+        hp = _dc.replace(hp, microbatch=microbatch)
+    hp = _dc.replace(hp, virtual_stages=max(virtual_stages, 1))
+    return ParallelPlan.from_hparams(
+        hp, len(degrees),
+        degrees=([None] * len(degrees) if pp > 1
+                 else [_dkey_plan(d) for d in degrees]),
+        schedules=list(schedules), pp=max(pp, 1),
+        decode_micro=decode_micro,
+        mesh_shape=mesh_shape, mesh_axes=mesh_axes)
+
+
+def _dkey_plan(d):
+    dx, dy = cm._dxy(d)
+    return dx if dy == 1 else (dx, dy)
+
+
+def _mesh_sig(hw: cm.HWConfig, pp: int, degree) -> Tuple[Tuple[int, ...],
+                                                         Tuple[str, ...]]:
+    """The canonical launch mesh of a uniform-degree (pp, degree) decision
+    on ``hw`` — recorded into the decision's ParallelPlan so ``--plan``
+    launches reconstruct the mesh the planner actually costed."""
+    dx, dy = cm._dxy(degree)
+    dp = max(hw.n_chips // (max(pp, 1) * dx * dy), 1)
+    if dy > 1:
+        shape: Tuple[int, ...] = (dp, dx, dy)
+        axes: Tuple[str, ...] = ("data", "model_x", "model_y")
+    else:
+        shape, axes = (dp, dx), ("data", "model")
+    if pp > 1:
+        shape, axes = (pp,) + shape, ("pipe",) + axes
+    return shape, axes
+
+
+def _plan_mesh_sig(hw: cm.HWConfig, degrees) -> Tuple[Tuple[int, ...],
+                                                      Tuple[str, ...]]:
+    """Launch mesh of a (pp = 1) per-layer plan: a uniform strategy takes
+    the plain/2D mesh; mixed (or per-layer-2D) strategies need the
+    FACTORED mesh — binary t-sub-axes covering the largest group, extra
+    axes doubling as data parallelism for lower-degree layers (the
+    execution contract of lm._grouped_scan).  Returns ``((), ())`` when
+    the factored axes would exceed the t1..t4 vocabulary (the launcher's
+    explicit --mesh takes over)."""
+    import math as _math
+    kinds = {cm._dkey(d) for d in degrees}
+    dmax = max(cm._dtot(d) for d in degrees)
+    if len(kinds) == 1:
+        return _mesh_sig(hw, 1, next(iter(kinds)))
+    k = int(_math.log2(dmax))
+    if k > 4 or 2 ** k != dmax:               # beyond T_AXES: don't guess
+        return (), ()
+    dp = max(hw.n_chips // dmax, 1)
+    return ((dp,) + (2,) * k,
+            ("data",) + tuple(f"t{i + 1}" for i in range(k)))
 
 
 def expand_options(cfg: ArchConfig, hw: cm.HWConfig,
@@ -86,6 +164,52 @@ def expand_options(cfg: ArchConfig, hw: cm.HWConfig,
     return out
 
 
+def _smooth_schedules(cfg, shape, hp, degrees, lsched, hw, options, scheds):
+    """Post-solve consistency guard for the (degree, schedule) search.
+
+    The ILP's linearization charges schedule transitions nothing (edge
+    products range over degree pairs only), while ``estimate_iteration``
+    exposes the pending overlap cool-down when leaving an oases/merak
+    run — so a near-tie could fragment schedules into a plan the
+    estimator scores worse than a uniform overlay.  Evaluate the ILP's
+    choice against every uniform-schedule overlay on the SAME degrees
+    and keep the cheapest (the ILP choice wins exact ties), so the
+    returned ``predicted_s`` is always consistent with the returned
+    schedules and never loses to its own uniform overlays."""
+    candidates = [list(lsched)]
+    if len(set(lsched)) > 1:
+        candidates += [[s] * len(lsched) for s in scheds]
+    best = None
+    for cand in candidates:
+        e = cm.estimate_iteration(cfg, shape, hp, degrees, hw, options,
+                                  schedules=cand)
+        key = (e["iter_s"],
+               sum(a != b for a, b in zip(cand, cand[1:])))
+        if best is None or key < best[0]:
+            best = (key, cand, e)
+    return best[1], best[2]
+
+
+def _pair_pass_bounds(sched: str, split: int, d: float, c: float,
+                      fused_v: float) -> Tuple[float, float]:
+    """The two Eq. 3 lower bounds of one (layer, degree, schedule) option
+    for one pass: the layer's exposed-time variable u must satisfy
+    ``u >= lb1`` and ``u >= lb2`` when this option is chosen.  Non-overlap
+    schedules collapse both bounds to the same constant (matching
+    estimate_iteration's per-schedule branches exactly — this is what
+    lets the ILP search (degree, schedule) pairs with the existing
+    per-schedule exposed-cost terms)."""
+    if sched == "fused":
+        return fused_v, fused_v
+    if sched in ("oases", "merak") and split > 1:
+        return split * d, (split - 1) * d + c
+    if sched == "wang":
+        v = split * d + c / max(split * 2, 1) + c * 0.1
+        return v, v
+    v = split * (d + c)                      # megatron / split == 1
+    return v, v
+
+
 def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
          hw: cm.HWConfig = cm.V5E,
          options: Sequence[int] = (2, 4, 8, 16),
@@ -93,7 +217,9 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
          time_limit: float = 20.0,
          layout: str = "1d",
          stages: int = 1,
-         objective: str = "throughput") -> "PlanResult | ServingPlanResult":
+         objective: str = "throughput",
+         schedules: Optional[Sequence[str]] = None
+         ) -> "PlanResult | ServingPlanResult":
     """``layout`` is the explicit search-space knob (it deliberately does
     NOT read ``hp.tmp_layout``, which governs the *execution* layout and
     defaults to mesh-following 'auto'): '1d' preserves the paper's search
@@ -102,6 +228,13 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     (each chip holds that fraction of the layers) while live activations
     keep their in-flight-microbatch factor (costmodel.pipeline_mem_scales;
     used by :func:`plan_joint`).
+
+    ``schedules`` extends the per-layer option space from degrees to
+    ``(degree, schedule)`` pairs — the paper's actual search space (§4,
+    Table 6 plans per layer): pass a tuple of schedule names or
+    ``"auto"`` for all of them; ``None`` (default) searches degrees only
+    under ``hp.schedule``.  The result's ``.plan`` is the executable
+    :class:`~repro.core.plan.ParallelPlan`.
 
     ``objective='latency'`` retargets the search at serving: instead of
     the per-layer throughput ILP it runs :func:`plan_serving` — a
@@ -121,30 +254,48 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
             f"'throughput' (training iteration time, the default) or "
             f"'latency' (serving per-token decode latency)")
     t0 = time.time()
+    from repro.core.plan import validate_schedule
+    if schedules is None:
+        scheds: Tuple[str, ...] = (hp.schedule,)
+    elif schedules == "auto":
+        # preference order, not SCHEDULES order: cost ties resolve to the
+        # earliest entry, and oases/merak are exactly tied in the model
+        # (same Eq. 3 bounds) while barrier-free oases is never worse in
+        # reality — so oases leads and merak can only win a real gap
+        # (there is none), keeping auto plans on the paper's schedule
+        scheds = ("oases", "fused", "wang", "megatron", "merak")
+    else:
+        scheds = tuple(validate_schedule(s, what="planner schedule")
+                       for s in schedules)
+        if not scheds:
+            raise ValueError("schedules must name at least one schedule "
+                             "(or be None / 'auto')")
     options = expand_options(cfg, hw, options, layout)
     L = cfg.num_layers
-    P = len(options)
+    D = len(options)
+    # the per-layer one-hot ranges over (degree, schedule) PAIRS
+    pairs = [(dj, sj) for dj in range(D) for sj in range(len(scheds))]
+    P = len(pairs)
     mem_cap = mem_cap if mem_cap is not None else hw.hbm_cap
 
-    # per-layer aggregated cost vectors (blocks within a layer summed;
-    # overlap structure handled via per-layer fwd/bwd exposed-cost upper
-    # bound below)
+    # per-layer aggregated cost vectors, indexed by DEGREE option (blocks
+    # within a layer summed; the degree-only terms are schedule-agnostic —
+    # per-pair exposed costs derive from them in _pair_pass_bounds)
     blocks = cm.layer_blocks(cfg, shape)
     split = max(hp.split, 1)
-    overlap = hp.schedule in ("oases", "merak") and split > 1
-    fused = hp.schedule == "fused"
+    need_fused = "fused" in scheds
 
-    d_f = np.zeros((L, P))
-    c_f = np.zeros((L, P))
-    d_b = np.zeros((L, P))
-    c_b = np.zeros((L, P))
-    mem = np.zeros((L, P))
+    d_f = np.zeros((L, D))
+    c_f = np.zeros((L, D))
+    d_b = np.zeros((L, D))
+    c_b = np.zeros((L, D))
+    mem = np.zeros((L, D))
     # fused node costs must be summed over blocks PER BLOCK (the kernel
     # rings are per-block: one block's comm never hides under another
     # block's compute), matching estimate_iteration — aggregating d/c
     # first and applying max{} after would understate comm-bound layers
-    fused_f = np.zeros((L, P))
-    fused_b = np.zeros((L, P))
+    fused_f = np.zeros((L, D))
+    fused_b = np.zeros((L, D))
     s_sc, t_sc = cm.pipeline_mem_scales(stages, hp.microbatch)
     for i, layer in enumerate(blocks):
         for blk in layer:
@@ -154,8 +305,8 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
             d_b[i] += nc.d_b
             c_b[i] += nc.c_b
             mem[i] += np.array(nc.mem_s) * s_sc + np.array(nc.mem_t) * t_sc
-            if fused:
-                for j in range(P):
+            if need_fused:
+                for j in range(D):
                     dx_j, _ = cm._dxy(options[j])
                     fused_f[i, j] += cm.overlapped_time_2d(
                         split * nc.d_f[j],
@@ -166,16 +317,19 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                         split * (nc.c_b[j] - nc.c_b_y[j]),
                         split * nc.c_b_y[j], dx_j - 1)
 
-    # Eq. 3 per layer, both passes:
-    #   overlap: cost >= split*d   and cost >= (split-1)*d + c   (comm hidden
-    #            behind the other sub-batch's compute, cool-down exposed)
-    #   no overlap: cost = split*(d + c)
+    # Eq. 3 per layer, both passes, per (degree, schedule) pair:
+    #   overlap (oases/merak, split>1): u >= split*d AND
+    #       u >= (split-1)*d + c  (comm hidden behind the other sub-batch's
+    #       compute, cool-down exposed)
+    #   fused / wang / blocking: one constant exposed cost (both bounds
+    #       collapse) — see _pair_pass_bounds.
     # Variables: x = [s(0,0)..s(L-1,P-1), uF_0..uF_{L-1}, uB_..., y_edges]
+    # y products range over DEGREE pairs only (edge costs are
+    # schedule-agnostic: a schedule change at equal degree reshard nothing).
     nS = L * P
     nU = 2 * L
-    # edges between consecutive layers with product binaries
     edges = [(i, i + 1) for i in range(L - 1)]
-    nY = len(edges) * P * P
+    nY = len(edges) * D * D
     N = nS + nU + nY
 
     cost = np.zeros(N)
@@ -194,17 +348,22 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     # ties into arbitrary per-layer mixes):
     # * a 1%-of-comm nudge aligns the ILP's preference with
     #   estimate_iteration's sequential model (lower exposed comm wins);
-    # * a ~3e-4-of-compute epsilon prefers 1D, then the thinnest y split.
-    # Both sit well below any real 2D-vs-1D gap (tens of percent in the
-    # commodity regime) but above HiGHS's ~1e-7 tolerances, so ties resolve
-    # the same way on every solve.
+    # * a ~3e-4-of-compute epsilon prefers 1D, then the thinnest y split;
+    # * a ~1e-4-of-compute epsilon prefers earlier-listed schedules, so
+    #   degenerate schedule ties collapse to one deterministic choice
+    #   instead of HiGHS-arbitrary per-layer fragmentation.
+    # All sit well below any real gap (tens of percent in the commodity
+    # regime) but above HiGHS's ~1e-7 tolerances, so ties resolve the same
+    # way on every solve.
     scale = float(np.mean(d_f) + np.mean(c_f)) or 1.0
-    for j in range(P):
+    for p, (j, sj) in enumerate(pairs):
         _, dyj = cm._dxy(options[j])
         for i in range(L):
-            cost[i * P + j] += 1e-2 * (c_f[i, j] + c_b[i, j])
+            cost[i * P + p] += 1e-2 * (c_f[i, j] + c_b[i, j])
             if dyj > 1:
-                cost[i * P + j] += 3e-4 * scale * (1.0 + np.log2(dyj))
+                cost[i * P + p] += 3e-4 * scale * (1.0 + np.log2(dyj))
+            if sj:
+                cost[i * P + p] += 1e-4 * scale * sj
 
     rows = []
     lo = []
@@ -217,61 +376,56 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
 
     # one-hot rows
     for i in range(L):
-        add({i * P + j: 1.0 for j in range(P)}, 1.0, 1.0)
+        add({i * P + p: 1.0 for p in range(P)}, 1.0, 1.0)
 
-    # u constraints
+    # u constraints: two lower-bound rows per (layer, pass) whenever any
+    # pair's bounds differ (the overlap schedules), one otherwise — the
+    # single-schedule default emits exactly the pre-pair rows
     for i in range(L):
-        uf = nS + i
-        ubk = nS + L + i
-        if fused:
-            # kernel-level overlap: per-option cost is the constant
-            # per-block-summed max{compute, comm} + fill (precomputed in
-            # fused_f/fused_b above), linear in the one-hot s row
-            add({uf: 1.0, **{i * P + j: -fused_f[i, j] for j in range(P)}},
+        for off, dk, ck, fk in ((0, d_f, c_f, fused_f),
+                                (L, d_b, c_b, fused_b)):
+            u = nS + off + i
+            b1 = np.zeros(P)
+            b2 = np.zeros(P)
+            for p, (j, sj) in enumerate(pairs):
+                b1[p], b2[p] = _pair_pass_bounds(
+                    scheds[sj], split, dk[i, j], ck[i, j], fk[i, j])
+            add({u: 1.0, **{i * P + p: -b1[p] for p in range(P)}},
                 0.0, np.inf)
-            add({ubk: 1.0, **{i * P + j: -fused_b[i, j] for j in range(P)}},
-                0.0, np.inf)
-        elif overlap:
-            add({uf: 1.0, **{i * P + j: -split * d_f[i, j]
-                             for j in range(P)}}, 0.0, np.inf)
-            add({uf: 1.0, **{i * P + j: -((split - 1) * d_f[i, j] + c_f[i, j])
-                             for j in range(P)}}, 0.0, np.inf)
-            add({ubk: 1.0, **{i * P + j: -split * d_b[i, j]
-                              for j in range(P)}}, 0.0, np.inf)
-            add({ubk: 1.0, **{i * P + j: -((split - 1) * d_b[i, j] + c_b[i, j])
-                              for j in range(P)}}, 0.0, np.inf)
-        else:
-            add({uf: 1.0, **{i * P + j: -split * (d_f[i, j] + c_f[i, j])
-                             for j in range(P)}}, 0.0, np.inf)
-            add({ubk: 1.0, **{i * P + j: -split * (d_b[i, j] + c_b[i, j])
-                              for j in range(P)}}, 0.0, np.inf)
+            if np.any(b2 != b1):
+                add({u: 1.0, **{i * P + p: -b2[p] for p in range(P)}},
+                    0.0, np.inf)
 
-    # edge products + costs
+    # edge products + costs over degree pairs: y_e,dj,dk >= sum_{p in
+    # pairs(dj)} s_a,p + sum_{p in pairs(dk)} s_b,p - 1
+    deg_pairs = {j: [p for p, (dj, _) in enumerate(pairs) if dj == j]
+                 for j in range(D)}
     for e, (a, b) in enumerate(edges):
-        for j in range(P):
-            for k in range(P):
-                yi = nS + nU + e * P * P + j * P + k
+        for j in range(D):
+            for k in range(D):
                 if options[j] == options[k]:
-                    ub[yi] = 1.0
-                else:
-                    # y >= s_a,j + s_b,k - 1
-                    add({yi: 1.0, a * P + j: -1.0, b * P + k: -1.0},
-                        -1.0, np.inf)
-                # cost of choosing (j, k) across this edge
-                if options[j] != options[k]:
-                    nc_from = cm.NodeCosts(
-                        [d_f[a, j]], [c_f[a, j]], [d_b[a, j]], [c_b[a, j]],
-                        [0], [0])
-                    cost[yi] = cm.edge_cost(
-                        cfg, shape, hw, options[j], options[k],
-                        nc_from, 0, 0) * 2.0
+                    continue
+                yi = nS + nU + e * D * D + j * D + k
+                coefs = {yi: 1.0}
+                for p in deg_pairs[j]:
+                    coefs[a * P + p] = -1.0
+                for p in deg_pairs[k]:
+                    coefs[b * P + p] = coefs.get(b * P + p, 0.0) - 1.0
+                add(coefs, -1.0, np.inf)
+                nc_from = cm.NodeCosts(
+                    [d_f[a, j]], [c_f[a, j]], [d_b[a, j]], [c_b[a, j]],
+                    [0], [0])
+                cost[yi] = cm.edge_cost(
+                    cfg, shape, hw, options[j], options[k],
+                    nc_from, 0, 0) * 2.0
 
-    # Eq. 6 memory: sum_i s_i . mem_i + fixed <= cap
+    # Eq. 6 memory: sum_i s_i . mem_i + fixed <= cap (schedule-agnostic)
     vp = cfg.padded_vocab()
     max_total = max(cm._dtot(o) for o in options)
     fixed = vp * cfg.d_model * 2.0 / max_total * (2 if not cfg.tie_embeddings else 1)
     fixed *= 7.0  # + f32 optimizer states
-    add({i * P + j: mem[i, j] for i in range(L) for j in range(P)},
+    add({i * P + p: mem[i, j] for i in range(L)
+         for p, (j, _) in enumerate(pairs)},
         -np.inf, mem_cap - fixed)
 
     A = lil_matrix((len(rows), N))
@@ -293,15 +447,27 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
         fb = max(options,
                  key=lambda o: (cm._dtot(o), not isinstance(o, tuple)))
         degrees = [fb] * L
-        est = cm.estimate_iteration(cfg, shape, hp, degrees, hw, options)
+        lsched = [scheds[0]] * L
+        est = cm.estimate_iteration(cfg, shape, hp, degrees, hw, options,
+                                    schedules=lsched)
+        msh, max_ = _plan_mesh_sig(hw, degrees)
         return PlanResult(degrees, est["iter_s"], solve_ms,
-                          f"fallback:{res.status}", _runs(degrees))
+                          f"fallback:{res.status}", _runs(degrees),
+                          schedules=lsched,
+                          plan=_as_plan(hp, degrees, lsched,
+                                        mesh_shape=msh, mesh_axes=max_))
 
     s = res.x[:nS].reshape(L, P)
-    degrees = [options[int(np.argmax(s[i]))] for i in range(L)]
-    est = cm.estimate_iteration(cfg, shape, hp, degrees, hw, options)
+    chosen = [pairs[int(np.argmax(s[i]))] for i in range(L)]
+    degrees = [options[j] for j, _ in chosen]
+    lsched = [scheds[sj] for _, sj in chosen]
+    lsched, est = _smooth_schedules(cfg, shape, hp, degrees, lsched, hw,
+                                    options, scheds)
+    msh, max_ = _plan_mesh_sig(hw, degrees)
     return PlanResult(degrees, est["iter_s"], solve_ms,
-                      str(res.status), _runs(degrees))
+                      str(res.status), _runs(degrees), schedules=lsched,
+                      plan=_as_plan(hp, degrees, lsched,
+                                    mesh_shape=msh, mesh_axes=max_))
 
 
 # --------------------------------------------------------------------------
@@ -323,6 +489,8 @@ class JointPlanResult:
     solve_ms: float
     status: str
     groups: List[Tuple[object, int]]
+    schedules: Optional[List[str]] = None  # per-layer schedule names
+    plan: Optional[object] = None          # executable ParallelPlan
 
     def summary(self) -> str:
         runs = " + ".join(f"[{_fmt_degree(d)}] * {n}"
@@ -386,7 +554,8 @@ def plan_joint(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                time_limit: float = 20.0,
                layout: str = "auto",
                pp_options: Optional[Sequence[int]] = None,
-               virtual_stages: int = 1) -> JointPlanResult:
+               virtual_stages: int = 1,
+               schedules: Optional[Sequence[str]] = None) -> JointPlanResult:
     """Joint (pp, per-stage TMP degrees, microbatch count) search.
 
     ``options`` name the TOTAL model-parallel capacity exactly as in
@@ -435,7 +604,7 @@ def plan_joint(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                            virtual_stages=v if pp > 1 else 1)
         pr = plan(cfg, shape, hp_m, hw_s, options=opts,
                   mem_cap=cap, time_limit=per_solve, layout=layout,
-                  stages=pp)
+                  stages=pp, schedules=schedules)
         deg_max = max(cm._dtot(d) for d in pr.degrees)
         # executability: the runtime (pipeline.resolve_microbatch) needs
         # n_micro to divide the PER-SHARD batch under this plan's dp, not
@@ -449,8 +618,20 @@ def plan_joint(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
             # the candidate's costs must describe the clamped count, not
             # the one the ILP was seeded with
             hp_m = _dc.replace(hp_m, microbatch=n_micro)
-        est = cm.estimate_iteration(cfg, shape, hp_m, pr.degrees,
-                                    hw_s, opts, stages=pp)
+        # executable plan: a pp>1 plan must be strategy-uniform (stage-
+        # internal TMP is uniform per stage) — collapse to the dominant
+        # (max-degree) strategy when the per-stage ILP mixed, and rank the
+        # candidate on the COLLAPSED strategy (what would actually run),
+        # not the inexecutable mixed one
+        pdeg, psched = list(pr.degrees), list(pr.schedules)
+        if pp > 1 and len({(cm._dkey(d), s)
+                           for d, s in zip(pdeg, psched)}) > 1:
+            k = max(range(len(pdeg)), key=lambda i: cm._dtot(pdeg[i]))
+            pdeg = [pdeg[k]] * len(pdeg)
+            psched = [psched[k]] * len(psched)
+        est = cm.estimate_iteration(cfg, shape, hp_m, pdeg,
+                                    hw_s, opts, stages=pp,
+                                    schedules=psched)
         t_hop = cm.p2p_hop_seconds(cfg, shape, hw, pp, n_micro,
                                    deg_max) if pp > 1 else 0.0
         total, bfrac, p2p = cm.pipeline_time(est["iter_s"], pp,
@@ -458,12 +639,18 @@ def plan_joint(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
         candidates.append(JointPlanResult(
             pp=pp, n_micro=n_micro,
             virtual_stages=v if pp > 1 else 1,
-            degrees=pr.degrees, predicted_s=total,
+            degrees=pdeg, predicted_s=total,
             tmp_s=est["iter_s"], bubble_fraction=bfrac, p2p_s=p2p,
             mem_bytes=est["mem_bytes"],
             fits=est["mem_bytes"] < cap,
             tmp_only_s=0.0, solve_ms=0.0, status=pr.status,
-            groups=pr.groups))
+            groups=_runs(pdeg), schedules=psched,
+            plan=_as_plan(hp, pdeg, psched, pp=pp,
+                          virtual_stages=v if pp > 1 else 1,
+                          microbatch=n_micro if pp > 1 else hp.microbatch,
+                          **(dict(zip(("mesh_shape", "mesh_axes"),
+                                      _mesh_sig(hw, pp, pdeg[0])))
+                             if pp > 1 else {}))))
     if not candidates:
         raise ValueError(
             f"no feasible (pp, degree) candidates for {cfg.name} on "
@@ -492,6 +679,7 @@ class ServingPlanResult:
     tmp_only_s: float                      # best pp=1 candidate (baseline)
     solve_ms: float
     status: str
+    plan: Optional[object] = None          # executable ParallelPlan
 
     @property
     def dxy(self) -> Tuple[int, int]:
@@ -558,4 +746,10 @@ def plan_serving(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
         mem_bytes=est["mem_bytes"], fits=fits,
         tmp_only_s=min(c[0] for c in tmp_only) if tmp_only else float("inf"),
         solve_ms=(time.time() - t0) * 1e3,
-        status="fits" if fits else "over-memory")
+        status="fits" if fits else "over-memory",
+        plan=_as_plan(hp, [deg] * cfg.num_layers,
+                      [hp.schedule] * cfg.num_layers, pp=pp,
+                      virtual_stages=v if pp > 1 else 1,
+                      decode_micro=est["n_micro"] if pp > 1 else 0,
+                      **dict(zip(("mesh_shape", "mesh_axes"),
+                                 _mesh_sig(hw, pp, deg)))))

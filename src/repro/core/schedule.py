@@ -277,6 +277,11 @@ def effective_split(schedule: str, split: int, local_batch: int) -> int:
     """Sub-batch split factor: oases/merak split (paper: 2) when divisible.
     'fused' overlaps intra-op (inside the kernel), so like megatron/wang it
     runs the full batch in one pass."""
+    if schedule not in SCHEDULES:
+        # defense in depth: TrainHParams/ParallelPlan validate at
+        # construction, but raw strings can still arrive here
+        from repro.core.plan import validate_schedule
+        validate_schedule(schedule)
     if schedule in ("megatron", "wang", "fused"):
         return 1
     s = min(split, local_batch)

@@ -50,7 +50,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              planner_degrees=None, seq_parallel: bool = False,
              split: int = 2, microbatch: int = 0,
              mesh_shape: str = "", tmp_layout: str = "auto",
-             pp: int = 1, virtual_stages: int = 1, hw=None) -> dict:
+             pp: int = 1, virtual_stages: int = 1, hw=None,
+             plan_file: str = "", save_plan: str = "",
+             plan_only: bool = False) -> dict:
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     rec = {
@@ -67,31 +69,56 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         return rec
 
     t0 = time.time()
-    if mesh_shape:
-        # hillclimb lever: reshape the 256 chips (e.g. "32x8" = more DP,
-        # less TMP; "16x8x2" = a 2D hybrid model grid; --pp prepends the
-        # pipeline stage axis). The baseline table always uses 16x16.
-        from repro.launch.mesh import parse_mesh_shape
-        mesh = parse_mesh_shape(mesh_shape, pp=pp)
-        rec["mesh_shape"] = mesh_shape
-    elif pp > 1:
-        from repro.launch.mesh import make_pipeline_mesh
-        # 256 chips: pp stages x dp x 16-way TMP
-        if 256 % (pp * 16):
-            raise ValueError(
-                f"--pp {pp} does not divide the 256-chip production mesh "
-                f"(pp x 16-way TMP must divide 256 — pick pp in "
-                f"1/2/4/8/16, or pass an explicit --mesh-shape)")
-        mesh = make_pipeline_mesh(pp, 256 // (pp * 16), 16)
-    else:
-        mesh = (make_factored_mesh(multi_pod=multi_pod) if planner_degrees
-                else make_production_mesh(multi_pod=multi_pod))
-    info = mesh_info(mesh)
     hp = TrainHParams(schedule=schedule, fine_remat=fine_remat,
                       seq_parallel=seq_parallel, split=split,
                       microbatch=microbatch, tmp_layout=tmp_layout,
                       virtual_stages=virtual_stages)
+    if plan_file or mesh_shape:
+        # the shared plan-desugaring path (launch/mesh.py): an explicit
+        # device grid or a ParallelPlan file.  mesh_shape is the
+        # hillclimb lever: reshape the 256 chips (e.g. "32x8" = more DP,
+        # less TMP; "16x8x2" = a 2D hybrid model grid; --pp prepends the
+        # pipeline stage axis).  The baseline table always uses 16x16.
+        from repro.launch.mesh import resolve_launch
+        mesh, pplan, hp = resolve_launch(
+            cfg, hp, mesh=mesh_shape or "auto", pp=pp,
+            plan_file=plan_file, save_plan=save_plan,
+            degrees=planner_degrees)
+        planner_degrees = pplan.planned_degrees
+        rec["mesh_shape"] = mesh_shape or "x".join(
+            map(str, pplan.mesh_shape))
+        rec["plan"] = pplan.summary()
+    else:
+        from repro.core.plan import ParallelPlan
+        from repro.launch.mesh import mesh_signature
+        if pp > 1:
+            from repro.launch.mesh import make_pipeline_mesh
+            # 256 chips: pp stages x dp x 16-way TMP
+            if 256 % (pp * 16):
+                raise ValueError(
+                    f"--pp {pp} does not divide the 256-chip production "
+                    f"mesh (pp x 16-way TMP must divide 256 — pick pp in "
+                    f"1/2/4/8/16, or pass an explicit --mesh-shape)")
+            mesh = make_pipeline_mesh(pp, 256 // (pp * 16), 16)
+        else:
+            mesh = (make_factored_mesh(multi_pod=multi_pod)
+                    if planner_degrees
+                    else make_production_mesh(multi_pod=multi_pod))
+        mshape, maxes = mesh_signature(mesh)
+        pplan = ParallelPlan.from_hparams(
+            hp, cfg.num_layers, degrees=planner_degrees,
+            mesh_shape=mshape, mesh_axes=maxes, pp=pp)
+        rec["plan"] = pplan.summary()
+        if save_plan:
+            pplan.save(save_plan)
+            print(f"[plan] wrote {save_plan}: {pplan.summary()}")
+    info = mesh_info(mesh)
     rec["microbatch"] = microbatch
+    if plan_only:
+        # --save-plan/--plan round-trip smoke (CI): resolve + desugar only
+        rec["status"] = "PLAN_ONLY"
+        rec["n_chips"] = info.mesh.size
+        return rec
     if hw is not None and shape.kind == "train":
         # profile-guided planning: feed the calibrated chip numbers to the
         # joint PP x TMP search and record its decision next to the
@@ -106,8 +133,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             "bubble_fraction": round(jp.bubble_fraction, 4),
         }
         print(f"calibrated joint plan: {jp.summary()}")
-    inputs = input_specs(cfg, shape, mesh, hp, degrees=planner_degrees)
-    fn = step_fn_for(cfg, shape, mesh, hp, degrees=planner_degrees)
+    inputs = input_specs(cfg, shape, mesh, hp, plan=pplan)
+    fn = step_fn_for(cfg, shape, mesh, hp, plan=pplan)
     # donate params+opt (train) / kv-cache (decode): buffers alias in place
     donate = (0, 1) if shape.kind == "train" else \
         ((1,) if shape.kind == "decode" else ())
@@ -239,6 +266,16 @@ def main():
                     help="run on-device micro-benches and print the "
                          "calibrated planner HWConfig "
                          "(HWConfig.from_measurements)")
+    ap.add_argument("--plan", default="", metavar="plan.json",
+                    help="dry-run an executable ParallelPlan file "
+                         "(overrides the legacy parallelism flags)")
+    ap.add_argument("--save-plan", default="", metavar="out.json",
+                    help="write the resolved ParallelPlan for later "
+                         "--plan runs")
+    ap.add_argument("--plan-only", action="store_true",
+                    help="resolve the mesh + plan (and --save-plan/"
+                         "--plan round-trip) without lowering/compiling "
+                         "— the CI plan smoke")
     ap.add_argument("--sweep", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--timeout", type=int, default=2400)
@@ -271,7 +308,9 @@ def main():
                            tmp_layout=args.tmp_layout,
                            pp=args.pp,
                            virtual_stages=args.virtual_stages,
-                           hw=hw_cal)
+                           hw=hw_cal,
+                           plan_file=args.plan, save_plan=args.save_plan,
+                           plan_only=args.plan_only)
         except Exception:
             rec = {"arch": args.arch, "shape": args.shape, "mesh": m,
                    "schedule": args.schedule, "status": "ERROR",

@@ -141,3 +141,81 @@ def make_smoke_mesh(devices=None):
     n = len(devices or jax.devices())
     d = max(1, n // 4) if n >= 4 else 1
     return _mk((d, n // d), ("data", "model"))
+
+
+# --------------------------------------------------------------------------
+# plan desugaring — THE place legacy launcher flags become a ParallelPlan
+# --------------------------------------------------------------------------
+def resolve_mesh_spec(spec: str = "auto", *, pp: int = 1,
+                      multi_pod: bool = False, devices=None):
+    """One mesh resolution shared by every launcher: named meshes
+    (``auto`` / ``production`` / ``multipod`` / ``factored``) or an
+    explicit ``DxM`` / ``DxMxxMy`` grid, with ``pp`` prepending the
+    ``pipe`` stage axis."""
+    pp = max(pp, 1)
+    if spec in ("production", "multipod", "factored"):
+        if pp > 1:
+            raise SystemExit(
+                f"--pp does not compose with --mesh {spec} yet — use an "
+                f"explicit 'dxm' spec (e.g. --pp {pp} --mesh 8x16) or "
+                f"--mesh auto")
+        if spec == "factored":
+            return make_factored_mesh(multi_pod=multi_pod)
+        return make_production_mesh(multi_pod=multi_pod
+                                    or spec == "multipod")
+    if spec == "auto":
+        if pp > 1:
+            n = len(devices or jax.devices())
+            if n % pp:
+                raise SystemExit(f"--pp {pp} does not divide the "
+                                 f"{n} available devices")
+            return make_pipeline_mesh(pp, max(n // pp, 1), 1)
+        return make_smoke_mesh(devices)
+    return parse_mesh_shape(spec, pp=pp)
+
+
+def mesh_signature(mesh):
+    """(shape, axes) of a mesh — what a ParallelPlan records."""
+    axes = tuple(mesh.axis_names)
+    shape = dict(mesh.shape)
+    return tuple(int(shape[a]) for a in axes), axes
+
+
+def resolve_launch(cfg, hp, *, mesh: str = "auto", pp: int = 1,
+                   plan_file: str = "", save_plan: str = "",
+                   degrees=None, schedules=None, decode_micro: int = 0,
+                   devices=None, log=print):
+    """The single plan-desugaring path (train/serve/dryrun all call it):
+
+    * ``--plan plan.json``: the file IS the source of truth — its knobs
+      override the legacy flags (``hp`` keeps only the non-parallelism
+      fields), its recorded mesh is rebuilt when present, and the legacy
+      mesh flags resolve it otherwise;
+    * legacy flags: the mesh resolves as before and the scattered knobs
+      (schedule, tmp-layout, pp, virtual stages, microbatch, split,
+      decode-micro, per-layer degrees) desugar into one ParallelPlan.
+
+    ``--save-plan out.json`` writes the resolved plan either way.
+    Returns ``(mesh, plan, hp)`` with ``hp`` already projected through
+    the plan (``plan.apply``)."""
+    from repro.core.plan import ParallelPlan
+    if plan_file:
+        plan = ParallelPlan.load(plan_file).validate_for(cfg)
+        hp = plan.apply(hp)
+        if plan.mesh_shape:
+            m = _mk(plan.mesh_shape, plan.mesh_axes)
+        else:
+            m = resolve_mesh_spec(mesh, pp=plan.pp, devices=devices)
+        log(f"[plan] loaded {plan_file}: {plan.summary()}")
+    else:
+        m = resolve_mesh_spec(mesh, pp=pp, devices=devices)
+        shape, axes = mesh_signature(m)
+        plan = ParallelPlan.from_hparams(
+            hp, cfg.num_layers, degrees=degrees, schedules=schedules,
+            mesh_shape=shape, mesh_axes=axes, pp=max(pp, 1),
+            decode_micro=decode_micro)
+        hp = plan.apply(hp)
+    if save_plan:
+        plan.save(save_plan)
+        log(f"[plan] wrote {save_plan}: {plan.summary()}")
+    return m, plan, hp

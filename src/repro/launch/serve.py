@@ -15,6 +15,11 @@ engine, on single-device or TMP / pipeline-parallel meshes.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --reduced --pp 2 --mesh 1x2 --schedule fused
+
+    # execute a saved ParallelPlan (e.g. train.py --save-plan / the
+    # latency planner's .plan) — one file instead of the flag soup
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --reduced --plan plan.json
 """
 from __future__ import annotations
 
@@ -53,53 +58,48 @@ def main():
     ap.add_argument("--decode-micro", type=int, default=0,
                     help="decode micro-group count on a pipeline mesh "
                          "(0 = auto: pp * virtual stages)")
-    ap.add_argument("--plan", default="", choices=["", "commodity", "nvlink"],
+    ap.add_argument("--plan", default="", metavar="plan.json",
+                    help="execute a ParallelPlan file (e.g. from train.py "
+                         "--save-plan or the latency planner); overrides "
+                         "the legacy parallelism flags in one shot")
+    ap.add_argument("--save-plan", default="", metavar="out.json",
+                    help="write the resolved serving ParallelPlan")
+    ap.add_argument("--print-plan", default="",
+                    choices=["", "commodity", "nvlink"],
                     help="print the latency-objective serving plan "
                          "(plan(objective='latency')) for this arch on a "
                          "fixture HWConfig before serving")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    import jax
-
     from repro.configs.base import TrainHParams
     from repro.configs.registry import get_config
-    from repro.launch.mesh import make_smoke_mesh, parse_mesh_shape
+    from repro.launch.mesh import resolve_launch
     from repro.serving import Request, ServingEngine
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced().replace(dtype="float32")
 
-    if args.plan:
+    if args.print_plan:
         from repro.configs.base import ShapeConfig
         from repro.core.planner import COMMODITY_25GBE, NVLINK_BOX, plan
-        hw = COMMODITY_25GBE if args.plan == "commodity" else NVLINK_BOX
+        hw = COMMODITY_25GBE if args.print_plan == "commodity" else NVLINK_BOX
         shape = ShapeConfig("serve_cli", args.max_seq, args.slots, "decode")
         pr = plan(cfg, shape, TrainHParams(schedule=args.schedule), hw,
                   options=tuple(n for n in (2, 4, 8, 16)
                                 if n <= hw.n_chips) or (hw.n_chips,),
                   objective="latency")
-        print(f"latency planner ({args.plan}): {pr.summary()}")
-
-    pp = max(args.pp, 1)
-    if args.mesh == "auto":
-        if pp > 1:
-            from repro.launch.mesh import make_pipeline_mesh
-            n = len(jax.devices())
-            if n % pp:
-                raise SystemExit(f"--pp {pp} does not divide the "
-                                 f"{n} available devices")
-            mesh = make_pipeline_mesh(pp, max(n // pp, 1), 1)
-        else:
-            mesh = make_smoke_mesh()
-    else:
-        mesh = parse_mesh_shape(args.mesh, pp=pp)
+        print(f"latency planner ({args.print_plan}): {pr.summary()}")
 
     hp = TrainHParams(schedule=args.schedule, tmp_layout=args.tmp_layout)
+    mesh, pplan, hp = resolve_launch(cfg, hp, mesh=args.mesh, pp=args.pp,
+                                     plan_file=args.plan,
+                                     save_plan=args.save_plan,
+                                     decode_micro=args.decode_micro)
     eng = ServingEngine(cfg, mesh, slots=args.slots, max_seq=args.max_seq,
                         hp=hp, prefill_len=args.prefill_len or None,
-                        decode_micro=args.decode_micro)
+                        plan=pplan)
     eng.load(seed=args.seed)
 
     rng = np.random.default_rng(args.seed)
@@ -116,7 +116,8 @@ def main():
     stats = eng.run_until_drained()
     print(json.dumps({**stats,
                       "mesh": dict(mesh.shape),
-                      "schedule": args.schedule,
+                      "schedule": hp.schedule,
+                      "plan": pplan.summary(),
                       "prefill_len": eng.prefill_len,
                       "sample_output": reqs[0].out_tokens[:8]}, indent=1))
 

@@ -15,9 +15,26 @@ from repro.models import params as prm
 from repro.optim import adamw
 
 
-def _min_degree(degrees) -> int:
-    """Smallest *total* degree in a plan (entries int or (dx, dy))."""
-    return min(deg_total(d) for d in degrees)
+def _min_degree(degrees, tp: int) -> int:
+    """Smallest *total* degree in a plan (entries None | int | (dx, dy);
+    None = mesh-following, i.e. the whole ``tp`` group)."""
+    return min(deg_total(d) or tp for d in degrees)
+
+
+def unpack_plan(cfg: ArchConfig, hp: TrainHParams, plan,
+                degrees=None, schedules=None):
+    """Project an executable ParallelPlan onto the (hp, degrees,
+    schedules) triple the step builders consume.  Explicit degrees/
+    schedules win over the plan's (callers that pass both are layering a
+    manual override on top)."""
+    if plan is not None:
+        plan.validate_for(cfg)
+        hp = plan.apply(hp)
+        if degrees is None:
+            degrees = plan.planned_degrees
+        if schedules is None and plan.uniform_schedule is None:
+            schedules = list(plan.schedules)
+    return hp, degrees, schedules
 
 
 def auto_microbatch(global_batch: int, dp: int, seq_len: int,
@@ -73,8 +90,8 @@ def resolve_for_mesh(cfg: ArchConfig, info, hp: TrainHParams,
             max(hp.virtual_stages, 1), hp.microbatch)
         return dataclasses.replace(hp, microbatch=n_micro,
                                    seq_parallel=False)
-    dp_eff = info.dp * (info.tp // _min_degree(degrees)) if degrees \
-        else info.dp
+    dp_eff = info.dp * (info.tp // _min_degree(degrees, info.tp)) \
+        if degrees else info.dp
     return resolve_hp(hp, "train", global_batch, dp_eff, seq_len=seq_len,
                       d_model=cfg.d_model, num_layers=cfg.num_layers,
                       tp=info.tp)
@@ -82,10 +99,17 @@ def resolve_for_mesh(cfg: ArchConfig, info, hp: TrainHParams,
 
 def build_train_step(cfg: ArchConfig, mesh, hp: TrainHParams, *,
                      global_batch: int, seq_len: int,
-                     degrees: Optional[Sequence[int]] = None):
+                     degrees: Optional[Sequence[int]] = None,
+                     schedules: Optional[Sequence[str]] = None,
+                     plan=None):
     """returns (train_step(params, opt_state, batch) ->
-                (params, opt_state, metrics), specs)."""
+                (params, opt_state, metrics), specs).
+
+    ``plan``: an executable :class:`repro.core.plan.ParallelPlan` —
+    desugars into (hp overrides, per-layer degrees/schedules) via
+    :func:`unpack_plan`; the legacy kwargs keep working unchanged."""
     info = mesh_info(mesh)
+    hp, degrees, schedules = unpack_plan(cfg, hp, plan, degrees, schedules)
     hp = resolve_for_mesh(cfg, info, hp, global_batch, seq_len, degrees)
     # pipeline mode: the microbatch loop IS the 1F1B schedule, folded into
     # loss_fn — the step sees the full batch and a single value_and_grad
@@ -94,7 +118,7 @@ def build_train_step(cfg: ArchConfig, mesh, hp: TrainHParams, *,
         if (hp.microbatch > 1 and not pipelined) else global_batch
     loss_fn, specs, _ = lm.build_train_loss(
         cfg, mesh, hp, global_batch=micro_b, seq_len=seq_len,
-        degrees=degrees)
+        degrees=degrees, schedules=schedules)
     ocfg = adamw.AdamWConfig(
         learning_rate=hp.learning_rate, weight_decay=hp.weight_decay,
         warmup_steps=hp.warmup_steps, total_steps=hp.total_steps,
@@ -153,15 +177,19 @@ def build_train_step(cfg: ArchConfig, mesh, hp: TrainHParams, *,
 
 def train_abstract_inputs(cfg: ArchConfig, mesh, hp: TrainHParams, *,
                           global_batch: int, seq_len: int,
-                          degrees=None):
+                          degrees=None, schedules=None, plan=None):
     """ShapeDtypeStruct stand-ins for every train_step input (no alloc).
     With gradient accumulation the batch arrives pre-shaped
     [n_micro, B/n, ...], batch dim sharded on axis 1."""
     info = mesh_info(mesh)
+    hp, degrees, schedules = unpack_plan(cfg, hp, plan, degrees, schedules)
     hp = resolve_for_mesh(cfg, info, hp, global_batch, seq_len, degrees)
+    if schedules is not None and len(set(schedules)) > 1 and degrees is None:
+        degrees = [None] * cfg.num_layers   # mirror lm._normalize_strategy
     specs = prm.model_specs(cfg, info, degrees=degrees, max_pos=seq_len,
                             layout=hp.tmp_layout,
-                            virtual_stages=hp.virtual_stages)
+                            virtual_stages=hp.virtual_stages,
+                            schedules=schedules)
     params = prm.abstract_params(specs, mesh)
     opt_state = adamw.abstract_opt_state(specs, info, mesh, zero1=hp.zero1)
     # pipeline meshes take the flat batch; 1F1B slices microbatches itself
@@ -230,14 +258,17 @@ def serve_abstract_inputs(cfg, mesh, hp, *, global_batch, seq_len):
 
 
 def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh,
-                hp: Optional[TrainHParams] = None, degrees=None):
+                hp: Optional[TrainHParams] = None, degrees=None,
+                schedules=None, plan=None):
     """The dry-run contract: ShapeDtypeStruct stand-ins for the step that
     this (arch x shape) cell lowers."""
     hp = hp or TrainHParams()
     if shape.kind == "train":
         return train_abstract_inputs(cfg, mesh, hp,
                                      global_batch=shape.global_batch,
-                                     seq_len=shape.seq_len, degrees=degrees)
+                                     seq_len=shape.seq_len, degrees=degrees,
+                                     schedules=schedules, plan=plan)
+    hp, degrees, schedules = unpack_plan(cfg, hp, plan, degrees, schedules)
     if shape.kind == "prefill":
         return prefill_abstract_inputs(cfg, mesh, hp,
                                        global_batch=shape.global_batch,
@@ -248,13 +279,15 @@ def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh,
 
 
 def step_fn_for(cfg, shape, mesh, hp: Optional[TrainHParams] = None,
-                degrees=None):
+                degrees=None, schedules=None, plan=None):
     hp = hp or TrainHParams()
     if shape.kind == "train":
         fn, _ = build_train_step(cfg, mesh, hp,
                                  global_batch=shape.global_batch,
-                                 seq_len=shape.seq_len, degrees=degrees)
+                                 seq_len=shape.seq_len, degrees=degrees,
+                                 schedules=schedules, plan=plan)
         return fn
+    hp, degrees, schedules = unpack_plan(cfg, hp, plan, degrees, schedules)
     if shape.kind == "prefill":
         return build_prefill_step(cfg, mesh, hp,
                                   global_batch=shape.global_batch,

@@ -47,6 +47,19 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--mesh", default="auto",
                     help="auto | dxm (e.g. 2x4) | production | multipod")
+    ap.add_argument("--plan", default="", metavar="plan.json",
+                    help="execute a ParallelPlan file (planner output / "
+                         "--save-plan); overrides the legacy parallelism "
+                         "flags in one shot")
+    ap.add_argument("--save-plan", default="", metavar="out.json",
+                    help="write the resolved ParallelPlan (desugared "
+                         "flags or the ILP decision under --planner) for "
+                         "later --plan runs")
+    ap.add_argument("--planner-schedules", default="current",
+                    choices=["current", "auto"],
+                    help="--planner search space: degrees under the "
+                         "--schedule ('current') or the full per-layer "
+                         "(degree, schedule) space of the paper ('auto')")
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -54,45 +67,18 @@ def main():
     if args.distributed:
         import jax
         jax.distributed.initialize()
-    import jax
+
+    import dataclasses
 
     from repro.configs.base import TrainHParams
     from repro.configs.registry import get_config
     from repro.core.axes import mesh_info
-    from repro.launch.mesh import (make_factored_mesh, make_pipeline_mesh,
-                                   make_production_mesh, make_smoke_mesh,
-                                   parse_mesh_shape)
+    from repro.launch.mesh import resolve_launch
     from repro.runtime import Trainer
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced().replace(dtype="float32")
-
-    pp = max(args.pp, 1)
-    if pp > 1 and args.mesh in ("production", "multipod", "factored"):
-        raise SystemExit(
-            f"--pp does not compose with --mesh {args.mesh} yet — use an "
-            f"explicit 'dxm' spec (e.g. --pp {pp} --mesh 8x16) or "
-            f"--mesh auto")
-    if args.mesh == "auto":
-        if pp > 1:
-            n = len(jax.devices())
-            if n % pp:
-                raise SystemExit(f"--pp {pp} does not divide the "
-                                 f"{n} available devices")
-            mesh = make_pipeline_mesh(pp, max(n // pp, 1), 1)
-        else:
-            mesh = make_smoke_mesh()
-    elif args.mesh == "production":
-        mesh = make_production_mesh()
-    elif args.mesh == "multipod":
-        mesh = make_production_mesh(multi_pod=True)
-    elif args.mesh == "factored":
-        mesh = make_factored_mesh()
-    else:
-        # 'dxm' (1D) or 'dxm1xm2' (2D hybrid) device grid; --pp prepends
-        # the 'pipe' stage axis
-        mesh = parse_mesh_shape(args.mesh, pp=pp)
 
     hp = TrainHParams(schedule=args.schedule, fine_remat=args.fine_remat,
                       learning_rate=args.lr, total_steps=args.steps,
@@ -100,26 +86,34 @@ def main():
                       use_planner=args.planner, tmp_layout=args.tmp_layout,
                       microbatch=args.microbatch,
                       virtual_stages=args.virtual_stages)
-    degrees = None
-    if args.planner:
+    # the ONE desugaring path (launch/mesh.py): legacy flags or a --plan
+    # file become (mesh, ParallelPlan, projected hp)
+    mesh, pplan, hp = resolve_launch(cfg, hp, mesh=args.mesh, pp=args.pp,
+                                     plan_file=args.plan)
+    if args.planner and not args.plan:
         from repro.configs.base import ShapeConfig
-        from repro.core.planner import plan
+        from repro.core.planner import plan as plan_search
         info = mesh_info(mesh)
         # plan for the workload actually being trained, not a fixed table
         shape = ShapeConfig("cli", args.seq, args.batch, "train")
-        pr = plan(cfg, shape, hp,
-                  layout=args.tmp_layout,
-                  options=tuple(n for n in (2, 4, 8, 16) if n <= info.tp)
-                  or (info.tp,))
+        pr = plan_search(cfg, shape, hp,
+                         layout=args.tmp_layout,
+                         options=tuple(n for n in (2, 4, 8, 16)
+                                       if n <= info.tp) or (info.tp,),
+                         schedules="auto"
+                         if args.planner_schedules == "auto" else None)
         print(f"planner: {pr.summary()}")
         if info.factored:
-            degrees = pr.degrees
+            pplan = dataclasses.replace(pplan, layers=pr.plan.layers)
         else:
             print("planner: mesh is not factored — plan shown for "
                   "inspection only, training uses the uniform layout")
+    if args.save_plan:
+        pplan.save(args.save_plan)
+        print(f"[plan] wrote {args.save_plan}: {pplan.summary()}")
     trainer = Trainer(cfg, mesh, hp, global_batch=args.batch,
                       seq_len=args.seq, ckpt_dir=args.ckpt_dir,
-                      degrees=degrees)
+                      plan=pplan)
     res = trainer.train(args.steps, ckpt_every=args.ckpt_every,
                         seed=args.seed)
     print(json.dumps({

@@ -159,14 +159,20 @@ def _pipeline_scan(cfg, ctx, info: MeshInfo, hp, params, x):
 # --------------------------------------------------------------------------
 # planner-mode (mixed per-layer TMP degrees on the factored mesh)
 # --------------------------------------------------------------------------
-def _grouped_scan(cfg, info, hp, params, x, degrees):
-    """Mixed-degree forward (planner mode, factored mesh).
+def _grouped_scan(cfg, info, hp, params, x, degrees, schedules=None):
+    """Mixed-strategy forward (planner mode): consecutive layers sharing
+    ``(degree, schedule)`` execute as one scan group, each under its own
+    ``TmpCtx`` and sub-batch split.
 
-    Activations are replicated over all t-axes in Megatron style; the *batch*
-    dim is additionally sharded over the t-axes a low-degree group reuses for
-    data parallelism.  Degree transitions therefore reshard the batch:
-    degree decrease = free local slice (``batch_split``), degree increase =
-    AllGather — exactly the Eq. 4 edge costs the planner charges."""
+    Mixed DEGREES need the factored mesh: activations are replicated over
+    all t-axes in Megatron style; the *batch* dim is additionally sharded
+    over the t-axes a low-degree group reuses for data parallelism.
+    Degree transitions therefore reshard the batch: degree decrease = free
+    local slice (``batch_split``), degree increase = AllGather — exactly
+    the Eq. 4 edge costs the planner charges.  Mixed SCHEDULES at uniform
+    (mesh-following, ``degree=None``) groups run on any mesh: the reshard
+    degenerates to a no-op and only the split/overlap structure changes
+    between groups — numerically exact either way."""
     cur_axes: tuple = ()
 
     def reshard(x, new_axes):
@@ -186,21 +192,22 @@ def _grouped_scan(cfg, info, hp, params, x, degrees):
         return x
 
     aux_total = jnp.zeros((1,), jnp.float32)   # rank-1: see _stack_scan NOTE
-    for g_params, (kind, degree, n) in zip(params["groups"],
-                                           prm.plan_groups(cfg, degrees)):
-        ctx = TmpCtx(info, degree=degree, schedule=hp.schedule,
+    for g_params, g in zip(params["groups"],
+                           prm.plan_groups(cfg, degrees, schedules)):
+        sched = g.schedule if schedules is not None else hp.schedule
+        ctx = TmpCtx(info, degree=g.degree, schedule=sched,
                      use_pallas=hp.use_pallas, layout=hp.tmp_layout)
-        x = reshard(x, info.extra_dp_axes(degree))
-        parts = blk.train_parts(cfg, ctx, kind)
+        x = reshard(x, info.extra_dp_axes(g.degree))
+        parts = blk.train_parts(cfg, ctx, g.kind)
         b = x.shape[0]
-        split = effective_split(hp.schedule, hp.split, b)
+        split = effective_split(sched, hp.split, b)
         xs = split_tree(x, split)
         auxs = [{"positions": _positions(b // split, x.shape[1])}
                 for _ in range(split)]
 
-        def body(carry, p, parts=parts, auxs=auxs):
+        def body(carry, p, parts=parts, auxs=auxs, sched=sched):
             xs_c, a_c = carry
-            xs_c, a = apply_layer(parts, p, xs_c, auxs, hp.schedule)
+            xs_c, a = apply_layer(parts, p, xs_c, auxs, sched)
             return (xs_c, a_c + a), None
 
         body = maybe_checkpoint(body, remat=hp.remat, fine=hp.fine_remat)
@@ -213,14 +220,55 @@ def _grouped_scan(cfg, info, hp, params, x, degrees):
 # --------------------------------------------------------------------------
 # step builders
 # --------------------------------------------------------------------------
+def _normalize_strategy(cfg, hp, degrees, schedules):
+    """One normalization of the per-layer strategy inputs:
+
+    * uniform per-layer schedules collapse into ``hp.schedule`` (the
+      stacked fast path) when no degrees are pinned;
+    * mixed schedules with no pinned degrees promote to the grouped path
+      with mesh-following ``degree=None`` groups;
+    * the grouped path always carries an explicit schedule list so the
+      spec grouping (models/params.py) and the execution grouping
+      (``_grouped_scan``) agree by construction.
+    """
+    import dataclasses
+    if schedules is not None:
+        schedules = list(schedules)
+        if len(schedules) != cfg.num_layers:
+            raise ValueError(
+                f"per-layer schedules have {len(schedules)} entries for "
+                f"a {cfg.num_layers}-layer model")
+        if len(set(schedules)) == 1:
+            hp = dataclasses.replace(hp, schedule=schedules[0])
+            schedules = None
+        elif degrees is None:
+            degrees = [None] * cfg.num_layers
+    if degrees is not None and schedules is None:
+        schedules = [hp.schedule] * cfg.num_layers
+    return degrees, schedules, hp
+
+
+
 def build_train_loss(cfg: ArchConfig, mesh, hp: TrainHParams, *,
                      global_batch: int, seq_len: int,
-                     degrees: Optional[Sequence[int]] = None):
-    """Returns (loss_fn(params, batch) -> (loss, aux), specs, in_specs)."""
+                     degrees: Optional[Sequence[int]] = None,
+                     schedules: Optional[Sequence[str]] = None):
+    """Returns (loss_fn(params, batch) -> (loss, aux), specs, in_specs).
+
+    ``degrees``/``schedules`` are the per-layer strategy of an executable
+    :class:`~repro.core.plan.ParallelPlan`: mixed entries run through the
+    grouped scan (consecutive layers sharing ``(degree, schedule)`` form
+    one scan group); uniform plans keep the classic stacked layout.  A
+    per-layer SCHEDULE list with uniform degrees runs on any mesh (the
+    groups all follow the mesh model group); mixed DEGREES need the
+    factored mesh as before."""
     info = mesh_info(mesh)
+    degrees, schedules, hp = _normalize_strategy(cfg, hp, degrees,
+                                                 schedules)
     specs = prm.model_specs(cfg, info, degrees=degrees, max_pos=seq_len,
                             layout=hp.tmp_layout,
-                            virtual_stages=hp.virtual_stages)
+                            virtual_stages=hp.virtual_stages,
+                            schedules=schedules)
     # SP composes with the 1D layout only: in 2D the block entries/exits
     # are already per-axis collectives, not the SP AG/RS pair.  Under PP
     # the stage boundary ships the full-sequence activation, so SP is off.
@@ -259,7 +307,8 @@ def build_train_loss(cfg: ArchConfig, mesh, hp: TrainHParams, *,
 
         positions = _positions(b, s)
         if degrees is not None:
-            x, aux = _grouped_scan(cfg, info, hp, params, x, degrees)
+            x, aux = _grouped_scan(cfg, info, hp, params, x, degrees,
+                                   schedules)
         elif info.pp > 1:
             x, aux = _pipeline_scan(cfg, ctx, info, hp, params, x)
         else:

@@ -268,12 +268,18 @@ def stack_layout(cfg: ArchConfig) -> Tuple[int, Sequence[str], Sequence[str]]:
 def model_specs(cfg: ArchConfig, info: MeshInfo, *,
                 degrees: Optional[Sequence] = None,
                 max_pos: int = 0, layout: str = "auto",
-                virtual_stages: int = 1) -> Dict[str, Any]:
-    """degrees: optional per-layer TMP degrees (planner mode; factored
-    mesh); each entry may be an int (1D) or an ``(dx, dy)`` tuple (2D).
+                virtual_stages: int = 1,
+                schedules: Optional[Sequence[str]] = None) -> Dict[str, Any]:
+    """degrees: optional per-layer TMP degrees (planner mode); each entry
+    may be an int (1D), an ``(dx, dy)`` tuple (2D), or ``None`` (follow
+    the whole mesh model group — how a mixed-SCHEDULE plan with uniform
+    degrees runs on a plain mesh).  ``schedules``: optional per-layer
+    schedule names — they do not change any pspec, but grouping must
+    break wherever the schedule changes so the spec groups line up with
+    the execution groups (lm.py::_grouped_scan).
 
     Uniform mode (degrees=None) stacks `n` repeats of the pattern for scan;
-    planner mode groups consecutive same-degree layers (see lm.py).  On a
+    planner mode groups consecutive same-(degree, schedule) layers.  On a
     mesh with a ``pipe`` axis the stacks restructure to the stage-sharded
     ``[v, pp, n/S]`` layout (``virtual_stages`` = interleaving depth).
     Embedding/head stay vocab-sharded over the *combined* model group in
@@ -311,13 +317,24 @@ def model_specs(cfg: ArchConfig, info: MeshInfo, *,
     else:
         if info.pp > 1:
             raise ValueError(
-                "per-layer planner degrees do not compose with pipeline "
-                "parallelism yet — use a uniform TMP degree per stage "
-                "(drop degrees= or the 'pipe' mesh axis)")
-        assert info.factored and len(degrees) == cfg.num_layers
+                "per-layer planner strategies do not compose with "
+                "pipeline parallelism yet — use a uniform strategy per "
+                "stage (drop degrees=/schedules= or the 'pipe' mesh axis)")
+        assert len(degrees) == cfg.num_layers
+        if not info.factored:
+            bad = [d for d in degrees
+                   if d is not None and deg_total(d) != info.tp]
+            if bad:
+                raise ValueError(
+                    f"per-layer degrees {sorted(set(map(str, bad)))} "
+                    f"differ from the mesh model group ({info.tp}) — "
+                    f"mixed degrees need the factored mesh "
+                    f"(launch/mesh.py::make_factored_mesh); on a plain "
+                    f"mesh only per-layer SCHEDULES may vary")
         out["groups"] = [
-            _stack(layer_specs(cfg, kind, info, deg, layout=layout), n)
-            for (kind, deg, n) in plan_groups(cfg, degrees)]
+            _stack(layer_specs(cfg, g.kind, info, g.degree, layout=layout),
+                   g.count)
+            for g in plan_groups(cfg, degrees, schedules)]
 
     if cfg.is_encdec:
         n_enc = cfg.encoder_layers
@@ -330,17 +347,35 @@ def model_specs(cfg: ArchConfig, info: MeshInfo, *,
     return out
 
 
-def plan_groups(cfg: ArchConfig, degrees: Sequence[int]):
-    """Group consecutive (same kind, same degree) layers: [(kind, degree, n)]."""
+@dataclass(frozen=True)
+class PlanGroup:
+    """One scan group of the grouped (planner-mode) layout: ``count``
+    consecutive layers sharing (kind, degree, schedule)."""
+    kind: str
+    degree: Any              # None | int | (dx, dy)
+    schedule: str
+    count: int
+
+
+def plan_groups(cfg: ArchConfig, degrees: Sequence,
+                schedules: Optional[Sequence[str]] = None):
+    """Group consecutive layers sharing (kind, degree, schedule) into scan
+    groups: the executable unit of a per-layer :class:`ParallelPlan`.  A
+    schedule change breaks the group even at equal degree (each group runs
+    under its own ``TmpCtx``/sub-batch split)."""
     pat = cfg.layer_pattern
+    scheds = list(schedules) if schedules is not None \
+        else [None] * cfg.num_layers
     groups = []
     i = 0
     while i < cfg.num_layers:
         j = i
         while (j < cfg.num_layers and degrees[j] == degrees[i]
+               and scheds[j] == scheds[i]
                and pat[j % len(pat)] == pat[i % len(pat)]):
             j += 1
-        groups.append((pat[i % len(pat)], degrees[i], j - i))
+        groups.append(PlanGroup(pat[i % len(pat)], degrees[i],
+                                scheds[i] or "oases", j - i))
         i = j
     return groups
 
@@ -479,3 +514,169 @@ def param_bytes(specs) -> int:
 def param_count(specs) -> int:
     leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
     return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+# --------------------------------------------------------------------------
+# cross-plan checkpoint relayout (elastic resume across ParallelPlan changes)
+# --------------------------------------------------------------------------
+# A checkpoint's layer parameters live in one of three layouts, all of
+# whose global per-layer shapes agree (degree/schedule only move pspecs):
+#   * stacked:  ['blocks'][pos] leaves [n_rep, ...] + ['tail'][i] leaves,
+#   * pipeline: ['blocks'][pos] leaves [v, pp, n_rep/S, ...] (row-major
+#               flatten = canonical layer order — core/pipeline.py),
+#   * grouped:  ['groups'][g] leaves [count_g, ...] (planner mode; groups
+#               follow plan_groups of the plan's per-layer strategies).
+# These helpers decompose a FLAT {keystr: np.ndarray} view (the checkpoint
+# manifest's native form) into canonical per-layer dicts and repack them
+# into any target layout, so elastic restarts cross plan changes —
+# including mixed-schedule -> global-schedule transitions — by pure
+# numpy restacking (checkpoint/store.py + runtime/trainer.py).
+_LAYER_KEY_RE = None
+
+
+def _layer_key(key: str):
+    global _LAYER_KEY_RE
+    if _LAYER_KEY_RE is None:
+        import re
+        _LAYER_KEY_RE = re.compile(
+            r"^\['(blocks|tail|groups)'\]\[(\d+)\](.*)$")
+    m = _LAYER_KEY_RE.match(key)
+    return (m.group(1), int(m.group(2)), m.group(3)) if m else None
+
+
+def split_layer_flat(cfg: ArchConfig, flat: Dict[str, np.ndarray], *,
+                     degrees: Optional[Sequence] = None,
+                     schedules: Optional[Sequence[str]] = None,
+                     pp: int = 1, virtual_stages: int = 1):
+    """Decompose a flat params-like dict into ``(static, per_layer)``:
+    ``static`` keeps the non-layer leaves verbatim; ``per_layer[l]`` maps
+    each layer leaf's name suffix (e.g. ``"['wq']"``) to layer ``l``'s
+    array in canonical layer order."""
+    static: Dict[str, np.ndarray] = {}
+    by_slot: Dict[Tuple[str, int], Dict[str, np.ndarray]] = {}
+    for key, arr in flat.items():
+        lk = _layer_key(key)
+        if lk is None:
+            static[key] = arr
+        else:
+            coll, idx, name = lk
+            by_slot.setdefault((coll, idx), {})[name] = arr
+    per_layer: list = [dict() for _ in range(cfg.num_layers)]
+    if degrees is not None:
+        groups = plan_groups(cfg, degrees, schedules)
+        base = 0
+        for g, grp in enumerate(groups):
+            leaves = by_slot.get(("groups", g), {})
+            for name, arr in leaves.items():
+                if arr.shape[0] != grp.count:
+                    raise ValueError(
+                        f"group {g} leaf {name} has leading dim "
+                        f"{arr.shape[0]}, plan group expects {grp.count}")
+                for o in range(grp.count):
+                    per_layer[base + o][name] = arr[o]
+            base += grp.count
+        if base != cfg.num_layers:
+            raise ValueError(
+                f"plan groups cover {base} layers, config has "
+                f"{cfg.num_layers}")
+    else:
+        n, pat, tail = stack_layout(cfg)
+        for (coll, idx), leaves in sorted(by_slot.items()):
+            if coll == "groups":
+                raise ValueError(
+                    "checkpoint holds grouped (planner-mode) layers but "
+                    "no per-layer plan was recorded — cannot recover the "
+                    "layer order")
+            if coll == "blocks":
+                # the [v, pp, per] stage stacking exists only under a
+                # 'pipe' mesh axis — interleaving depth without PP
+                # (pp=1, v>1) stays on the flat [n] layout
+                stage_stacked = max(pp, 1) > 1
+                for name, arr in leaves.items():
+                    # pipeline stacking [v, pp, n/S, ...] row-major
+                    # flattens to the canonical [n, ...] layer order
+                    a = arr.reshape((n,) + arr.shape[3:]) if stage_stacked \
+                        else arr
+                    for r in range(n):
+                        per_layer[r * len(pat) + idx][name] = a[r]
+            else:                                    # tail
+                for name, arr in leaves.items():
+                    per_layer[n * len(pat) + idx][name] = arr
+    return static, per_layer
+
+
+def pack_layer_flat(cfg: ArchConfig, static: Dict[str, np.ndarray],
+                    per_layer, *,
+                    degrees: Optional[Sequence] = None,
+                    schedules: Optional[Sequence[str]] = None,
+                    pp: int = 1,
+                    virtual_stages: int = 1) -> Dict[str, np.ndarray]:
+    """Inverse of :func:`split_layer_flat`: repack canonical per-layer
+    dicts into the target layout's flat keystr view."""
+    flat = dict(static)
+    if degrees is not None:
+        base = 0
+        for g, grp in enumerate(plan_groups(cfg, degrees, schedules)):
+            for name in per_layer[base]:
+                flat[f"['groups'][{g}]{name}"] = np.stack(
+                    [per_layer[base + o][name] for o in range(grp.count)])
+            base += grp.count
+    else:
+        n, pat, tail = stack_layout(cfg)
+        v = max(virtual_stages, 1)
+        for p in range(len(pat)):
+            if not n:
+                break
+            for name in per_layer[p]:
+                arr = np.stack([per_layer[r * len(pat) + p][name]
+                                for r in range(n)])
+                if pp > 1:
+                    arr = arr.reshape((v, pp, n // (pp * v)) + arr.shape[1:])
+                flat[f"['blocks'][{p}]{name}"] = arr
+        for t in range(len(tail)):
+            for name, arr in per_layer[n * len(pat) + t].items():
+                flat[f"['tail'][{t}]{name}"] = arr
+    return flat
+
+
+def tree_to_flat(tree) -> Dict[str, np.ndarray]:
+    """Flat {keystr: host array} view of a params-like tree (the
+    checkpoint manifest's native form)."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(kp): np.asarray(jax.device_get(v))
+            for kp, v in leaves}
+
+
+def tree_from_flat(specs_or_like, flat: Dict[str, np.ndarray]):
+    """Materialize a tree with the structure of ``specs_or_like`` (a Spec
+    tree or any params-like tree) from a flat {keystr: array} dict."""
+    is_leaf = (lambda x: is_spec(x)) if any(
+        is_spec(leaf) for leaf in jax.tree_util.tree_leaves(
+            specs_or_like, is_leaf=is_spec)) else None
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        specs_or_like, is_leaf=is_leaf)
+    vals = []
+    for kp, _ in leaves:
+        key = jax.tree_util.keystr(kp)
+        if key not in flat:
+            raise KeyError(
+                f"relayout missing leaf {key} — source and target plans "
+                f"describe different models")
+        vals.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def relayout_flat(cfg: ArchConfig, flat: Dict[str, np.ndarray],
+                  src: Dict, dst: Dict) -> Dict[str, np.ndarray]:
+    """Re-stack a flat params-like dict from the ``src`` plan layout into
+    the ``dst`` plan layout.  ``src``/``dst`` describe each side's
+    grouping: ``{"degrees", "schedules", "pp", "virtual_stages"}`` (all
+    optional; degrees=None means the stacked layout)."""
+    static, per_layer = split_layer_flat(
+        cfg, flat, degrees=src.get("degrees"),
+        schedules=src.get("schedules"), pp=src.get("pp", 1),
+        virtual_stages=src.get("virtual_stages", 1))
+    return pack_layer_flat(
+        cfg, static, per_layer, degrees=dst.get("degrees"),
+        schedules=dst.get("schedules"), pp=dst.get("pp", 1),
+        virtual_stages=dst.get("virtual_stages", 1))

@@ -70,16 +70,31 @@ class Trainer:
                  global_batch: int, seq_len: int, ckpt_dir: str,
                  injector: Optional[FailureInjector] = None,
                  log_fn: Callable[[str], None] = print,
-                 degrees=None):
+                 degrees=None, plan=None):
+        from repro.core.plan import ParallelPlan
+        from repro.launch.mesh import mesh_signature
         self.cfg = cfg
         self.mesh = mesh
         info = mesh_info(mesh)
+        schedules = None
+        if plan is not None:
+            hp, degrees, schedules = steps_mod.unpack_plan(cfg, hp, plan,
+                                                           degrees)
+        else:
+            # legacy callers: desugar the loose (hp, degrees) threading so
+            # the checkpoint manifest ALWAYS records an executable plan
+            mshape, maxes = mesh_signature(mesh)
+            plan = ParallelPlan.from_hparams(
+                hp, cfg.num_layers, degrees=degrees, mesh_shape=mshape,
+                mesh_axes=maxes, pp=info.pp)
+        self.plan = plan
         # one shared resolution with build_train_step: planner mode sees the
         # extra-dp-adjusted microbatcher; a pipeline mesh folds gradient
         # accumulation into the 1F1B schedule (hp.microbatch = n_micro)
         self.hp = steps_mod.resolve_for_mesh(cfg, info, hp, global_batch,
                                              seq_len, degrees)
         self.degrees = degrees
+        self.schedules = schedules
         self.global_batch = global_batch
         self.seq_len = seq_len
         self.ckpt_dir = ckpt_dir
@@ -90,7 +105,7 @@ class Trainer:
 
         self.step_fn, self.specs = steps_mod.build_train_step(
             cfg, mesh, self.hp, global_batch=global_batch, seq_len=seq_len,
-            degrees=degrees)
+            degrees=degrees, schedules=schedules)
         # buffer donation deadlocks XLA:CPU's intra-process collective
         # rendezvous (execution only — the dry-run donates at compile time);
         # enable it on real accelerators.
@@ -124,19 +139,84 @@ class Trainer:
             opt, osh, is_leaf=lambda x: x is None)
         return params, opt, 0
 
+    @staticmethod
+    def _plan_layout(plan) -> Dict:
+        """The relayout descriptor (models/params.relayout_flat) of the
+        parameter-tree layout a plan trains under."""
+        if plan.grouping_signature()[0] == "grouped":
+            return {"degrees": list(plan.degrees),
+                    "schedules": list(plan.schedules)}
+        # interleaving depth only stacks the params under a pipe axis —
+        # normalize v to 1 at pp == 1, mirroring grouping_signature()
+        return {"pp": plan.pp,
+                "virtual_stages": plan.virtual_stages if plan.pp > 1 else 1}
+
+    def _plan_remap(self, metadata: Dict):
+        """Cross-plan elastic resume: when the checkpoint's recorded plan
+        trains under a different parameter-tree grouping than the current
+        one (grouped planner layouts vs the stacked layout, including
+        mixed-schedule -> global-schedule transitions), return a
+        flat-leaf remap that restacks the canonical layer order into the
+        current layout.  Stacked -> stacked pp changes keep the existing
+        pure-reshape path (store.restore)."""
+        from repro.core.plan import ParallelPlan
+        cur_sig = self.plan.grouping_signature()
+        saved_d = metadata.get("plan")
+        if saved_d is not None:
+            saved = ParallelPlan.from_dict(saved_d)
+            src_sig = saved.grouping_signature()
+            src_meta = self._plan_layout(saved)
+        else:                       # pre-plan checkpoint: stacked layout
+            pp = metadata.get("pp", 1)
+            v = metadata.get("virtual_stages", 1) if pp > 1 else 1
+            src_sig = ("stacked", pp, v)
+            src_meta = {"pp": pp, "virtual_stages": v}
+        if src_sig == cur_sig:
+            return None, None
+        if src_sig[0] == "stacked" and cur_sig[0] == "stacked":
+            return None, src_sig    # pure [v, pp, n/S] reshape suffices
+        dst_meta = self._plan_layout(self.plan)
+        # every params-like subtree of (params, opt): the three optimizer
+        # moments AND the grad-compress error-feedback buffers (a
+        # params-shaped tree when compression is on; the plain None leaf
+        # passes through the relayout as static either way)
+        prefixes = ("[0]", "[1]['master']", "[1]['m']", "[1]['v']",
+                    "[1]['err']")
+
+        def remap(by_key):
+            out = {k: v for k, v in by_key.items()
+                   if not any(k.startswith(p) for p in prefixes)}
+            for p in prefixes:
+                sub = {k[len(p):]: v for k, v in by_key.items()
+                       if k.startswith(p)}
+                if not sub:
+                    continue
+                for k2, v2 in prm.relayout_flat(self.cfg, sub, src_meta,
+                                                dst_meta).items():
+                    out[p + k2] = v2
+            return out
+
+        return remap, src_sig
+
     def restore_or_init(self, seed: int = 0):
         last = store.latest_step(self.ckpt_dir)
         params, opt, start = self.init_state(seed)
         if last is None:
             return params, opt, 0
         psh, osh = self._shardings()
+        remap, src_sig = self._plan_remap(
+            store.read_manifest(self.ckpt_dir, last).get("metadata", {}))
         (params, opt), meta = store.restore(
-            self.ckpt_dir, last, (params, opt), shardings=(psh, osh))
+            self.ckpt_dir, last, (params, opt), shardings=(psh, osh),
+            remap=remap)
         src = meta.get("mesh_axes")
         self.log(f"[trainer] restored step {last} "
                  f"(elastic mesh={tuple(self.mesh.shape.values())}"
                  f" pp={self.info.pp}"
                  + (f" <- {src} pp={meta.get('pp', 1)}" if src else "")
+                 + (f", plan relayout {src_sig[0]} -> "
+                    f"{self.plan.grouping_signature()[0]}"
+                    if remap is not None else "")
                  + ")")
         return params, opt, last
 
@@ -177,16 +257,19 @@ class Trainer:
                 losses.append(loss)
                 self._heartbeat(step)
                 if (step + 1) % ckpt_every == 0 or step + 1 == total_steps:
-                    # stage-aware manifest: the source mesh/pp travel with
-                    # the checkpoint so elastic restores (incl. PP <-> pure
-                    # TMP) can log & sanity-check the layout change
+                    # plan-aware manifest: the executable ParallelPlan (and
+                    # the source mesh/pp) travel with the checkpoint so
+                    # elastic restores validate/relayout across plan
+                    # changes (PP <-> pure TMP, grouped <-> stacked,
+                    # mixed-schedule <-> global-schedule)
                     self.checkpointer.save(
                         step + 1, (params, opt),
                         metadata={"loss": loss,
                                   "mesh_axes": {k: int(v) for k, v in
                                                 self.mesh.shape.items()},
                                   "pp": self.info.pp,
-                                  "virtual_stages": self.hp.virtual_stages})
+                                  "virtual_stages": self.hp.virtual_stages,
+                                  "plan": self.plan.to_dict()})
                 if step % 10 == 0:
                     self.log(f"[trainer] step {step} loss {loss:.4f} "
                              f"{dt*1e3:.0f} ms")

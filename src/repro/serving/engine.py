@@ -50,13 +50,51 @@ class ServingEngine:
     capacity against generation length (``launch/serve.py --prefill-len``).
 
     ``decode_micro``: micro-group count for pipeline-mesh decode streaming
-    (0 = auto: one group per stage, ``pp * virtual_stages``)."""
+    (0 = auto: one group per stage, ``pp * virtual_stages``).
+
+    ``plan``: an executable :class:`repro.core.plan.ParallelPlan` — the
+    engine projects it onto its hp (schedule/layout/virtual stages) and
+    ``decode_micro``.  Mixed per-layer *schedules* serve under the plan's
+    ``primary_schedule`` (all schedules are token-identical at decode;
+    only overlap differs); mixed per-layer *degrees* are a training-only
+    layout and are rejected with a friendly error."""
 
     def __init__(self, cfg: ArchConfig, mesh, *, slots: int, max_seq: int,
                  hp: Optional[TrainHParams] = None, eos_id: int = 2,
-                 prefill_len: Optional[int] = None, decode_micro: int = 0):
+                 prefill_len: Optional[int] = None, decode_micro: int = 0,
+                 plan=None):
         self.cfg = cfg
         self.mesh = mesh
+        self.plan = plan
+        if plan is not None:
+            from repro.core.axes import deg_total, mesh_info
+            plan.validate_for(cfg)
+            degs = {d for d in plan.degrees}
+            if len(degs) > 1:
+                raise ValueError(
+                    f"plan {plan.summary()} pins mixed per-layer TMP "
+                    f"degrees — the grouped layout is training-only; "
+                    f"serve with a uniform-degree plan (e.g. "
+                    f"plan(objective='latency').plan)")
+            # a pinned uniform degree / pp must MATCH the mesh — silently
+            # decoding under a different layout than the plan chose is
+            # exactly the scattered-knob failure plans exist to kill
+            info = mesh_info(mesh)
+            deg = next(iter(degs))
+            if deg is not None and deg_total(deg) != info.tp:
+                raise ValueError(
+                    f"plan {plan.summary()} pins TMP degree {deg} but the "
+                    f"mesh's model group is {info.tp}-way — launch with "
+                    f"the plan's recorded mesh (serve.py --plan rebuilds "
+                    f"it) or a matching --mesh")
+            if plan.pp != info.pp:
+                raise ValueError(
+                    f"plan {plan.summary()} expects pp={plan.pp} but the "
+                    f"mesh has pp={info.pp} — launch with the plan's "
+                    f"recorded mesh or a matching --pp")
+            hp = plan.apply(hp or TrainHParams())
+            if decode_micro == 0:
+                decode_micro = plan.decode_micro
         self.hp = hp or TrainHParams()
         self.slots = slots
         self.max_seq = max_seq

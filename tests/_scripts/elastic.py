@@ -61,3 +61,45 @@ runner.report(
     any("restored" in ln for ln in logs_back) and r5["final_step"] >= 24
     and abs(r5["losses"][0] - r4["losses"][-1]) < 0.5,
     f"loss {r4['losses'][-1]:.3f} -> {r5['losses'][0]:.3f}")
+
+# ---- mixed-schedule plan -> global-schedule elastic re-mesh --------------
+# Train under a heterogeneous per-layer (degree, schedule) ParallelPlan
+# (the GROUPED parameter layout), checkpoint, then resume under a uniform
+# plan on a plain mesh (the STACKED layout) — the manifest's recorded plan
+# drives an exact grouped->stacked relayout on restore.  And back again.
+from repro.core.plan import ParallelPlan
+
+ckpt_plan = tempfile.mkdtemp()
+mixed = ParallelPlan.from_hparams(hp, cfg.num_layers,
+                                  schedules=["oases", "megatron"])
+t6 = Trainer(cfg, runner.mesh(2, 2), hp, global_batch=8, seq_len=64,
+             ckpt_dir=ckpt_plan, plan=mixed, log_fn=lambda s: None)
+r6 = t6.train(8, ckpt_every=4)
+
+logs_mix = []
+t7 = Trainer(cfg, runner.mesh(1, 4), hp, global_batch=8, seq_len=64,
+             ckpt_dir=ckpt_plan, log_fn=logs_mix.append)
+r7 = t7.train(16, ckpt_every=4)
+relayout = any("relayout grouped -> stacked" in ln for ln in logs_mix)
+runner.report(
+    "elastic-mixed-plan-to-global",
+    relayout and r7["final_step"] >= 16
+    and abs(r7["losses"][0] - r6["losses"][-1]) < 0.5,
+    f"relayout={relayout} loss {r6['losses'][-1]:.3f} -> "
+    f"{r7['losses'][0]:.3f}")
+
+# uniform checkpoint -> mixed-(degree, schedule) plan on the factored mesh
+logs_fac = []
+plan_fac = ParallelPlan.from_hparams(hp, cfg.num_layers, degrees=[4, 2],
+                                     schedules=["oases", "fused"])
+t8 = Trainer(cfg, runner.factored_mesh(1, (2, 2, 2)), hp, global_batch=8,
+             seq_len=64, ckpt_dir=ckpt_plan, plan=plan_fac,
+             log_fn=logs_fac.append)
+r8 = t8.train(24, ckpt_every=8)
+relayout_b = any("relayout stacked -> grouped" in ln for ln in logs_fac)
+runner.report(
+    "elastic-global-to-mixed-plan",
+    relayout_b and r8["final_step"] >= 24
+    and abs(r8["losses"][0] - r7["losses"][-1]) < 0.5,
+    f"relayout={relayout_b} loss {r7['losses'][-1]:.3f} -> "
+    f"{r8['losses'][0]:.3f}")

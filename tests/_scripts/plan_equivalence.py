@@ -1,0 +1,63 @@
+"""Subprocess body: executable-ParallelPlan equivalence.
+
+The tentpole contract: a heterogeneous per-layer (degree, schedule) plan
+— consecutive layers with different strategies executing as separate scan
+groups under their own TmpCtx/sub-batch split — must reproduce the
+1-device oracle's loss AND gradients exactly.
+
+``canonical_init`` initializes parameters in the canonical STACKED layout
+and relayouts them into the run's grouped layout (grouped spec trees
+flatten in a different order, which would otherwise deal different RNG
+keys per leaf), so every case is value-comparable against the oracle —
+and every case therefore also exercises the cross-plan relayout helpers
+the elastic-resume path uses (models/params.relayout_flat).
+
+Prints PASS/FAIL lines consumed by tests/test_distributed.py.
+"""
+import runner  # noqa: F401  (must be first: sets XLA_FLAGS before jax)
+
+# ---- mixed per-layer schedules at mesh-uniform degrees (plain mesh) ------
+cfg = runner.reduced_config("internlm2-1.8b")
+o_l, o_g = runner.train_loss_and_grads(cfg, runner.mesh(1, 1))
+for scheds in (["oases", "megatron"], ["fused", "oases"],
+               ["megatron", "wang"], ["merak", "oases"]):
+    ls, g = runner.train_loss_and_grads(cfg, runner.mesh(2, 2),
+                                        schedules=scheds,
+                                        canonical_init=True)
+    gc = runner.canonical_grads(cfg, g, schedules=scheds)
+    gerr = runner.grads_err(o_g, gc)
+    runner.report(f"sched-internlm2-{scheds}",
+                  abs(o_l - ls) < 2e-4 and gerr < 5e-3,
+                  f"dloss={abs(o_l - ls):.2e} gerr={gerr:.2e}")
+
+# MoE interplay: expert sharding composes with per-layer schedule groups
+moe = runner.reduced_config("granite-moe-3b-a800m")
+m_l, m_g = runner.train_loss_and_grads(moe, runner.mesh(1, 1))
+for scheds in (["fused", "oases"],):
+    ls, g = runner.train_loss_and_grads(moe, runner.mesh(2, 2),
+                                        schedules=scheds,
+                                        canonical_init=True)
+    gc = runner.canonical_grads(moe, g, schedules=scheds)
+    gerr = runner.grads_err(m_g, gc)
+    runner.report(f"sched-moe-{scheds}",
+                  abs(m_l - ls) < 2e-4 and gerr < 5e-3,
+                  f"dloss={abs(m_l - ls):.2e} gerr={gerr:.2e}")
+
+# ---- mixed (degree, schedule) plans on the factored mesh -----------------
+fm = runner.factored_mesh(1, (2, 2, 2))
+o8_l, o8_g = runner.train_loss_and_grads(cfg, runner.mesh(1, 1), batch=8)
+for degrees, scheds in (([4, 2], ["oases", "fused"]),
+                        ([8, 8], ["megatron", "oases"]),
+                        ([(2, 2), 4], ["fused", "wang"]),
+                        # the golden MIXED_CASES strategy shape (high-
+                        # degree wang + low-degree oases), scaled to the
+                        # 8-device harness
+                        ([8, 4], ["wang", "oases"])):
+    ls, g = runner.train_loss_and_grads(cfg, fm, batch=8, degrees=degrees,
+                                        schedules=scheds,
+                                        canonical_init=True)
+    gc = runner.canonical_grads(cfg, g, degrees=degrees, schedules=scheds)
+    gerr = runner.grads_err(o8_g, gc)
+    runner.report(f"plan-sched-{degrees}-{scheds}",
+                  abs(o8_l - ls) < 2e-4 and gerr < 5e-3,
+                  f"dloss={abs(o8_l - ls):.2e} gerr={gerr:.2e}")

@@ -86,20 +86,63 @@ def flatten(tree):
 
 def train_loss_and_grads(arch_or_cfg, msh, hp: TrainHParams = None, *,
                          batch: int = 4, seq: int = 64, degrees=None,
-                         seed: int = 0, batch_seed: int = 42):
+                         schedules=None, seed: int = 0, batch_seed: int = 42,
+                         canonical_init: bool = False):
     """(loss, flat-grad dict) of the reduced config on a mesh — the body
-    every per-feature script used to duplicate."""
+    every per-feature script used to duplicate.
+
+    ``canonical_init``: initialize parameters in the canonical STACKED
+    layout and relayout into the run's grouped (planner-mode) layout, so
+    a per-layer-plan run is value-comparable against the 1-device oracle
+    (grouped spec trees flatten in a different order, which would
+    otherwise deal different RNG keys per leaf).  Pair with
+    :func:`canonical_grads` on the result."""
     cfg = (reduced_config(arch_or_cfg) if isinstance(arch_or_cfg, str)
            else arch_or_cfg)
     hp = hp or TrainHParams()
     loss_fn, specs, _ = lm.build_train_loss(
-        cfg, msh, hp, global_batch=batch, seq_len=seq, degrees=degrees)
-    p = prm.init_params(specs, jax.random.PRNGKey(seed))
+        cfg, msh, hp, global_batch=batch, seq_len=seq, degrees=degrees,
+        schedules=schedules)
+    if canonical_init and (degrees is not None or schedules is not None):
+        from repro.core.axes import mesh_info
+        base_specs = prm.model_specs(cfg, mesh_info(msh), max_pos=seq,
+                                     layout=hp.tmp_layout)
+        p0 = prm.init_params(base_specs, jax.random.PRNGKey(seed))
+        flat = prm.relayout_flat(
+            cfg, prm.tree_to_flat(p0), {},
+            _layout_meta(cfg, degrees, schedules, hp))
+        p = prm.tree_from_flat(specs, flat)
+    else:
+        p = prm.init_params(specs, jax.random.PRNGKey(seed))
     b = make_batch(cfg, batch, seq, batch_seed)
     with compat.set_mesh(msh):
         loss = float(jax.jit(loss_fn)(p, b)[0])
         grads = jax.jit(jax.grad(lambda p, b: loss_fn(p, b)[0]))(p, b)
     return loss, flatten(grads)
+
+
+def _layout_meta(cfg, degrees, schedules, hp):
+    """The relayout descriptor of a (degrees, schedules) run — mirrors
+    lm._normalize_strategy's grouping promotion."""
+    if schedules is not None and len(set(schedules)) == 1:
+        schedules = None
+    if degrees is None and schedules is None:
+        return {}
+    degs = list(degrees) if degrees is not None \
+        else [None] * cfg.num_layers
+    scheds = (list(schedules) if schedules is not None
+              else [hp.schedule] * cfg.num_layers)
+    return {"degrees": degs, "schedules": scheds}
+
+
+def canonical_grads(arch_or_cfg, g: dict, *, degrees=None, schedules=None,
+                    hp: TrainHParams = None) -> dict:
+    """Relayout a grouped run's flat grad dict back into the canonical
+    stacked layout for oracle comparison."""
+    cfg = (reduced_config(arch_or_cfg) if isinstance(arch_or_cfg, str)
+           else arch_or_cfg)
+    meta = _layout_meta(cfg, degrees, schedules, hp or TrainHParams())
+    return prm.relayout_flat(cfg, g, meta, {}) if meta else g
 
 
 # --------------------------------------------------------------------------

@@ -52,6 +52,18 @@ def test_2d_hybrid_equivalence():
 
 @multidevice
 @pytest.mark.slow
+def test_plan_equivalence():
+    """Executable-ParallelPlan tier: heterogeneous per-layer
+    (degree, schedule) strategies — mixed schedules at mesh-uniform
+    degrees on a plain mesh, MoE interplay, and mixed (degree, schedule)
+    plans on the factored mesh — are loss- AND grad-identical to the
+    1-device oracle (PR acceptance)."""
+    lines = _run("plan_equivalence.py", timeout=1800)
+    assert len(lines) >= 8
+
+
+@multidevice
+@pytest.mark.slow
 def test_fine_remat_removes_recompute_collectives():
     _run("remat_counts.py")
 

@@ -79,7 +79,7 @@ def test_pipeline_specs_flatten_to_canonical_layer_order():
 
 def test_pipeline_rejects_planner_degrees():
     cfg = get_config("internlm2-1.8b").reduced()
-    with pytest.raises(ValueError, match="planner degrees"):
+    with pytest.raises(ValueError, match="planner strategies"):
         prm.model_specs(cfg, _info(("pipe", 2), ("data", 1), ("model", 2)),
                         degrees=[2, 2])
 
