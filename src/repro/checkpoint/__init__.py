@@ -1,4 +1,7 @@
-from repro.checkpoint.store import (AsyncCheckpointer, all_steps, latest_step,
-                                    restore, save)
+from repro.checkpoint.store import (AsyncCheckpointer,
+                                    CorruptCheckpointError, all_steps,
+                                    latest_intact_step, latest_step, restore,
+                                    save, verify)
 
-__all__ = ["AsyncCheckpointer", "all_steps", "latest_step", "restore", "save"]
+__all__ = ["AsyncCheckpointer", "CorruptCheckpointError", "all_steps",
+           "latest_intact_step", "latest_step", "restore", "save", "verify"]

@@ -1,16 +1,23 @@
 """Sharded checkpointing with async writes, atomic commit, keep-last-k GC,
-and reshard-on-load (elastic restarts).
+integrity checksums, and reshard-on-load (elastic restarts).
 
 Layout:
   <dir>/step_<n>.tmp/            while writing
   <dir>/step_<n>/                after atomic rename (commit point)
-      manifest.json              step, tree structure, leaf shapes/dtypes
+      manifest.json              step, tree structure, leaf shapes/dtypes,
+                                 per-leaf crc32 checksums
       shard_<i>.npz              leaf arrays (host's addressable shards)
 
 On a multi-host cluster each host writes its addressable shards; this
 container is single-host, so the full arrays land in one shard file.  The
 restore path re-shards to whatever mesh the restarted job brings — pods can
 be dropped/added between runs (elastic scaling).
+
+Integrity: ``save`` records a crc32 of every leaf's bytes in the manifest;
+``restore`` verifies and raises :class:`CorruptCheckpointError` on any
+mismatch (or unreadable shard/manifest), so a torn write or bit-rot never
+silently loads garbage.  ``latest_intact_step``/the trainer's
+``restore_or_init`` walk back to the newest checkpoint that verifies.
 """
 from __future__ import annotations
 
@@ -19,15 +26,29 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint failed integrity verification (checksum mismatch,
+    unreadable shard, or missing/garbled manifest).  Restore paths catch
+    this to fall back to the previous intact checkpoint instead of
+    crashing — or worse, silently training on corrupted state."""
+
+
 def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     return [(jax.tree_util.keystr(kp), v) for kp, v in leaves], treedef
+
+
+def _crc(arr: np.ndarray) -> int:
+    """crc32 of a leaf's raw bytes (contiguous view, so the checksum is a
+    pure function of values + dtype + shape order)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def save(ckpt_dir: str, step: int, tree, *, metadata: Optional[dict] = None,
@@ -48,7 +69,7 @@ def save(ckpt_dir: str, step: int, tree, *, metadata: Optional[dict] = None,
         arrays[f"a{i}"] = arr
         manifest["leaves"].append(
             {"key": key, "name": f"a{i}", "shape": list(arr.shape),
-             "dtype": str(arr.dtype)})
+             "dtype": str(arr.dtype), "crc32": _crc(arr)})
     np.savez(os.path.join(tmp, "shard_0.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -81,6 +102,63 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _load_shard(d: str) -> Tuple[dict, Any]:
+    """(manifest, npz data) of a checkpoint dir, with unreadable files
+    normalized to :class:`CorruptCheckpointError`."""
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "shard_0.npz"))
+    except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+        raise CorruptCheckpointError(
+            f"checkpoint {d} is unreadable: {e!r}") from e
+    return manifest, data
+
+
+def _verified_leaves(d: str) -> Tuple[dict, dict]:
+    """(manifest, {keystr: array | None}) of a checkpoint, verifying
+    per-leaf crc32 checksums where the manifest records them
+    (pre-integrity checkpoints load unchecked)."""
+    manifest, data = _load_shard(d)
+    by_key = {}
+    for leaf in manifest["leaves"]:
+        if leaf.get("none"):
+            by_key[leaf["key"]] = None
+            continue
+        try:
+            arr = data[leaf["name"]]
+        except Exception as e:
+            raise CorruptCheckpointError(
+                f"checkpoint {d} shard is corrupt at leaf "
+                f"{leaf['key']}: {e!r}") from e
+        want = leaf.get("crc32")
+        if want is not None and _crc(arr) != want:
+            raise CorruptCheckpointError(
+                f"checkpoint {d} failed integrity check: leaf "
+                f"{leaf['key']} crc32 {_crc(arr):#010x} != recorded "
+                f"{want:#010x}")
+        by_key[leaf["key"]] = arr
+    return manifest, by_key
+
+
+def verify(ckpt_dir: str, step: int) -> bool:
+    """True iff the checkpoint at ``step`` passes integrity verification."""
+    try:
+        _verified_leaves(os.path.join(ckpt_dir, f"step_{step}"))
+        return True
+    except CorruptCheckpointError:
+        return False
+
+
+def latest_intact_step(ckpt_dir: str) -> Optional[int]:
+    """The newest step whose checkpoint verifies — the safe restore
+    target when the newest write may be torn or bit-rotted."""
+    for s in reversed(all_steps(ckpt_dir)):
+        if verify(ckpt_dir, s):
+            return s
+    return None
+
+
 def read_manifest(ckpt_dir: str, step: int) -> dict:
     """The checkpoint's manifest (step, leaves, metadata — including the
     ParallelPlan the run trained under) without loading any arrays; the
@@ -99,14 +177,12 @@ def restore(ckpt_dir: str, step: int, like_tree, *,
     ``remap``: optional ``{keystr: array} -> {keystr: array}`` transform
     applied to the loaded leaves before matching — the cross-plan
     relayout hook (runtime/trainer.py builds it from the manifest's plan
-    vs the current one via models/params.relayout_flat)."""
+    vs the current one via models/params.relayout_flat).
+
+    Raises :class:`CorruptCheckpointError` (never returns garbage) when
+    the checkpoint fails its manifest crc32 integrity check."""
     d = os.path.join(ckpt_dir, f"step_{step}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(d, "shard_0.npz"))
-    by_key = {}
-    for leaf in manifest["leaves"]:
-        by_key[leaf["key"]] = None if leaf.get("none") else data[leaf["name"]]
+    manifest, by_key = _verified_leaves(d)
     if remap is not None:
         by_key = remap(by_key)
 
@@ -165,11 +241,25 @@ def restore(ckpt_dir: str, step: int, like_tree, *,
 
 
 class AsyncCheckpointer:
-    """Background-thread writer: snapshot to host, return immediately."""
+    """Background-thread writer: snapshot to host, return immediately.
 
-    def __init__(self, ckpt_dir: str, keep_last: int = 3):
+    Transient I/O errors (``OSError``) are retried ``retries`` times with
+    exponential backoff before the exception is stashed for the next
+    ``wait()``; every failed attempt increments ``failed_saves``, a
+    counter an external supervisor can inspect to escalate persistent
+    storage trouble (runtime/elastic.py).  ``save_fn`` is injectable so
+    fault-injection tests can make writes flaky or corrupt committed
+    shards deterministically."""
+
+    def __init__(self, ckpt_dir: str, keep_last: int = 3, *,
+                 retries: int = 2, backoff_s: float = 0.05,
+                 save_fn=None):
         self.ckpt_dir = ckpt_dir
         self.keep_last = keep_last
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.failed_saves = 0              # cumulative failed write attempts
+        self._save_fn = save_fn or save
         self._pending: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
@@ -180,11 +270,22 @@ class AsyncCheckpointer:
             tree, is_leaf=lambda x: x is None)
 
         def work():
-            try:
-                save(self.ckpt_dir, step, host_tree, metadata=metadata,
-                     keep_last=self.keep_last)
-            except BaseException as e:      # surfaced on next wait()
-                self._error = e
+            for attempt in range(self.retries + 1):
+                try:
+                    self._save_fn(self.ckpt_dir, step, host_tree,
+                                  metadata=metadata,
+                                  keep_last=self.keep_last)
+                    return
+                except OSError as e:       # transient I/O: retry w/ backoff
+                    self.failed_saves += 1
+                    if attempt == self.retries:
+                        self._error = e    # surfaced on next wait()
+                        return
+                    time.sleep(self.backoff_s * (2 ** attempt))
+                except BaseException as e:  # non-I/O: don't retry
+                    self.failed_saves += 1
+                    self._error = e
+                    return
 
         self._pending = threading.Thread(target=work, daemon=True)
         self._pending.start()

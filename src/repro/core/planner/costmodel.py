@@ -88,6 +88,44 @@ class HWConfig:
         crossings = math.ceil(degree / ns)
         return intra + 2.0 * crossings * self.lat_y
 
+    def degrade(self, *, n_chips: Optional[int] = None,
+                lost_chips: int = 0,
+                link_bw_y: Optional[float] = None,
+                link_bw_x: Optional[float] = None,
+                node_size: Optional[int] = None,
+                bw_scale: float = 1.0) -> "HWConfig":
+        """The surviving-topology view of this cluster after a fault —
+        what the elastic supervisor hands back to :func:`ilp.replan` when
+        a host drops or a link degrades (AMP-style heterogeneity
+        awareness: replan against *measured* health, not the spec sheet).
+
+        * ``n_chips``/``lost_chips`` — surviving device count (clamped to
+          >= 1; ``node_size`` is re-clamped so a partial node never claims
+          more chips than survive);
+        * ``link_bw_y``/``link_bw_x`` — measured per-link bandwidth
+          overrides (a degraded NIC reports its *actual* rate);
+        * ``bw_scale`` — uniform multiplier on every link term (straggler
+          escalation: the whole collective runs at the slow peer's pace).
+        """
+        import dataclasses
+        n = int(n_chips) if n_chips is not None \
+            else self.n_chips - int(lost_chips)
+        n = max(n, 1)
+        ns = int(node_size) if node_size is not None else self.node_size
+        fields: Dict[str, object] = {
+            "n_chips": n, "node_size": min(ns, n) if ns else 0}
+        if link_bw_y is not None:
+            fields["link_bw_y"] = max(float(link_bw_y), 1.0)
+        if link_bw_x is not None:
+            fields["link_bw_x"] = max(float(link_bw_x), 1.0)
+        hw = dataclasses.replace(self, **fields)
+        if bw_scale != 1.0:
+            s = max(float(bw_scale), 1e-6)
+            hw = dataclasses.replace(
+                hw, link_bw=hw.link_bw * s,
+                link_bw_x=hw.link_bw_x * s, link_bw_y=hw.link_bw_y * s)
+        return hw
+
     @classmethod
     def from_measurements(cls, *, max_devices: int = 8,
                           matmul_dim: int = 1024, ring_bytes: int = 1 << 22,

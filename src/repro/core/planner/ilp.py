@@ -470,6 +470,66 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                                     mesh_shape=msh, mesh_axes=max_))
 
 
+def replan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
+           hw: cm.HWConfig,
+           options: Sequence[int] = (2, 4, 8, 16),
+           mem_cap: Optional[float] = None,
+           time_limit: float = 5.0,
+           layout: str = "1d",
+           schedules: Optional[Sequence[str]] = None,
+           uniform: bool = True) -> PlanResult:
+    """Mid-run replanning against a degraded topology
+    (``HWConfig.degrade``): the elastic supervisor's planner entry point
+    (runtime/elastic.py).
+
+    Differences from :func:`plan`, all in the name of producing a plan
+    that is guaranteed executable on whatever survived:
+
+    * the option space is CLAMPED to the surviving chip count (each
+      option rounds down to the largest power of two <= min(option,
+      n_chips); degree 1 — no TMP — is the 1-chip limit case);
+    * ``uniform=True`` (default) collapses a mixed-degree decision to its
+      max-degree uniform strategy — a surviving mesh is relaunched as a
+      plain ``(data, model)`` mesh, not the factored t-axis mesh that
+      per-layer mixed degrees require — and records the mesh-following
+      (degree ``None``) form so the plan runs on the relaunched mesh
+      without a grouped parameter relayout;
+    * a short default ``time_limit`` — this runs between training steps.
+    """
+    import math as _math
+
+    def _clamp(n: int) -> int:
+        n = max(min(int(n), hw.n_chips), 1)
+        return 2 ** int(_math.log2(n))
+
+    opts = sorted({_clamp(n) for n in options}) or [1]
+    pr = plan(cfg, shape, hp, hw, options=opts, mem_cap=mem_cap,
+              time_limit=time_limit, layout=layout, schedules=schedules)
+    if not uniform:
+        return pr
+    degrees, scheds = list(pr.degrees), list(pr.schedules)
+    if len({(cm._dkey(d), s) for d, s in zip(degrees, scheds)}) > 1:
+        # collapse like plan_joint: the max-degree strategy is the one
+        # that satisfied Eq. 6 memory everywhere
+        k = max(range(len(degrees)), key=lambda i: cm._dtot(degrees[i]))
+        degrees = [degrees[k]] * len(degrees)
+        scheds = [scheds[k]] * len(scheds)
+        est = cm.estimate_iteration(cfg, shape, hp, degrees, hw, opts,
+                                    schedules=scheds)
+        pr = PlanResult(degrees, est["iter_s"], pr.solve_ms,
+                        f"uniform-collapse:{pr.status}", _runs(degrees),
+                        schedules=scheds)
+    # mesh-following executable form: the decision lives in the mesh
+    # signature (dp x tp), the layers follow the mesh — so the relaunched
+    # trainer needs no factored axes and no grouped param layout
+    from repro.core.plan import ParallelPlan
+    msh, max_ = _mesh_sig(hw, 1, pr.degrees[0])
+    pr.plan = ParallelPlan.from_hparams(
+        hp, len(pr.degrees), schedules=list(pr.schedules),
+        mesh_shape=msh, mesh_axes=max_)
+    return pr
+
+
 # --------------------------------------------------------------------------
 # joint PP x TMP search (the pipeline axis of core/pipeline.py)
 # --------------------------------------------------------------------------

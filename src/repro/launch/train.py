@@ -62,7 +62,42 @@ def main():
                          "(degree, schedule) space of the paper ('auto')")
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--elastic", action="store_true",
+                    help="run under the ElasticSupervisor: faults trigger "
+                         "ILP replanning + in-memory relayout instead of "
+                         "a crash (runtime/elastic.py)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="elastic: host count the devices split across "
+                         "(host h owns the contiguous device slice)")
+    ap.add_argument("--max-replans", type=int, default=3)
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--restart-backoff", type=float, default=0.05,
+                    help="restart backoff base seconds (exponential)")
+    ap.add_argument("--inject-fail", default="", metavar="STEPS",
+                    help="chaos: comma-separated steps raising a generic "
+                         "worker failure (restart-from-checkpoint path)")
+    ap.add_argument("--inject-host-loss", default="", metavar="STEP:HOST",
+                    help="chaos: lose HOST at STEP (comma-separated pairs; "
+                         "elastic replan + relayout path)")
+    ap.add_argument("--inject-link-degrade", default="", metavar="STEP:BW",
+                    help="chaos: degrade inter-node bandwidth to BW "
+                         "bytes/s at STEP")
+    ap.add_argument("--inject-ckpt-corrupt", default="", metavar="STEPS",
+                    help="chaos: bit-flip the checkpoint written at these "
+                         "steps (intact-fallback path)")
+    ap.add_argument("--inject-ckpt-fail", type=int, default=0,
+                    metavar="N",
+                    help="chaos: first N checkpoint writes raise a "
+                         "transient OSError (async retry path)")
     args = ap.parse_args()
+
+    def _steps(spec):
+        return tuple(int(s) for s in spec.split(",") if s)
+
+    def _pairs(spec, second=int):
+        return tuple((int(a), second(b))
+                     for a, b in (p.split(":") for p in spec.split(",")
+                                  if p))
 
     if args.distributed:
         import jax
@@ -111,9 +146,56 @@ def main():
     if args.save_plan:
         pplan.save(args.save_plan)
         print(f"[plan] wrote {args.save_plan}: {pplan.summary()}")
+    from repro.runtime import FailureInjector
+    injector = FailureInjector(
+        fail_at_steps=_steps(args.inject_fail),
+        host_loss=_pairs(args.inject_host_loss),
+        link_degrade=_pairs(args.inject_link_degrade, float),
+        ckpt_fail_saves=args.inject_ckpt_fail,
+        corrupt_at_steps=_steps(args.inject_ckpt_corrupt))
+
+    if args.elastic:
+        import jax
+
+        from repro.configs.base import ShapeConfig
+        from repro.runtime import ElasticConfig, ElasticSupervisor, Topology
+        from repro.runtime import elastic as el
+        ndev = len(jax.devices())
+        hosts = max(args.hosts, 1)
+        if ndev % hosts:
+            raise SystemExit(f"--hosts {hosts} does not divide the "
+                             f"{ndev} visible devices")
+        topo = Topology(n_hosts=hosts, chips_per_host=ndev // hosts)
+
+        def make_trainer(topology, plan):
+            m = el.mesh_for(topology, plan or pplan)
+            return Trainer(cfg, m, hp, global_batch=args.batch,
+                           seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+                           injector=injector,
+                           plan=plan if plan is not None else pplan)
+
+        sup = ElasticSupervisor(
+            make_trainer, topology=topo, cfg=cfg,
+            shape=ShapeConfig("cli", args.seq, args.batch, "train"),
+            hp=hp,
+            econfig=ElasticConfig(max_replans=args.max_replans,
+                                  max_restarts=args.max_restarts,
+                                  backoff_s=args.restart_backoff))
+        res = sup.run(args.steps, ckpt_every=args.ckpt_every,
+                      seed=args.seed)
+        print(json.dumps({
+            "final_step": res["final_step"],
+            "first_loss": res["losses"][0], "last_loss": res["losses"][-1],
+            "slow_steps": len(res["slow_steps"]),
+            "events": [e.describe() for e in res["events"]],
+            "replans": res["replans"], "restarts": res["restarts"],
+            "surviving_chips": res["topology"].n_chips,
+        }, indent=1))
+        return
+
     trainer = Trainer(cfg, mesh, hp, global_batch=args.batch,
                       seq_len=args.seq, ckpt_dir=args.ckpt_dir,
-                      plan=pplan)
+                      injector=injector, plan=pplan)
     res = trainer.train(args.steps, ckpt_every=args.ckpt_every,
                         seed=args.seed)
     print(json.dumps({

@@ -1,5 +1,15 @@
+from repro.runtime.elastic import (ElasticConfig, ElasticSupervisor,
+                                   FaultError, FaultEvent, FaultMonitor,
+                                   HeartbeatMonitor, HostLossError,
+                                   LinkDegradedError, StragglerEscalation,
+                                   Topology, heartbeat_path, mesh_for)
 from repro.runtime.trainer import (FailureInjector, StragglerDetector,
-                                   Trainer, run_with_restarts)
+                                   Trainer, corrupt_checkpoint,
+                                   run_with_restarts)
 
-__all__ = ["FailureInjector", "StragglerDetector", "Trainer",
+__all__ = ["ElasticConfig", "ElasticSupervisor", "FailureInjector",
+           "FaultError", "FaultEvent", "FaultMonitor", "HeartbeatMonitor",
+           "HostLossError", "LinkDegradedError", "StragglerDetector",
+           "StragglerEscalation", "Topology", "Trainer",
+           "corrupt_checkpoint", "heartbeat_path", "mesh_for",
            "run_with_restarts"]

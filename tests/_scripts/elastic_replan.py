@@ -1,0 +1,106 @@
+"""Subprocess body: ONLINE elastic training (runtime/elastic.py) — the
+supervisor detects injected faults mid-run, re-runs the ILP against the
+degraded topology, relayouts the live state in memory, and continues with
+loss continuity against an uninterrupted oracle.
+
+Case 1  host loss under a mixed-schedule (grouped-layout) plan: replan +
+        in-memory grouped->stacked relayout, losses match the oracle 1:1.
+Case 2  link-bandwidth degradation: replan without chip loss, continuity.
+Case 3  corrupted checkpoint shard + worker failure: the restart restores
+        from the previous INTACT checkpoint, not the corrupted one.
+"""
+import runner  # noqa: F401  (must be first: sets XLA_FLAGS before jax)
+
+import tempfile
+
+import numpy as np
+
+from repro.configs.base import ShapeConfig, TrainHParams
+from repro.core.plan import ParallelPlan
+from repro.runtime import (ElasticConfig, ElasticSupervisor, FailureInjector,
+                           Topology, Trainer)
+from repro.runtime import elastic as el
+
+cfg = runner.reduced_config("internlm2-1.8b")
+hp = TrainHParams(total_steps=16, warmup_steps=2, learning_rate=1e-3)
+shape = ShapeConfig("t", 64, 8, "train")
+TOTAL = 16
+
+
+def run_elastic(injector, start_plan, logs, *, hosts=4, steps=TOTAL):
+    ckpt = tempfile.mkdtemp()
+    topo = Topology(n_hosts=hosts, chips_per_host=8 // hosts)
+
+    def make_trainer(topology, plan):
+        mesh = el.mesh_for(topology, plan or start_plan)
+        return Trainer(cfg, mesh, hp, global_batch=8, seq_len=64,
+                       ckpt_dir=ckpt, injector=injector,
+                       plan=plan if plan is not None else start_plan,
+                       log_fn=logs.append)
+
+    sup = ElasticSupervisor(make_trainer, topology=topo, cfg=cfg,
+                            shape=shape, hp=hp,
+                            econfig=ElasticConfig(backoff_s=0.0,
+                                                  replan_time_limit=2.0),
+                            log_fn=logs.append)
+    return sup.run(steps, ckpt_every=4)
+
+
+# ---- oracle: uninterrupted run on the healthy mesh -----------------------
+mixed = ParallelPlan.from_hparams(hp, cfg.num_layers,
+                                  schedules=["oases", "megatron"],
+                                  mesh_shape=(2, 4),
+                                  mesh_axes=("data", "model"))
+oracle = Trainer(cfg, runner.mesh(2, 4), hp, global_batch=8, seq_len=64,
+                 ckpt_dir=tempfile.mkdtemp(), plan=mixed,
+                 log_fn=lambda s: None).train(TOTAL, ckpt_every=100)
+assert len(oracle["losses"]) == TOTAL
+
+# ---- case 1: host loss -> replan -> in-memory relayout -------------------
+logs1 = []
+r1 = run_elastic(FailureInjector(host_loss=((8, 3),)), mixed, logs1)
+carried = any("carried live state" in ln for ln in logs1)
+replanned = any("replanned after host-loss" in ln for ln in logs1)
+diff = (float(np.max(np.abs(np.array(r1["losses"])
+                            - np.array(oracle["losses"]))))
+        if len(r1["losses"]) == TOTAL else float("inf"))
+runner.report(
+    "elastic-host-loss-continuity",
+    replanned and r1["replans"] == 1 and r1["final_step"] >= TOTAL
+    and r1["topology"].n_chips == 6 and diff < 0.05,
+    f"replanned={replanned} carried={carried} chips=8->"
+    f"{r1['topology'].n_chips} max|loss-oracle|={diff:.4f}")
+
+# the relayout path must have been the in-memory one, not a checkpoint
+# round-trip (losses 1:1 with the oracle implies no step re-execution)
+runner.report("elastic-host-loss-in-memory-carry", carried,
+              "; ".join(ln for ln in logs1 if "carried" in ln) or "no carry")
+
+# ---- case 2: link degradation -> replan, no chip loss --------------------
+logs2 = []
+r2 = run_elastic(FailureInjector(link_degrade=((5, 2e9),)), mixed, logs2)
+diff2 = (float(np.max(np.abs(np.array(r2["losses"])
+                             - np.array(oracle["losses"]))))
+         if len(r2["losses"]) == TOTAL else float("inf"))
+runner.report(
+    "elastic-link-degrade-continuity",
+    r2["replans"] == 1 and r2["final_step"] >= TOTAL
+    and r2["topology"].n_chips == 8 and r2["topology"].link_bw_y == 2e9
+    and diff2 < 0.05,
+    f"replans={r2['replans']} bw={r2['topology'].link_bw_y:.1e} "
+    f"max|loss-oracle|={diff2:.4f}")
+
+# ---- case 3: corrupted shard -> restart resumes from intact ckpt ---------
+logs3 = []
+r3 = run_elastic(
+    FailureInjector(corrupt_at_steps=(8,), fail_at_steps=(10,)),
+    mixed, logs3)
+fell_back = any("corrupt" in ln for ln in logs3)
+restored_4 = any("restored step 4" in ln for ln in logs3)
+end_ok = abs(r3["losses"][-1] - oracle["losses"][-1]) < 0.05
+runner.report(
+    "elastic-corrupt-shard-intact-fallback",
+    fell_back and restored_4 and r3["restarts"] == 1
+    and r3["final_step"] >= TOTAL and end_ok,
+    f"corrupt-detected={fell_back} restored-intact={restored_4} "
+    f"last {r3['losses'][-1]:.3f} vs oracle {oracle['losses'][-1]:.3f}")

@@ -82,6 +82,18 @@ def test_elastic_remesh_resume():
 
 @multidevice
 @pytest.mark.slow
+def test_elastic_replan():
+    """Online elasticity (PR acceptance): injected mid-run host loss
+    triggers ILP replanning + in-memory relayout with loss continuity
+    against an uninterrupted oracle; a link-bandwidth fault replans
+    without chip loss; a corrupted checkpoint shard resumes from the
+    previous intact checkpoint."""
+    lines = _run("elastic_replan.py", timeout=1800)
+    assert len(lines) >= 4
+
+
+@multidevice
+@pytest.mark.slow
 def test_sequence_parallel_equivalence():
     lines = _run("sp_equivalence.py")
     assert len(lines) >= 5

@@ -244,6 +244,15 @@ def test_resolve_launch_desugars_flags(tmp_path):
     assert hp3.schedule == "megatron" and hp3.split == 1
 
 
+def test_plan_save_creates_parent_dirs(tmp_path):
+    # --save-plan into a not-yet-existing run directory must work (the
+    # checkpoint dir is only created later, at train() time)
+    p = ParallelPlan(layers=(LayerStrategy(8, "oases"),))
+    out = tmp_path / "new" / "run" / "plan.json"
+    p.save(str(out))
+    assert ParallelPlan.load(str(out)) == p
+
+
 # --------------------------------------------------------------------------
 # checkpoint manifest metadata
 # --------------------------------------------------------------------------
