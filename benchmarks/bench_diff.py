@@ -10,37 +10,74 @@ tolerance: numeric drift in either direction (the numbers are modeled and
 deterministic, so a silent change means a cost-model edit nobody pinned)
 and exact mismatches for planner decisions.
 
+Provenance is part of the contract: a ``--dry-run`` candidate diffed
+against a full-run baseline (or vice versa) compares files that exercised
+different code paths, so mismatched ``dry_run`` flags fail loudly instead
+of being skipped.  The CI modeled smoke passes ``--modeled-only``, which
+skips the measured section AND the provenance check — the modeled numbers
+are deterministic under both provenances, which is exactly why they can
+be gated from a dry run.
+
+The ``measured`` section holds wall-clock numbers, which are
+host-dependent: it is diffed under its own looser ``--measured-tol`` and
+its host/calibration metadata is never diffed.  The measured gate that
+matters is single-file:
+
+    python benchmarks/bench_diff.py --ranking BENCH_measured_ci.json
+
+checks that the cost model's RANKING of the measured grid points agrees
+with the wall clock's ranking (absolute numbers may differ; ordering must
+not — this is the loop that stops the modeled perf gate from grading its
+own homework).  An order flip only counts when both the modeled and the
+measured relative gaps exceed ``--rank-margin`` (default 25%): pairs
+that either view calls closer than that carry no ordering signal on a
+time-shared CPU core (within-config schedule wall clock swings tens of
+percent run-to-run there), while real schedule gaps on accelerator
+hosts and the grid's ~2x cross-config FLOPs spread clear the margin
+easily.
+
 To move the baseline deliberately (an intentional cost-model or planner
 change), regenerate it in the same PR:
 
-    PYTHONPATH=src python benchmarks/run.py --dry-run --tag baseline
+    PYTHONPATH=src python benchmarks/run.py --tag baseline
 """
 from __future__ import annotations
 
 import argparse
+import itertools
 import json
 import sys
 
-# run metadata, not perf trajectory
-SKIP_KEYS = {"tag", "time", "dry_run"}
+# run metadata, not perf trajectory (dry_run is deliberately NOT here:
+# provenance mismatches are errors, see module docstring)
+SKIP_KEYS = {"tag", "time"}
+# measured-section metadata that legitimately differs across hosts
+MEASURED_SKIP_KEYS = {"host", "hw_calibrated", "iters"}
 
 
-def _walk(base, new, path, tol, errors):
+def _walk(base, new, path, tol, errors, skip=SKIP_KEYS):
     if isinstance(base, dict):
         if not isinstance(new, dict):
             errors.append(f"{path}: shape changed ({type(new).__name__})")
             return
         for k, v in base.items():
-            if k in SKIP_KEYS and not path:
+            if k in skip and not path:
                 continue
             if k not in new:
                 errors.append(f"{path}/{k}: missing from candidate")
                 continue
-            _walk(v, new[k], f"{path}/{k}", tol, errors)
+            _walk(v, new[k], f"{path}/{k}", tol, errors, skip)
         for k in new:
-            if k not in base and not (k in SKIP_KEYS and not path):
+            if k not in base and not (k in skip and not path):
                 errors.append(f"{path}/{k}: new key absent from baseline "
                               f"(regenerate BENCH_baseline.json)")
+    elif isinstance(base, list):
+        if not isinstance(new, list) or len(new) != len(base):
+            errors.append(f"{path}: list changed shape "
+                          f"({base!r} -> {new!r})")
+            return
+        for i, (bv, nv) in enumerate(zip(base, new)):
+            _walk(bv, nv, f"{path}[{i}]", tol, errors, skip)
     elif isinstance(base, bool) or not isinstance(base, (int, float)):
         if base != new:
             errors.append(f"{path}: {base!r} -> {new!r}")
@@ -55,31 +92,154 @@ def _walk(base, new, path, tol, errors):
                           f"(rel drift {rel:.1%} > tol {tol:.1%})")
 
 
+def diff(base: dict, new: dict, *, tol: float, measured_tol: float,
+         modeled_only: bool) -> list:
+    """All deviations between two BENCH dicts (empty list = pass)."""
+    errors: list = []
+    if not modeled_only and base.get("dry_run") != new.get("dry_run"):
+        errors.append(
+            f"provenance mismatch: baseline dry_run="
+            f"{base.get('dry_run')!r} vs candidate dry_run="
+            f"{new.get('dry_run')!r} — these files exercised different "
+            f"code paths.  Diff modeled sections only with "
+            f"--modeled-only, or regenerate both the same way.")
+    base_m = base.get("measured")
+    new_m = new.get("measured")
+    # dry_run is owned by the provenance check above, measured by the
+    # loose-tolerance walk below
+    base = {k: v for k, v in base.items()
+            if k not in ("measured", "dry_run")}
+    new = {k: v for k, v in new.items()
+           if k not in ("measured", "dry_run")}
+    _walk(base, new, "", tol, errors)
+    if not modeled_only and (base_m is not None or new_m is not None):
+        if base_m is None or new_m is None:
+            errors.append("measured: present in only one file "
+                          "(use --modeled-only to skip it)")
+        else:
+            # wall-clock numbers drift across hosts and runs — diff the
+            # structure exactly but the numbers under the loose tolerance
+            _walk(_strip_measured(base_m), _strip_measured(new_m),
+                  "/measured", measured_tol, errors,
+                  skip=MEASURED_SKIP_KEYS)
+    return errors
+
+
+def _strip_measured(section):
+    if not isinstance(section, dict):
+        return section
+    return {k: v for k, v in section.items()
+            if k not in MEASURED_SKIP_KEYS}
+
+
+def check_ranking(bench: dict, *, margin: float) -> list:
+    """Modeled-vs-measured ranking disagreements in one BENCH file.
+
+    For every pair of measured grid points, the cost model and the wall
+    clock must order them the same way.  A flip only counts when BOTH
+    relative gaps exceed ``margin`` — points the model calls a near-tie
+    (or the clock measures as one) carry no ordering signal on a shared
+    core.
+    """
+    errors: list = []
+    section = bench.get("measured")
+    if not isinstance(section, dict) or "points" not in section:
+        errors.append("no measured section with points — run "
+                      "benchmarks/run.py WITHOUT --dry-run to produce one")
+        return errors
+    pts = section["points"]
+    if len(pts) < 2:
+        errors.append(f"measured section has {len(pts)} point(s); "
+                      f"ranking needs at least 2")
+        return errors
+    for a, b in itertools.combinations(pts, 2):
+        try:
+            ma, mb = float(a["modeled_tok_s"]), float(b["modeled_tok_s"])
+            wa, wb = float(a["measured_tok_s"]), float(b["measured_tok_s"])
+        except (KeyError, TypeError, ValueError):
+            errors.append(f"malformed point pair {a.get('key')} / "
+                          f"{b.get('key')}")
+            continue
+        gap_model = abs(ma - mb) / max(min(ma, mb), 1e-12)
+        gap_meas = abs(wa - wb) / max(min(wa, wb), 1e-12)
+        if gap_model <= margin or gap_meas <= margin:
+            continue  # a near-tie on either axis has no ordering signal
+        if (ma > mb) != (wa > wb):
+            errors.append(
+                f"ranking flip: model says {a['key']} "
+                f"{'>' if ma > mb else '<'} {b['key']} "
+                f"({ma:.0f} vs {mb:.0f} tok/s, gap {gap_model:.0%}) but "
+                f"wall clock says the opposite "
+                f"({wa:.0f} vs {wb:.0f} tok/s, gap {gap_meas:.0%})")
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline")
-    ap.add_argument("candidate")
+    ap.add_argument("candidate", nargs="?",
+                    help="omit with --ranking (single-file mode)")
     ap.add_argument("--tol", type=float, default=0.02,
-                    help="relative tolerance for numeric drift (default "
-                         "2%%; the numbers are modeled, so this only "
-                         "absorbs solver/library jitter)")
+                    help="relative tolerance for modeled numeric drift "
+                         "(default 2%%; the numbers are modeled, so this "
+                         "only absorbs solver/library jitter)")
+    ap.add_argument("--measured-tol", type=float, default=0.5,
+                    help="relative tolerance for the measured (wall-"
+                         "clock) section (default 50%%; host-dependent)")
+    ap.add_argument("--modeled-only", action="store_true",
+                    help="diff modeled sections only: skip the measured "
+                         "section and the dry_run provenance check (the "
+                         "CI modeled smoke diffs a --dry-run candidate "
+                         "against the full-run baseline)")
+    ap.add_argument("--ranking", action="store_true",
+                    help="single-file mode: check that the modeled "
+                         "ranking of the measured grid agrees with the "
+                         "wall-clock ranking")
+    ap.add_argument("--rank-margin", type=float, default=0.25,
+                    help="--ranking: an order flip only counts when both "
+                         "relative gaps exceed this (default 25%% — "
+                         "below it, a pair is a tie with no ordering "
+                         "signal)")
     args = ap.parse_args()
     with open(args.baseline) as f:
         base = json.load(f)
+
+    if args.ranking:
+        if args.candidate:
+            ap.error("--ranking takes a single BENCH file")
+        errors = check_ranking(base, margin=args.rank_margin)
+        if errors:
+            print(f"MODELED-VS-MEASURED RANKING DISAGREEMENT in "
+                  f"{args.baseline} ({len(errors)} problem(s)):")
+            for e in errors:
+                print(f"  {e}")
+            print("The cost model mis-orders schedules the hardware can "
+                  "measure — fix the model (or the measurement) before "
+                  "trusting the modeled gates.")
+            return 1
+        n = len(base["measured"]["points"])
+        print(f"ranking OK: modeled ordering agrees with measured "
+              f"ordering across {n} points "
+              f"(margin {args.rank_margin:.0%})")
+        return 0
+
+    if not args.candidate:
+        ap.error("two files required (or --ranking for single-file mode)")
     with open(args.candidate) as f:
         new = json.load(f)
-    errors: list = []
-    _walk(base, new, "", args.tol, errors)
+    errors = diff(base, new, tol=args.tol,
+                  measured_tol=args.measured_tol,
+                  modeled_only=args.modeled_only)
     if errors:
         print(f"PERF TRAJECTORY REGRESSION vs {args.baseline} "
               f"({len(errors)} deviation(s)):")
         for e in errors:
             print(f"  {e}")
         print("If intentional, regenerate the baseline in this PR:\n"
-              "  PYTHONPATH=src python benchmarks/run.py --dry-run "
-              "--tag baseline")
+              "  PYTHONPATH=src python benchmarks/run.py --tag baseline")
         return 1
-    print(f"perf trajectory OK: {args.candidate} matches {args.baseline} "
+    what = "modeled sections" if args.modeled_only else "trajectory"
+    print(f"perf {what} OK: {args.candidate} matches {args.baseline} "
           f"within {args.tol:.1%}")
     return 0
 

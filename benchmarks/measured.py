@@ -1,0 +1,78 @@
+"""Measured-speed bench tier (ROADMAP item 3): run the 8-virtual-device
+subprocess grid and shape its output into the ``measured`` section of
+``BENCH_<tag>.json``.
+
+The section carries, per (config x schedule) grid point, BOTH wall-clock
+tokens/s and the calibrated cost model's prediction for the same point —
+the pairing ``bench_diff.py --ranking`` gates on (modeled ordering must
+agree with measured ordering; absolute numbers are host-dependent and are
+only ever diffed under the looser measured tolerance).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, Optional
+
+
+def _host_meta() -> Dict[str, object]:
+    import platform
+
+    import jax
+    return {
+        "hostname": platform.node() or "unknown",
+        "platform": jax.default_backend(),
+        "jax": jax.__version__,
+        "python": platform.python_version(),
+    }
+
+
+def run_subprocess(points: int = 0, iters: int = 3,
+                   timeout: float = 3600.0) -> Dict:
+    """Spawn ``benchmarks/_measure.py --tier measured`` (it pins its own
+    XLA_FLAGS device count before importing jax) and parse its JSON."""
+    script = os.path.join(os.path.dirname(__file__), "_measure.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    cmd = [sys.executable, script, "--tier", "measured",
+           "--iters", str(iters)]
+    if points:
+        cmd += ["--points", str(points)]
+    p = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    if p.returncode:
+        raise RuntimeError(p.stderr[-2000:])
+    return json.loads(p.stdout.strip().splitlines()[-1])
+
+
+def build_section(raw: Dict, host: Optional[Dict] = None) -> Dict:
+    """The BENCH json ``measured`` section from the subprocess dict.
+
+    Numbers are rounded for stable diffs; the per-point
+    measured/modeled pairing is preserved verbatim for the ranking gate.
+    """
+    pts = []
+    for r in raw["points"]:
+        pts.append({
+            "key": r["key"], "schedule": r["schedule"],
+            "model": r["model"], "tmp": r["tmp"],
+            "measured_tok_s": round(float(r["measured_tok_s"]), 1),
+            "modeled_tok_s": round(float(r["modeled_tok_s"]), 1),
+            "measured_ms": round(float(r["measured_s"]) * 1e3, 2),
+            "modeled_ms": round(float(r["modeled_s"]) * 1e3, 2),
+        })
+    return {
+        "host": host if host is not None else _host_meta(),
+        "hw_calibrated": {k: (round(v, 3) if isinstance(v, float) else v)
+                          for k, v in raw["hw"].items()},
+        "iters": raw.get("iters", 3),
+        "points": pts,
+    }
+
+
+def run(points: int = 0, iters: int = 3) -> Dict:
+    """Measured tier end-to-end: subprocess grid -> BENCH section."""
+    return build_section(run_subprocess(points=points, iters=iters))

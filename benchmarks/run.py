@@ -5,8 +5,15 @@ of the row where defined, else the modeled iteration time), then a readable
 JSON dump per table to results/bench_report.json.
 
 ``--dry-run``: exercise every driver's modeled path but skip the measured
-fig6 subprocess (the only slow step) — the CI smoke that keeps the
-benchmark drivers from bit-rotting.
+steps (the fig6 subprocess and the measured-speed tier, the only slow
+steps) — the CI smoke that keeps the benchmark drivers from bit-rotting.
+
+Without ``--dry-run`` the run additionally emits the MEASURED section:
+wall-clock tokens/s per (config x schedule) grid point on this host's
+devices, paired with the calibrated cost model's prediction for the same
+point (benchmarks/measured.py).  ``bench_diff.py --ranking`` gates on the
+modeled-vs-measured ranking agreement — the loop that stops the perf gate
+from grading its own homework.
 """
 from __future__ import annotations
 
@@ -26,6 +33,11 @@ def main() -> None:
                     help="label for the machine-readable BENCH_<tag>.json "
                          "written at the repo root (perf trajectory — "
                          "future PRs diff against it)")
+    ap.add_argument("--measured-points", type=int, default=0,
+                    help="truncate the measured-tier grid to the first N "
+                         "points (0 = full grid; smokes use 1)")
+    ap.add_argument("--measured-iters", type=int, default=3,
+                    help="timed iterations per measured-tier point")
     args = ap.parse_args()
     root = os.path.join(os.path.dirname(__file__), "..")
     sys.path.insert(0, os.path.abspath(root))       # the benchmarks package
@@ -78,9 +90,12 @@ def main() -> None:
         print(f"fig7/{r['model']}/{r['schedule']}/{r['chips']},0,"
               f"eff={r['scaling_eff']}")
 
+    measured = None
     if args.dry_run:
         report["fig6_costmodel"] = {"skipped": "dry-run"}
         print("fig6/spearman,0,SKIPPED(dry-run)")
+        report["measured"] = {"skipped": "dry-run"}
+        print("measured/tier,0,SKIPPED(dry-run)")
     else:
         try:
             f6 = fig6_costmodel.run()
@@ -93,6 +108,20 @@ def main() -> None:
         except Exception as e:  # measured path needs the 8-dev subprocess
             report["fig6_costmodel"] = {"error": str(e)[:500]}
             print("fig6/spearman,0,ERROR")
+        # measured-speed tier (ROADMAP item 3): wall-clock tokens/s per
+        # (config x schedule), paired with the calibrated model's view of
+        # the same point.  A failure here must fail the run — a silently
+        # missing measured section would let the modeled gate grade its
+        # own homework again.
+        from benchmarks import measured as measured_mod
+        measured = measured_mod.run(points=args.measured_points,
+                                    iters=args.measured_iters)
+        report["measured"] = measured
+        for p in measured["points"]:
+            print(f"measured/{p['key'].replace(',', ' ')},"
+                  f"{p['measured_ms']*1e3:.0f},"
+                  f"tok_s={p['measured_tok_s']}"
+                  f";modeled_tok_s={p['modeled_tok_s']}")
 
     rows = roofline_report.run()
     report["roofline"] = rows
@@ -203,6 +232,8 @@ def main() -> None:
         "serving_latency_planner": serving,
         "mixed_schedule_planner": mixed,
     }
+    if measured is not None:
+        bench["measured"] = measured
     out = os.path.abspath(os.path.join(root, f"BENCH_{args.tag}.json"))
     with open(out, "w") as f:
         json.dump(bench, f, indent=1)

@@ -4,35 +4,39 @@ the Planner-v2 2D hybrid-partition search on a heterogeneous
 (commodity-server) bandwidth profile, and the joint PP x TMP search
 (pipeline stages across boxes, TMP within).
 
-    PYTHONPATH=src python examples/planner_demo.py [--calibrate]
+    PYTHONPATH=src python examples/planner_demo.py [--no-calibrate]
 
-``--calibrate`` replaces the hard-coded chip numbers with on-device
-micro-bench measurements (``HWConfig.from_measurements``) — the same
-profile-guided path as ``launch/dryrun.py --calibrate``.
+By DEFAULT the chip numbers come from on-device micro-bench measurements
+(``HWConfig.from_measurements``, cached per host) — the same
+profile-guided path the launchers run; ``--no-calibrate`` restores the
+hard-coded paper stand-in constants.
 
 The same search spaces are reachable from the launchers via
 ``--tmp-layout {1d,2d,auto}`` and ``--pp`` (train.py / dryrun.py).
 """
 import argparse
-import dataclasses
 
 from repro.configs.base import TrainHParams
 from repro.configs.gpt_oases import PAPER_TABLE4, paper_shape
-from repro.core.planner import (COMMODITY_25GBE, NVLINK_BOX,
+from repro.core.planner import (COMMODITY_25GBE, NVLINK_BOX, calibrated_hw,
                                 estimate_iteration, plan, plan_joint)
+from repro.core.planner.calibrate import describe
 from repro.core.planner.costmodel import HWConfig
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--calibrate", action="store_true",
+ap.add_argument("--calibrate", action="store_true", default=True,
                 help="fill flops/hbm/link bandwidths from on-device "
-                     "micro-benches instead of the stock chip numbers")
+                     "micro-benches (the default; cached per host)")
+ap.add_argument("--no-calibrate", dest="calibrate", action="store_false",
+                help="use the stock paper stand-in chip numbers")
 args = ap.parse_args()
 
 if args.calibrate:
-    HW = HWConfig.from_measurements(n_chips=32, node_size=8, hbm_cap=24e9)
+    # measured chip, declared cluster: the overrides describe the paper's
+    # 32-accelerator commodity topology and win over the measurements
+    HW = calibrated_hw(n_chips=32, node_size=8, hbm_cap=24e9)
     print("calibrated HWConfig:")
-    print(" ", {k: (f"{v:.3g}" if isinstance(v, float) else v)
-                for k, v in dataclasses.asdict(HW).items()})
+    print(" ", describe(HW))
 else:
     HW = HWConfig(n_chips=32, peak_flops=71e12, hbm_bw=936e9, link_bw=8e9,
                   hbm_cap=24e9)

@@ -5,14 +5,15 @@ from repro.core.planner.costmodel import (COMMODITY_25GBE, HWConfig,
                                           overlapped_time_2d,
                                           p2p_hop_seconds, pipeline_time,
                                           stage_hw)
+from repro.core.planner.calibrate import calibrated_hw
 from repro.core.planner.ilp import (JointPlanResult, PlanResult,
                                     ServingPlanResult, expand_options, plan,
                                     plan_joint, plan_serving, replan)
 
 __all__ = ["COMMODITY_25GBE", "HWConfig", "NVLINK_BOX", "V5E",
-           "decode_step_time", "estimate_iteration", "layer_blocks",
-           "node_costs", "overlapped_time", "overlapped_time_2d",
-           "p2p_hop_seconds", "pipeline_time", "stage_hw",
-           "JointPlanResult", "PlanResult", "ServingPlanResult",
-           "expand_options", "plan", "plan_joint", "plan_serving",
-           "replan"]
+           "calibrated_hw", "decode_step_time", "estimate_iteration",
+           "layer_blocks", "node_costs", "overlapped_time",
+           "overlapped_time_2d", "p2p_hop_seconds", "pipeline_time",
+           "stage_hw", "JointPlanResult", "PlanResult",
+           "ServingPlanResult", "expand_options", "plan", "plan_joint",
+           "plan_serving", "replan"]

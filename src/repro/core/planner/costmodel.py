@@ -127,24 +127,14 @@ class HWConfig:
         return hw
 
     @classmethod
-    def from_measurements(cls, *, max_devices: int = 8,
-                          matmul_dim: int = 1024, ring_bytes: int = 1 << 22,
-                          repeats: int = 5, **overrides) -> "HWConfig":
-        """Profile-guided calibration: short on-device micro-benches fill
-        the roofline terms this model otherwise takes on faith —
-
-        * a square matmul for ``peak_flops`` (achievable, so
-          ``mxu_base_eff`` is folded in and reset to 1.0),
-        * a large elementwise op for ``hbm_bw``,
-        * a ring AllReduce over the local devices for ``link_bw`` (and the
-          per-axis ``link_bw_x``/``link_bw_y`` defaults; single-device
-          hosts keep the configured link numbers).
-
-        Keyword ``overrides`` win over measurements — calibrate the chip,
-        keep the cluster description (``node_size``, ``link_bw_y``...).
-        Surfaced as ``--calibrate`` on ``examples/planner_demo.py`` and
-        ``launch/dryrun.py``.
-        """
+    def measure_fields(cls, *, max_devices: int = 8,
+                       matmul_dim: int = 1024, ring_bytes: int = 1 << 22,
+                       repeats: int = 5) -> Dict[str, float]:
+        """The raw micro-bench measurements behind
+        :meth:`from_measurements`, as a plain field dict — this is what
+        :mod:`repro.core.planner.calibrate` persists per host, so caller
+        ``overrides`` can be applied on top of a cache hit without
+        re-profiling."""
         import time as _time
 
         import jax
@@ -153,7 +143,11 @@ class HWConfig:
         devs = jax.devices()[:max_devices]
 
         def _best(fn, *args):
-            fn(*args)                      # compile + warm
+            # block the warm-up: under async dispatch an un-synced warm-up
+            # call queues its compute ahead of the first timed repeat and
+            # inflates it (the min-of-repeats only partially forgives this
+            # on short kernels)
+            jax.block_until_ready(fn(*args))    # compile + warm, synced
             best = float("inf")
             for _ in range(max(repeats, 1)):
                 t0 = _time.perf_counter()
@@ -190,7 +184,38 @@ class HWConfig:
             # and a ring AllReduce moves 2(n-1)/n of ITS payload
             bw = (arr.size * 4 / n) * 2.0 * (n - 1) / n / max(t_ar, 1e-9)
             fields.update(link_bw=bw, link_bw_x=bw, link_bw_y=bw)
+        return fields
+
+    @classmethod
+    def from_measurements(cls, *, max_devices: int = 8,
+                          matmul_dim: int = 1024, ring_bytes: int = 1 << 22,
+                          repeats: int = 5, **overrides) -> "HWConfig":
+        """Profile-guided calibration: short on-device micro-benches fill
+        the roofline terms this model otherwise takes on faith —
+
+        * a square matmul for ``peak_flops`` (achievable, so
+          ``mxu_base_eff`` is folded in and reset to 1.0),
+        * a large elementwise op for ``hbm_bw``,
+        * a ring AllReduce over the local devices for ``link_bw`` (and the
+          per-axis ``link_bw_x``/``link_bw_y`` defaults; single-device
+          hosts keep the configured link numbers).
+
+        Keyword ``overrides`` win over measurements — calibrate the chip,
+        keep the cluster description (``node_size``, ``link_bw_y``...).
+        This is the DEFAULT planner path of the launchers (``train.py``,
+        ``dryrun.py``, ``examples/planner_demo.py``; ``--no-calibrate``
+        restores the stock chip numbers); the per-host result cache lives
+        in :func:`repro.core.planner.calibrate.calibrated_hw`.
+        """
+        fields = cls.measure_fields(max_devices=max_devices,
+                                    matmul_dim=matmul_dim,
+                                    ring_bytes=ring_bytes, repeats=repeats)
         fields.update(overrides)
+        # a cluster-description override may shrink n_chips below the
+        # measured local node: never claim a node larger than the cluster
+        if fields.get("node_size") and fields.get("n_chips"):
+            fields["node_size"] = min(int(fields["node_size"]),
+                                      int(fields["n_chips"]))
         return cls(**fields)
 
 

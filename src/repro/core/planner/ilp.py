@@ -253,7 +253,7 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
             f"unknown planner objective {objective!r}: expected "
             f"'throughput' (training iteration time, the default) or "
             f"'latency' (serving per-token decode latency)")
-    t0 = time.time()
+    t0 = time.perf_counter()
     from repro.core.plan import validate_schedule
     if schedules is None:
         scheds: Tuple[str, ...] = (hp.schedule,)
@@ -439,7 +439,7 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                bounds=(lb, ub),
                options={"time_limit": time_limit, "presolve": True,
                         "mip_rel_gap": 1e-9})
-    solve_ms = (time.time() - t0) * 1e3
+    solve_ms = (time.perf_counter() - t0) * 1e3
 
     if res.x is None:
         # infeasible (e.g. memory cap too tight at low degrees): fall back
@@ -635,7 +635,7 @@ def plan_joint(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     Ties break toward lower pp, then fewer microbatches.
     """
     import dataclasses as _dc
-    t0 = time.time()
+    t0 = time.perf_counter()
     cap = mem_cap if mem_cap is not None else hw.hbm_cap
     v = max(virtual_stages, 1)
     pps = list(pp_options) if pp_options is not None \
@@ -720,7 +720,7 @@ def plan_joint(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     tmp_only = [c for c in candidates if c.pp == 1]
     best.tmp_only_s = min(c.predicted_s for c in tmp_only) if tmp_only \
         else float("inf")
-    best.solve_ms = (time.time() - t0) * 1e3
+    best.solve_ms = (time.perf_counter() - t0) * 1e3
     return best
 
 
@@ -774,7 +774,7 @@ def plan_serving(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     box the 1D ring stays optimal.  Ties break toward fewer stages, then
     the 1D layout, then the thinnest y split.
     """
-    t0 = time.time()
+    t0 = time.perf_counter()
     cap = mem_cap if mem_cap is not None else hw.hbm_cap
     v = max(virtual_stages, 1)
     candidates = []
@@ -805,7 +805,7 @@ def plan_serving(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
         predicted_s=est["step_s"], tok_per_s=est["tok_per_s"],
         mem_bytes=est["mem_bytes"], fits=fits,
         tmp_only_s=min(c[0] for c in tmp_only) if tmp_only else float("inf"),
-        solve_ms=(time.time() - t0) * 1e3,
+        solve_ms=(time.perf_counter() - t0) * 1e3,
         status="fits" if fits else "over-memory",
         plan=_as_plan(hp, [deg] * cfg.num_layers,
                       [hp.schedule] * cfg.num_layers, pp=pp,

@@ -1,0 +1,173 @@
+"""Block-size autotuning for the fused collective-matmul kernel family.
+
+The tile matmul at the heart of every ring kernel
+(:func:`repro.kernels.collective_matmul.pallas_tile_matmul`) takes
+``block_m/n/k`` — MXU utilisation and VMEM pressure both hinge on them,
+and the best choice is shape- and platform-dependent.  This module owns
+that choice:
+
+* :func:`tuned_blocks` returns the ``(bm, bn, bk)`` to use for an
+  ``[m, k] @ [k, n]`` matmul, cached per ``(shape, platform)`` in memory
+  and on disk (``REPRO_TUNE_CACHE`` env var, default
+  ``~/.cache/repro-oases/pallas_tiles.json``) so the search runs once per
+  host, not once per process.
+* On TPU the candidates are timed for real: each ``pallas_call`` variant
+  runs a BLOCKED warm-up (compile + first dispatch synced — an un-synced
+  warm-up queues ahead of the first timed repeat under async dispatch and
+  corrupts the measurement) and then a min-of-repeats
+  ``time.perf_counter()`` loop.
+* Off TPU the kernels run in interpret mode, where wall clock measures
+  the emulator rather than the tiling — candidates are NOT timed; the
+  clipped heuristic default is returned (and cached, so tests can assert
+  the cache path without platform-dependent timing).
+
+Explicit ``block_*`` arguments to the kernels always bypass the tuner.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+Blocks = Tuple[int, int, int]
+
+# heuristic fallback (also the non-TPU answer): MXU-aligned tiles small
+# enough that x/w/acc fit VMEM at every candidate shape
+DEFAULT_BLOCKS: Blocks = (128, 128, 512)
+
+# candidate grid, clipped to the problem dims; kept deliberately small —
+# the cache makes the search once-per-host, but a cold host still pays it
+CAND_M = (128, 256, 512)
+CAND_N = (128, 256, 512)
+CAND_K = (256, 512, 1024)
+
+# per-core VMEM is ~16 MB; leave headroom for double-buffered input
+# tiles (the pipeline keeps 2 of each in flight) and the fp32 accumulator
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+_MEM_CACHE: Dict[str, Blocks] = {}
+
+
+def cache_path() -> str:
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro-oases",
+                        "pallas_tiles.json")
+
+
+def _cache_key(m: int, k: int, n: int, dtype, platform: str) -> str:
+    return f"{platform}|m{m}k{k}n{n}|{jax.numpy.dtype(dtype).name}"
+
+
+def _load_disk() -> Dict[str, List[int]]:
+    try:
+        with open(cache_path()) as f:
+            d = json.load(f)
+        return d if isinstance(d, dict) else {}
+    except (OSError, ValueError):
+        return {}
+
+
+def _store_disk(entries: Dict[str, List[int]]) -> None:
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(entries, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass                      # cache is an optimisation, never fatal
+
+
+def _clip(blocks: Blocks, m: int, k: int, n: int) -> Blocks:
+    bm, bn, bk = blocks
+    return (min(bm, m), min(bn, n), min(bk, k))
+
+
+def _vmem_bytes(bm: int, bn: int, bk: int, itemsize: int) -> int:
+    # double-buffered fp32 input tiles + fp32 accumulator + output tile
+    return 2 * (bm * bk + bk * bn) * 4 + bm * bn * 4 + bm * bn * itemsize
+
+
+def candidates(m: int, k: int, n: int, itemsize: int = 4) -> List[Blocks]:
+    """The clipped, VMEM-feasible, deduplicated candidate tile sets."""
+    seen, out = set(), []
+    for bm in CAND_M:
+        for bn in CAND_N:
+            for bk in CAND_K:
+                c = _clip((bm, bn, bk), m, k, n)
+                if c in seen:
+                    continue
+                seen.add(c)
+                if _vmem_bytes(*c, itemsize=itemsize) <= VMEM_BUDGET_BYTES:
+                    out.append(c)
+    return out or [_clip(DEFAULT_BLOCKS, m, k, n)]
+
+
+def _time_candidate(m: int, k: int, n: int, dtype, blocks: Blocks,
+                    repeats: int) -> float:
+    from repro.kernels.collective_matmul import pallas_tile_matmul
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, k), jnp.float32).astype(dtype)
+    w = jax.random.normal(key, (k, n), jnp.float32).astype(dtype)
+    bm, bn, bk = blocks
+
+    def run():
+        return pallas_tile_matmul(x, w, block_m=bm, block_n=bn,
+                                  block_k=bk)
+
+    # block the warm-up: compile + first dispatch must finish before the
+    # timed loop (async dispatch would otherwise queue it ahead of the
+    # first repeat)
+    jax.block_until_ready(run())
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def tuned_blocks(m: int, k: int, n: int, dtype="float32",
+                 platform: Optional[str] = None,
+                 repeats: int = 3) -> Blocks:
+    """The ``(block_m, block_n, block_k)`` to use for ``[m,k] @ [k,n]``.
+
+    Cached per ``(shape, dtype, platform)``; TPU answers are measured,
+    non-TPU answers are the clipped heuristic (interpret-mode timing
+    would measure the emulator, not the tiling).
+    """
+    platform = platform or jax.default_backend()
+    key = _cache_key(m, k, n, dtype, platform)
+    hit = _MEM_CACHE.get(key)
+    if hit is not None:
+        return hit
+    disk = _load_disk()
+    raw = disk.get(key)
+    if isinstance(raw, list) and len(raw) == 3:
+        blocks = _clip(tuple(int(v) for v in raw), m, k, n)
+        _MEM_CACHE[key] = blocks
+        return blocks
+    if platform != "tpu":
+        blocks = _clip(DEFAULT_BLOCKS, m, k, n)
+    else:
+        itemsize = jax.numpy.dtype(dtype).itemsize
+        timed = []
+        for c in candidates(m, k, n, itemsize=itemsize):
+            try:
+                timed.append((_time_candidate(m, k, n, dtype, c, repeats),
+                              c))
+            except Exception:     # a candidate the compiler rejects
+                continue
+        blocks = (min(timed)[1] if timed
+                  else _clip(DEFAULT_BLOCKS, m, k, n))
+    _MEM_CACHE[key] = blocks
+    disk[key] = list(blocks)
+    _store_disk(disk)
+    return blocks

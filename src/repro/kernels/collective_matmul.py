@@ -245,16 +245,28 @@ def _mm_tile_kernel(x_ref, w_ref, o_ref, acc_scr, *, nk: int):
         o_ref[...] = acc_scr[...].astype(o_ref.dtype)
 
 
-def pallas_tile_matmul(x, w, *, block_m: int = 128, block_n: int = 128,
-                       block_k: int = 512, interpret: Optional[bool] = None):
+def pallas_tile_matmul(x, w, *, block_m: Optional[int] = None,
+                       block_n: Optional[int] = None,
+                       block_k: Optional[int] = None,
+                       interpret: Optional[bool] = None):
     """2-D tiled matmul ``[m, k] @ [k, n]`` — the per-ring-step compute of
     the collective kernels, exposed standalone so CPU tests can validate
-    the tiling/accumulation in interpret mode."""
+    the tiling/accumulation in interpret mode.
+
+    Block sizes left as ``None`` resolve through the autotuner
+    (:func:`repro.kernels.autotune.tuned_blocks`, cached per shape and
+    platform); explicit arguments always win."""
     interpret = (jax.default_backend() != "tpu") if interpret is None \
         else interpret
     m, k = x.shape
     k2, nn = w.shape
     assert k == k2, (x.shape, w.shape)
+    if block_m is None or block_n is None or block_k is None:
+        from repro.kernels.autotune import tuned_blocks
+        tm, tn, tk = tuned_blocks(m, k, nn, dtype=x.dtype)
+        block_m = tm if block_m is None else block_m
+        block_n = tn if block_n is None else block_n
+        block_k = tk if block_k is None else block_k
     bm, bn, bk = min(block_m, m), min(block_n, nn), min(block_k, k)
     pad_m, pad_n, pad_k = (-m) % bm, (-nn) % bn, (-k) % bk
     if pad_m or pad_k:

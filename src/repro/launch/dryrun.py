@@ -68,7 +68,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                          "sub-quadratic attention (DESIGN.md)")
         return rec
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     hp = TrainHParams(schedule=schedule, fine_remat=fine_remat,
                       seq_parallel=seq_parallel, split=split,
                       microbatch=microbatch, tmp_layout=tmp_layout,
@@ -140,9 +140,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         ((1,) if shape.kind == "decode" else ())
     with mesh:
         lowered = jax.jit(fn, donate_argnums=donate).lower(*inputs)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
         mem = compiled.memory_analysis()
         print(mem)                              # proves it fits
         ca = compiled.cost_analysis()
@@ -215,12 +215,12 @@ def _sweep(args):
         if not args.fine_remat:
             cmd.append("--no-fine-remat")
         print(f"[run] {a} x {s} x {m} ...", flush=True)
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             p = subprocess.run(cmd, capture_output=True, text=True,
                                timeout=args.timeout)
             tail = (p.stdout + p.stderr).strip().splitlines()[-3:]
-            print(f"   -> rc={p.returncode} {time.time()-t0:.0f}s "
+            print(f"   -> rc={p.returncode} {time.perf_counter()-t0:.0f}s "
                   + (" | ".join(tail) if p.returncode else ""), flush=True)
             if p.returncode:
                 with open(args.out, "a") as f:
@@ -262,10 +262,14 @@ def main():
                          "axis to the mesh)")
     ap.add_argument("--virtual-stages", type=int, default=1,
                     help="interleaved-1F1B virtual stages per device")
-    ap.add_argument("--calibrate", action="store_true",
-                    help="run on-device micro-benches and print the "
-                         "calibrated planner HWConfig "
-                         "(HWConfig.from_measurements)")
+    ap.add_argument("--calibrate", action="store_true", default=True,
+                    help="profile-guided planner inputs (the DEFAULT: "
+                         "HWConfig.from_measurements via the per-host "
+                         "calibration cache)")
+    ap.add_argument("--no-calibrate", dest="calibrate",
+                    action="store_false",
+                    help="skip on-device calibration; plan with the stock "
+                         "chip numbers")
     ap.add_argument("--plan", default="", metavar="plan.json",
                     help="dry-run an executable ParallelPlan file "
                          "(overrides the legacy parallelism flags)")
@@ -288,12 +292,14 @@ def main():
         return
 
     hw_cal = None
-    if args.calibrate:
-        import dataclasses as _dc
-        from repro.core.planner.costmodel import HWConfig
-        hw_cal = HWConfig.from_measurements()
+    if args.calibrate and not args.plan_only:
+        # default-on profile-guided planning (cached per host;
+        # --no-calibrate restores the stock chip numbers).  --plan-only
+        # resolves meshes without planning, so it skips the profile.
+        from repro.core.planner.calibrate import calibrated_hw, describe
+        hw_cal = calibrated_hw()
         print("calibrated HWConfig (profile-guided planner inputs):")
-        print(json.dumps(_dc.asdict(hw_cal), indent=1))
+        print(json.dumps(describe(hw_cal), indent=1))
 
     degrees = parse_degrees(args.degrees) if args.degrees else None
     meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])

@@ -26,6 +26,14 @@ def main():
                     action="store_false")
     ap.add_argument("--planner", action="store_true",
                     help="per-layer TMP degrees from the ILP (factored mesh)")
+    ap.add_argument("--calibrate", action="store_true", default=True,
+                    help="profile-guided --planner inputs (the DEFAULT: "
+                         "HWConfig.from_measurements via the per-host "
+                         "calibration cache)")
+    ap.add_argument("--no-calibrate", dest="calibrate",
+                    action="store_false",
+                    help="plan with the stock chip numbers instead of "
+                         "on-device calibration")
     ap.add_argument("--tmp-layout", default="auto",
                     choices=["auto", "1d", "2d"],
                     help="partition layout: 1d (classic), 2d (hybrid "
@@ -128,10 +136,20 @@ def main():
     if args.planner and not args.plan:
         from repro.configs.base import ShapeConfig
         from repro.core.planner import plan as plan_search
+        from repro.core.planner.costmodel import V5E
         info = mesh_info(mesh)
+        if args.calibrate:
+            # profile-guided by default: the cost model's chip terms come
+            # from measurements (cached per host), the cluster shape from
+            # the resolved mesh; --no-calibrate keeps the spec-sheet V5E
+            from repro.core.planner.calibrate import calibrated_hw, describe
+            hw = calibrated_hw(n_chips=info.mesh.size)
+            print(f"planner: calibrated hw {describe(hw)}")
+        else:
+            hw = V5E
         # plan for the workload actually being trained, not a fixed table
         shape = ShapeConfig("cli", args.seq, args.batch, "train")
-        pr = plan_search(cfg, shape, hp,
+        pr = plan_search(cfg, shape, hp, hw,
                          layout=args.tmp_layout,
                          options=tuple(n for n in (2, 4, 8, 16)
                                        if n <= info.tp) or (info.tp,),

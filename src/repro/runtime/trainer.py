@@ -371,11 +371,14 @@ class Trainer:
             for step, batch in data:
                 if step >= total_steps:
                     break
-                t0 = time.time()
+                # perf_counter: the step timer feeds the straggler
+                # detector — time.time() is non-monotonic and an NTP slew
+                # mid-step reads as a phantom straggler
+                t0 = time.perf_counter()
                 self.injector.check(step)
                 params, opt, metrics = self.step_fn(params, opt, batch)
                 loss = float(metrics["loss"])
-                dt = time.time() - t0
+                dt = time.perf_counter() - t0
                 if self.straggler.observe(step, dt):
                     self.log(f"[straggler] step {step} took {dt:.2f}s "
                              f"(ewma {self.straggler.mean:.2f}s)")

@@ -194,11 +194,11 @@ class ServingEngine:
                 self.active[s] = None
 
     def run_until_drained(self, max_steps: int = 10_000) -> Dict:
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(max_steps):
             if self.queue.empty() and all(a is None for a in self.active):
                 break
             self.step()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         return {**self.stats, "wall_s": dt,
                 "tok_per_s": self.stats["decoded_tokens"] / max(dt, 1e-9)}
