@@ -114,13 +114,21 @@ def run_fig6():
     return out
 
 
-def run_measured(points: int = 0, iters: int = 3):
+def run_measured(points: int = 0, iters: int = 3, telemetry: str = ""):
     """The measured tier: wall-clock AND calibrated-model tokens/s per
     (config x schedule) point.  ``points`` > 0 truncates the grid (the CI
-    smoke runs exactly one point end-to-end)."""
+    smoke runs exactly one point end-to-end).  ``telemetry``: directory
+    for a structured JSONL trace of the run — per-point timings plus the
+    overlap-efficiency probe's per-layer-group exposed-communication
+    events against the same calibrated model the ranking gate uses
+    (uploaded as a CI artifact next to ``BENCH_<tag>.json``)."""
     from repro.core.planner import estimate_iteration
     from repro.core.planner.costmodel import HWConfig
 
+    rec = None
+    if telemetry:
+        from repro import obs
+        rec = obs.configure(telemetry)
     # calibrate FIRST (its ring mesh must not inherit a set_mesh scope)
     hw_fields = HWConfig.measure_fields(max_devices=8)
     hw = HWConfig(**hw_fields)
@@ -135,8 +143,8 @@ def run_measured(points: int = 0, iters: int = 3):
         key = f"{cfg.name}|s{seq}|b{batch}|tmp{tmp}|{sched}"
         t = measure(cfg, seq, batch, tmp, sched, fine, iters=iters)
         hp = TrainHParams(schedule=sched, fine_remat=fine, microbatch=1)
-        est = estimate_iteration(cfg, ShapeConfig("bench", seq, batch,
-                                                  "train"),
+        shape = ShapeConfig("bench", seq, batch, "train")
+        est = estimate_iteration(cfg, shape,
                                  hp, [tmp] * cfg.num_layers, hw,
                                  options=(2, 4, 8, 16))
         tokens = batch * seq
@@ -147,8 +155,23 @@ def run_measured(points: int = 0, iters: int = 3):
             "modeled_s": est["iter_s"],
             "modeled_tok_s": est["tokens_per_s"],
         })
+        if rec is not None:
+            from repro import obs
+            rec.observe("bench.measured_s", t, key=key)
+            rec.event("bench.point", key=key,
+                      measured_ms=round(t * 1e3, 2),
+                      modeled_ms=round(est["iter_s"] * 1e3, 2))
+            try:
+                obs.OverlapProbe.for_run(
+                    cfg, shape, hp, hw,
+                    [tmp] * cfg.num_layers).report(t, rec)
+            except Exception as e:
+                rec.event("overlap.error", key=key,
+                          msg=f"[overlap] bench probe failed: {e!r}")
         print(f"# {key}: measured {t*1e3:.0f} ms / modeled "
               f"{est['iter_s']*1e3:.0f} ms", file=sys.stderr, flush=True)
+    if rec is not None:
+        rec.close()
     return {"hw": hw_fields, "iters": iters, "points": rows}
 
 
@@ -161,10 +184,14 @@ def main():
     ap.add_argument("--iters", type=int, default=3,
                     help="timed iterations per point (after one blocked "
                          "warm-up step)")
+    ap.add_argument("--telemetry", default="",
+                    help="measured tier: JSONL telemetry directory "
+                         "(per-point timings + overlap-probe events)")
     args = ap.parse_args()
     if args.tier == "measured":
         print(json.dumps(run_measured(points=args.points,
-                                      iters=args.iters)))
+                                      iters=args.iters,
+                                      telemetry=args.telemetry)))
     else:
         print(json.dumps(run_fig6()))
 

@@ -30,7 +30,7 @@ def _host_meta() -> Dict[str, object]:
 
 
 def run_subprocess(points: int = 0, iters: int = 3,
-                   timeout: float = 3600.0) -> Dict:
+                   timeout: float = 3600.0, telemetry: str = "") -> Dict:
     """Spawn ``benchmarks/_measure.py --tier measured`` (it pins its own
     XLA_FLAGS device count before importing jax) and parse its JSON."""
     script = os.path.join(os.path.dirname(__file__), "_measure.py")
@@ -41,6 +41,8 @@ def run_subprocess(points: int = 0, iters: int = 3,
            "--iters", str(iters)]
     if points:
         cmd += ["--points", str(points)]
+    if telemetry:
+        cmd += ["--telemetry", telemetry]
     p = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
                        env=env)
     if p.returncode:
@@ -73,6 +75,8 @@ def build_section(raw: Dict, host: Optional[Dict] = None) -> Dict:
     }
 
 
-def run(points: int = 0, iters: int = 3) -> Dict:
-    """Measured tier end-to-end: subprocess grid -> BENCH section."""
-    return build_section(run_subprocess(points=points, iters=iters))
+def run(points: int = 0, iters: int = 3, telemetry: str = "") -> Dict:
+    """Measured tier end-to-end: subprocess grid -> BENCH section.
+    ``telemetry``: JSONL trace directory for the subprocess (CI artifact)."""
+    return build_section(run_subprocess(points=points, iters=iters,
+                                        telemetry=telemetry))

@@ -38,6 +38,10 @@ def main() -> None:
                          "points (0 = full grid; smokes use 1)")
     ap.add_argument("--measured-iters", type=int, default=3,
                     help="timed iterations per measured-tier point")
+    ap.add_argument("--telemetry", default="", metavar="DIR",
+                    help="measured tier: write a structured JSONL trace "
+                         "(per-point timings + overlap-probe events) "
+                         "under DIR — CI uploads it next to BENCH_<tag>")
     args = ap.parse_args()
     root = os.path.join(os.path.dirname(__file__), "..")
     sys.path.insert(0, os.path.abspath(root))       # the benchmarks package
@@ -115,7 +119,8 @@ def main() -> None:
         # own homework again.
         from benchmarks import measured as measured_mod
         measured = measured_mod.run(points=args.measured_points,
-                                    iters=args.measured_iters)
+                                    iters=args.measured_iters,
+                                    telemetry=args.telemetry)
         report["measured"] = measured
         for p in measured["points"]:
             print(f"measured/{p['key'].replace(',', ' ')},"

@@ -29,6 +29,21 @@ from repro.configs.base import ArchConfig, ShapeConfig, TrainHParams
 from repro.core.planner import costmodel as cm
 
 
+def _telemetry_plan(entry: str, pr):
+    """Record a finished solve through the process-global telemetry
+    recorder (repro.obs): solve time histogram + a planner.plan event
+    carrying the chosen plan and its predicted iteration time.  A no-op
+    unless a recorder is configured (launchers' --telemetry)."""
+    from repro import obs
+    rec = obs.get_recorder()
+    rec.observe("planner.solve_ms", pr.solve_ms, entry=entry)
+    rec.event("planner.plan", entry=entry,
+              predicted_ms=round(pr.predicted_s * 1e3, 3),
+              solve_ms=round(pr.solve_ms, 1), status=str(pr.status),
+              msg=f"[planner] {entry}: {pr.summary()}")
+    return pr
+
+
 def _fmt_degree(d) -> str:
     dx, dy = cm._dxy(d)
     return f"{dx}x{dy}" if dy > 1 else str(dx)
@@ -451,11 +466,12 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
         est = cm.estimate_iteration(cfg, shape, hp, degrees, hw, options,
                                     schedules=lsched)
         msh, max_ = _plan_mesh_sig(hw, degrees)
-        return PlanResult(degrees, est["iter_s"], solve_ms,
-                          f"fallback:{res.status}", _runs(degrees),
-                          schedules=lsched,
-                          plan=_as_plan(hp, degrees, lsched,
-                                        mesh_shape=msh, mesh_axes=max_))
+        return _telemetry_plan("plan", PlanResult(
+            degrees, est["iter_s"], solve_ms,
+            f"fallback:{res.status}", _runs(degrees),
+            schedules=lsched,
+            plan=_as_plan(hp, degrees, lsched,
+                          mesh_shape=msh, mesh_axes=max_)))
 
     s = res.x[:nS].reshape(L, P)
     chosen = [pairs[int(np.argmax(s[i]))] for i in range(L)]
@@ -464,10 +480,11 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     lsched, est = _smooth_schedules(cfg, shape, hp, degrees, lsched, hw,
                                     options, scheds)
     msh, max_ = _plan_mesh_sig(hw, degrees)
-    return PlanResult(degrees, est["iter_s"], solve_ms,
-                      str(res.status), _runs(degrees), schedules=lsched,
-                      plan=_as_plan(hp, degrees, lsched,
-                                    mesh_shape=msh, mesh_axes=max_))
+    return _telemetry_plan("plan", PlanResult(
+        degrees, est["iter_s"], solve_ms,
+        str(res.status), _runs(degrees), schedules=lsched,
+        plan=_as_plan(hp, degrees, lsched,
+                      mesh_shape=msh, mesh_axes=max_)))
 
 
 def replan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
@@ -506,7 +523,7 @@ def replan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     pr = plan(cfg, shape, hp, hw, options=opts, mem_cap=mem_cap,
               time_limit=time_limit, layout=layout, schedules=schedules)
     if not uniform:
-        return pr
+        return _telemetry_plan("replan", pr)
     degrees, scheds = list(pr.degrees), list(pr.schedules)
     if len({(cm._dkey(d), s) for d, s in zip(degrees, scheds)}) > 1:
         # collapse like plan_joint: the max-degree strategy is the one
@@ -527,7 +544,7 @@ def replan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     pr.plan = ParallelPlan.from_hparams(
         hp, len(pr.degrees), schedules=list(pr.schedules),
         mesh_shape=msh, mesh_axes=max_)
-    return pr
+    return _telemetry_plan("replan", pr)
 
 
 # --------------------------------------------------------------------------
@@ -721,7 +738,7 @@ def plan_joint(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     best.tmp_only_s = min(c.predicted_s for c in tmp_only) if tmp_only \
         else float("inf")
     best.solve_ms = (time.perf_counter() - t0) * 1e3
-    return best
+    return _telemetry_plan("plan_joint", best)
 
 
 # --------------------------------------------------------------------------
@@ -800,7 +817,7 @@ def plan_serving(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     best = min(fitting, key=lambda c: c[:4])
     tmp_only = [c for c in candidates if c[1] == 1]
     _, pp, _, _, deg, est, fits = best
-    return ServingPlanResult(
+    return _telemetry_plan("plan_serving", ServingPlanResult(
         degree=deg, pp=pp, n_micro=est["n_micro"],
         predicted_s=est["step_s"], tok_per_s=est["tok_per_s"],
         mem_bytes=est["mem_bytes"], fits=fits,
@@ -812,4 +829,4 @@ def plan_serving(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                       virtual_stages=v if pp > 1 else 1,
                       decode_micro=est["n_micro"] if pp > 1 else 0,
                       **dict(zip(("mesh_shape", "mesh_axes"),
-                                 _mesh_sig(hw, pp, deg)))))
+                                 _mesh_sig(hw, pp, deg))))))

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core import tmp as tmpc
 from repro.core.axes import MeshInfo
+from repro.obs.tracing import phase_scope
 
 SCHEDULES = ("megatron", "wang", "merak", "oases", "fused")
 
@@ -132,19 +133,20 @@ class TmpCtx:
         shape-driven so per-weight divisibility fallbacks (replicated specs)
         compose: a full-row weight always takes the plain-dot path.
         """
-        if self.y_axes and w.shape[0] != x.shape[-1]:
-            from jax.ad_checkpoint import checkpoint_name
-            xy = tmpc.batch_split(x, self.y_axes, x.ndim - 1)
-            if self.schedule == "fused" and xy.ndim >= 2:
-                from repro.kernels import collective_matmul as cm
-                y = cm.fused_matmul_allreduce(
-                    xy, w, self.y_axes,
-                    scatter_dim=self._ring_dim(xy, min(1, xy.ndim - 2),
-                                               self.y_axes),
-                    use_pallas=self.use_pallas)
-                return checkpoint_name(y, tmpc.COLLECTIVE_NAME)
-            return tmpc.tmp_reduce(jnp.dot(xy, w), self.y_axes)
-        return jnp.dot(x, w)
+        with phase_scope(f"tmp.{self.schedule}.proj"):
+            if self.y_axes and w.shape[0] != x.shape[-1]:
+                from jax.ad_checkpoint import checkpoint_name
+                xy = tmpc.batch_split(x, self.y_axes, x.ndim - 1)
+                if self.schedule == "fused" and xy.ndim >= 2:
+                    from repro.kernels import collective_matmul as cm
+                    y = cm.fused_matmul_allreduce(
+                        xy, w, self.y_axes,
+                        scatter_dim=self._ring_dim(xy, min(1, xy.ndim - 2),
+                                                   self.y_axes),
+                        use_pallas=self.use_pallas)
+                    return checkpoint_name(y, tmpc.COLLECTIVE_NAME)
+                return tmpc.tmp_reduce(jnp.dot(xy, w), self.y_axes)
+            return jnp.dot(x, w)
 
     def contract_reduce(self, t, partial: bool = True):
         """Finish a y-contracted product computed outside :meth:`proj`
@@ -200,44 +202,46 @@ class TmpCtx:
         shards them.  Both collective outputs are checkpoint-named so the
         fine-remat recompute stays collective-free (§3.2).
         """
-        if self.y_axes:
-            from jax.ad_checkpoint import checkpoint_name
-            if self.schedule == "fused" and self.x_axes and x.ndim >= 2:
+        with phase_scope(f"tmp.{self.schedule}.row_matmul"):
+            if self.y_axes:
+                from jax.ad_checkpoint import checkpoint_name
+                if self.schedule == "fused" and self.x_axes and x.ndim >= 2:
+                    from repro.kernels import collective_matmul as cm
+                    y = cm.fused_matmul_allreduce(
+                        x, w, self.x_axes,
+                        scatter_dim=self._ring_dim(
+                            x, min(seq_dim, x.ndim - 2), self.x_axes),
+                        use_pallas=self.use_pallas)
+                    y = checkpoint_name(y, tmpc.COLLECTIVE_NAME)
+                else:
+                    y = tmpc.tmp_reduce(jnp.dot(x, w), self.x_axes)
+                if full_out is not None and w.shape[-1] != full_out:
+                    y = checkpoint_name(
+                        tmpc.sp_all_gather(y, self.y_axes, y.ndim - 1),
+                        tmpc.COLLECTIVE_NAME)
+                return y
+            if self.schedule == "fused" and self.tp_axes and x.ndim >= 2:
+                from jax.ad_checkpoint import checkpoint_name
                 from repro.kernels import collective_matmul as cm
-                y = cm.fused_matmul_allreduce(
-                    x, w, self.x_axes,
-                    scatter_dim=self._ring_dim(x, min(seq_dim, x.ndim - 2),
-                                               self.x_axes),
-                    use_pallas=self.use_pallas)
-                y = checkpoint_name(y, tmpc.COLLECTIVE_NAME)
-            else:
-                y = tmpc.tmp_reduce(jnp.dot(x, w), self.x_axes)
-            if full_out is not None and w.shape[-1] != full_out:
-                y = checkpoint_name(
-                    tmpc.sp_all_gather(y, self.y_axes, y.ndim - 1),
-                    tmpc.COLLECTIVE_NAME)
-            return y
-        if self.schedule == "fused" and self.tp_axes and x.ndim >= 2:
-            from jax.ad_checkpoint import checkpoint_name
-            from repro.kernels import collective_matmul as cm
-            if self.seq_parallel:
-                y = cm.fused_matmul_reducescatter(
-                    x, w, self.tp_axes, seq_dim, self.use_pallas)
-            else:
-                y = cm.fused_matmul_allreduce(
-                    x, w, self.tp_axes,
-                    scatter_dim=self._ring_dim(x, min(seq_dim, x.ndim - 2),
-                                               self.tp_axes),
-                    use_pallas=self.use_pallas)
-            return checkpoint_name(y, tmpc.COLLECTIVE_NAME)
-        if self.schedule == "wang" and not self.seq_parallel and x.ndim >= 2:
-            n = self.wang_chunks
-            dim = x.ndim - 2
-            if x.shape[dim] % n == 0 and x.shape[dim] >= n:
-                chunks = jnp.split(x, n, axis=dim)
-                outs = [self.reduce(jnp.dot(c, w)) for c in chunks]
-                return jnp.concatenate(outs, axis=dim)
-        return self.reduce(jnp.dot(x, w))
+                if self.seq_parallel:
+                    y = cm.fused_matmul_reducescatter(
+                        x, w, self.tp_axes, seq_dim, self.use_pallas)
+                else:
+                    y = cm.fused_matmul_allreduce(
+                        x, w, self.tp_axes,
+                        scatter_dim=self._ring_dim(
+                            x, min(seq_dim, x.ndim - 2), self.tp_axes),
+                        use_pallas=self.use_pallas)
+                return checkpoint_name(y, tmpc.COLLECTIVE_NAME)
+            if self.schedule == "wang" and not self.seq_parallel \
+                    and x.ndim >= 2:
+                n = self.wang_chunks
+                dim = x.ndim - 2
+                if x.shape[dim] % n == 0 and x.shape[dim] >= n:
+                    chunks = jnp.split(x, n, axis=dim)
+                    outs = [self.reduce(jnp.dot(c, w)) for c in chunks]
+                    return jnp.concatenate(outs, axis=dim)
+            return self.reduce(jnp.dot(x, w))
 
     def gather_matmul(self, x, ws, seq_dim: int = 1):
         """Column-parallel block entry: project ``x`` with every weight in
@@ -249,14 +253,16 @@ class TmpCtx:
         contraction runs through :meth:`proj` (slice + per-axis ring).
         """
         ws = tuple(ws)
-        if self.y_axes:
-            return tuple(self.proj(x, w) for w in ws)
-        if self.schedule == "fused" and self.seq_parallel and self.tp_axes:
-            from repro.kernels import collective_matmul as cm
-            return cm.fused_allgather_matmul(x, ws, self.tp_axes, seq_dim,
-                                             self.use_pallas)
-        h = self.gather_seq(x, seq_dim)
-        return tuple(jnp.dot(h, w) for w in ws)
+        with phase_scope(f"tmp.{self.schedule}.gather_matmul"):
+            if self.y_axes:
+                return tuple(self.proj(x, w) for w in ws)
+            if self.schedule == "fused" and self.seq_parallel \
+                    and self.tp_axes:
+                from repro.kernels import collective_matmul as cm
+                return cm.fused_allgather_matmul(x, ws, self.tp_axes,
+                                                 seq_dim, self.use_pallas)
+            h = self.gather_seq(x, seq_dim)
+            return tuple(jnp.dot(h, w) for w in ws)
 
 
 def split_tree(tree, split: int):
@@ -301,8 +307,11 @@ def apply_layer(parts: Sequence[Callable], p, xs: List, auxs: List,
     aux_total = jnp.float32(0.0)
     for part in parts:
         deltas = []
-        for x, a in zip(xs, auxs):
-            d, aux = part(p, x, a)
+        for j, (x, a) in enumerate(zip(xs, auxs)):
+            # sub-batch scope: Alg. 1's (compute_j, collective_j) chunks
+            # are attributable per sub-batch in XLA profiles
+            with phase_scope(f"tmp.{schedule}.sub{j}"):
+                d, aux = part(p, x, a)
             deltas.append(d)
             aux_total = aux_total + aux
         xs = [x + d for x, d in zip(xs, deltas)]

@@ -63,7 +63,10 @@ def reduce_from_tmp(x, axes: Axes):
 
 def tmp_reduce(x, axes: Axes, name: str = COLLECTIVE_NAME):
     """AllReduce + name the output for the fine-grained remat policy."""
-    return checkpoint_name(reduce_from_tmp(x, axes), name)
+    # named_scope: trace-time only — tags the psum in HLO metadata so the
+    # reduce phase is attributable in XLA profiles (repro.obs.tracing)
+    with jax.named_scope("tmp.reduce"):
+        return checkpoint_name(reduce_from_tmp(x, axes), name)
 
 
 # --------------------------------------------------------------------------
@@ -71,7 +74,8 @@ def tmp_reduce(x, axes: Axes, name: str = COLLECTIVE_NAME):
 # --------------------------------------------------------------------------
 @partial(jax.custom_vjp, nondiff_argnums=(1, 2))
 def sp_all_gather(x, axes: Axes, dim: int):
-    return lax.all_gather(x, axes, axis=dim, tiled=True) if axes else x
+    with jax.named_scope("tmp.sp_all_gather"):
+        return lax.all_gather(x, axes, axis=dim, tiled=True) if axes else x
 
 
 def _spag_fwd(x, axes, dim):
@@ -88,8 +92,9 @@ sp_all_gather.defvjp(_spag_fwd, _spag_bwd)
 
 @partial(jax.custom_vjp, nondiff_argnums=(1, 2))
 def sp_reduce_scatter(x, axes: Axes, dim: int):
-    return (lax.psum_scatter(x, axes, scatter_dimension=dim, tiled=True)
-            if axes else x)
+    with jax.named_scope("tmp.sp_reduce_scatter"):
+        return (lax.psum_scatter(x, axes, scatter_dimension=dim, tiled=True)
+                if axes else x)
 
 
 def _sprs_fwd(x, axes, dim):

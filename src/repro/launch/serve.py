@@ -70,7 +70,27 @@ def main():
                          "(plan(objective='latency')) for this arch on a "
                          "fixture HWConfig before serving")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", default="", metavar="DIR",
+                    help="write structured telemetry (JSONL) under DIR: "
+                         "TTFT, per-token decode latency, queue depth, "
+                         "slot occupancy; render with `python -m "
+                         "repro.obs.report DIR`")
+    ap.add_argument("--telemetry-flush", type=int, default=64,
+                    metavar="N",
+                    help="JSONL records buffered between file flushes "
+                         "(must be positive; 1 = write-through)")
     args = ap.parse_args()
+
+    telemetry = None
+    if args.telemetry:
+        from repro import obs
+        if args.telemetry_flush <= 0:
+            raise SystemExit(
+                f"--telemetry-flush must be a positive number of records, "
+                f"got {args.telemetry_flush} (use 1 for write-through)")
+        telemetry = obs.configure(args.telemetry,
+                                  flush_every=args.telemetry_flush,
+                                  console=print)
 
     from repro.configs.base import TrainHParams
     from repro.configs.registry import get_config
@@ -99,7 +119,7 @@ def main():
                                      decode_micro=args.decode_micro)
     eng = ServingEngine(cfg, mesh, slots=args.slots, max_seq=args.max_seq,
                         hp=hp, prefill_len=args.prefill_len or None,
-                        plan=pplan)
+                        plan=pplan, telemetry=telemetry)
     eng.load(seed=args.seed)
 
     rng = np.random.default_rng(args.seed)
@@ -114,6 +134,8 @@ def main():
         reqs.append(r)
         eng.submit(r)
     stats = eng.run_until_drained()
+    if telemetry is not None:
+        telemetry.close()
     print(json.dumps({**stats,
                       "mesh": dict(mesh.shape),
                       "schedule": hp.schedule,

@@ -97,7 +97,29 @@ def main():
                     metavar="N",
                     help="chaos: first N checkpoint writes raise a "
                          "transient OSError (async retry path)")
+    ap.add_argument("--telemetry", default="", metavar="DIR",
+                    help="write structured telemetry (JSONL) under DIR; "
+                         "render with `python -m repro.obs.report DIR`. "
+                         "Also enables the end-of-run overlap-efficiency "
+                         "probe (measured vs modeled exposed comm)")
+    ap.add_argument("--telemetry-flush", type=int, default=64,
+                    metavar="N",
+                    help="JSONL records buffered between file flushes "
+                         "(must be positive; 1 = write-through)")
     args = ap.parse_args()
+
+    telemetry = None
+    if args.telemetry:
+        from repro import obs
+        if args.telemetry_flush <= 0:
+            raise SystemExit(
+                f"--telemetry-flush must be a positive number of records, "
+                f"got {args.telemetry_flush} (use 1 for write-through)")
+        # global install: planner/serving instrumentation reaches it via
+        # obs.get_recorder(); console=print keeps the familiar log lines
+        telemetry = obs.configure(args.telemetry,
+                                  flush_every=args.telemetry_flush,
+                                  console=print)
 
     def _steps(spec):
         return tuple(int(s) for s in spec.split(",") if s)
@@ -190,7 +212,8 @@ def main():
             return Trainer(cfg, m, hp, global_batch=args.batch,
                            seq_len=args.seq, ckpt_dir=args.ckpt_dir,
                            injector=injector,
-                           plan=plan if plan is not None else pplan)
+                           plan=plan if plan is not None else pplan,
+                           telemetry=telemetry)
 
         sup = ElasticSupervisor(
             make_trainer, topology=topo, cfg=cfg,
@@ -198,9 +221,12 @@ def main():
             hp=hp,
             econfig=ElasticConfig(max_replans=args.max_replans,
                                   max_restarts=args.max_restarts,
-                                  backoff_s=args.restart_backoff))
+                                  backoff_s=args.restart_backoff),
+            telemetry=telemetry)
         res = sup.run(args.steps, ckpt_every=args.ckpt_every,
                       seed=args.seed)
+        if telemetry is not None:
+            telemetry.close()
         print(json.dumps({
             "final_step": res["final_step"],
             "first_loss": res["losses"][0], "last_loss": res["losses"][-1],
@@ -213,9 +239,11 @@ def main():
 
     trainer = Trainer(cfg, mesh, hp, global_batch=args.batch,
                       seq_len=args.seq, ckpt_dir=args.ckpt_dir,
-                      injector=injector, plan=pplan)
+                      injector=injector, plan=pplan, telemetry=telemetry)
     res = trainer.train(args.steps, ckpt_every=args.ckpt_every,
                         seed=args.seed)
+    if telemetry is not None:
+        telemetry.close()
     print(json.dumps({
         "final_step": res["final_step"],
         "first_loss": res["losses"][0], "last_loss": res["losses"][-1],

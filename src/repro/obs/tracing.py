@@ -1,0 +1,34 @@
+"""Schedule-phase tracing helpers.
+
+Two span flavours with different lifetimes:
+
+* :func:`phase_scope` — a ``jax.named_scope``: a *trace-time* annotation
+  that names the ops staged inside it, so the gather/compute/reduce
+  chunks of the TMP schedules (megatron/wang/oases/fused) appear in the
+  compiled HLO's op metadata and in XLA profiles.  Zero runtime cost —
+  the scope only exists while tracing.
+* :func:`trace_annotation` — a ``jax.profiler.TraceAnnotation``: a
+  *host-side* region (step dispatch, engine tick) visible on the Python
+  track of a ``jax.profiler.trace()`` capture.  Falls back to a no-op
+  when the profiler backend is unavailable.
+
+Both are safe to leave in hot paths unconditionally.
+"""
+from __future__ import annotations
+
+import contextlib
+
+
+def phase_scope(name: str):
+    """Name the jax ops staged inside the block (XLA-profile visible)."""
+    import jax
+    return jax.named_scope(name)
+
+
+def trace_annotation(name: str):
+    """Host-side profiler region; no-op when the profiler is missing."""
+    try:
+        from jax.profiler import TraceAnnotation
+        return TraceAnnotation(name)
+    except Exception:
+        return contextlib.nullcontext()

@@ -42,6 +42,7 @@ import time
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro import obs
 from repro.core.plan import ParallelPlan
 
 # --------------------------------------------------------------------------
@@ -137,24 +138,29 @@ class HeartbeatMonitor(FaultMonitor):
     paths: Dict[int, str] = field(default_factory=dict)
     timeout_s: float = 60.0
     clock: Callable[[], float] = time.time
+    recorder: object = None          # None -> the process-global recorder
     _reported: set = field(default_factory=set)
 
     def read(self, path: str) -> Optional[dict]:
         """Parsed heartbeat, or None when missing/half-written (a torn
         non-atomic write must look stale, not crash the monitor)."""
-        try:
-            with open(path) as f:
-                return json.load(f)
-        except (OSError, json.JSONDecodeError):
-            return None
+        return read_heartbeat(path)
 
     def poll(self, step: int) -> Optional[FaultEvent]:
         now = self.clock()
+        rec = self.recorder if self.recorder is not None \
+            else obs.get_recorder()
         for host, path in self.paths.items():
             if host in self._reported:
                 continue
             hb = self.read(path)
             age = now - hb["time"] if hb and "time" in hb else float("inf")
+            if age != float("inf"):
+                rec.gauge("elastic.heartbeat_age_s", age, host=host,
+                          step=step)
+                if isinstance(hb.get("step_time_ewma_s"), (int, float)):
+                    rec.gauge("elastic.peer_step_ewma_s",
+                              hb["step_time_ewma_s"], host=host, step=step)
             if age > self.timeout_s:
                 self._reported.add(host)
                 return FaultEvent(
@@ -172,15 +178,43 @@ class StragglerEscalation(FaultMonitor):
     hiccups stay log lines, a persistently slow peer becomes a measured
     ``slowdown`` the supervisor replans against (AMP-style: the collective
     runs at the slowest peer's pace, so the ILP should re-cost links at
-    ``bw / slowdown``)."""
+    ``bw / slowdown``).
+
+    With ``peer_paths`` (host index -> heartbeat file, the enriched
+    per-host files the trainer writes) the escalation also LOCALIZES the
+    straggler: each peer's ``step_time_ewma_s`` is compared, and a host
+    whose EWMA exceeds ``slow_factor`` x the median of the others is
+    named in the escalated event's ``host`` field — so the supervisor can
+    tell a slow host from a globally slow cluster."""
     detector: object = None          # StragglerDetector (default: fresh)
     escalate_after: int = 3
+    peer_paths: Dict[int, str] = field(default_factory=dict)
+    slow_factor: float = 1.25
     _consecutive: int = 0
 
     def __post_init__(self):
         if self.detector is None:
             from repro.runtime.trainer import StragglerDetector
             self.detector = StragglerDetector()
+
+    def localize(self) -> Tuple[Optional[int], str]:
+        """(slow host, per-host detail) from the peer heartbeats' step-time
+        EWMAs; (None, "") when no host stands out (or <2 peers report)."""
+        ewma = {}
+        for host, path in self.peer_paths.items():
+            hb = read_heartbeat(path)
+            if hb and isinstance(hb.get("step_time_ewma_s"), (int, float)):
+                ewma[host] = float(hb["step_time_ewma_s"])
+        if len(ewma) < 2:
+            return None, ""
+        slow = max(ewma, key=ewma.get)
+        rest = sorted(v for h, v in ewma.items() if h != slow)
+        peers_med = rest[len(rest) // 2]
+        detail = " per-host ewma: " + " ".join(
+            f"h{h}={v * 1e3:.1f}ms" for h, v in sorted(ewma.items()))
+        if ewma[slow] > self.slow_factor * max(peers_med, 1e-9):
+            return slow, detail
+        return None, detail
 
     def observe_step(self, step: int, dt: float) -> Optional[FaultEvent]:
         # mean BEFORE this observation: the healthy baseline the slow
@@ -192,10 +226,11 @@ class StragglerEscalation(FaultMonitor):
             self._consecutive = 0
         if self._consecutive >= self.escalate_after:
             self._consecutive = 0
-            return FaultEvent("straggler", step=step,
+            host, where = self.localize()
+            return FaultEvent("straggler", step=step, host=host,
                               slowdown=max(dt / max(baseline, 1e-9), 1.0),
                               detail=f"{self.escalate_after} consecutive "
-                                     f"slow steps")
+                                     f"slow steps" + where)
         return None
 
 
@@ -357,7 +392,8 @@ class ElasticSupervisor:
 
     def __init__(self, make_trainer, *, topology: Topology, cfg, shape,
                  hp, hw=None, econfig: Optional[ElasticConfig] = None,
-                 log_fn: Callable[[str], None] = print):
+                 log_fn: Callable[[str], None] = print,
+                 telemetry=None):
         from repro.core.planner import costmodel as cm
         self.make_trainer = make_trainer
         self.topology = topology
@@ -368,6 +404,10 @@ class ElasticSupervisor:
             n_chips=topology.n_chips, node_size=topology.chips_per_host)
         self.ec = econfig or ElasticConfig()
         self.log = log_fn
+        # same convention as Trainer: structured events with log_fn as the
+        # console sink, so "[elastic] ..." lines keep printing by default
+        self.rec = (telemetry if telemetry is not None
+                    else obs.Recorder(console=log_fn))
         self.plan: Optional[ParallelPlan] = None  # None = launch default
         self.events: List[FaultEvent] = []
         self.replans = 0
@@ -389,10 +429,13 @@ class ElasticSupervisor:
         if event.kind == "straggler" and event.slowdown > 1.0:
             hw_d = hw_d.degrade(bw_scale=1.0 / event.slowdown)
         if self.replans >= self.ec.max_replans:
-            self.log(f"[elastic] replan budget exhausted "
-                     f"({self.ec.max_replans}); keeping last-known-good")
+            self.rec.event(
+                "elastic.replan_exhausted", budget=self.ec.max_replans,
+                msg=f"[elastic] replan budget exhausted "
+                    f"({self.ec.max_replans}); keeping last-known-good")
             self.plan = self._fallback_plan(last_good)
             return
+        t0 = time.perf_counter()
         try:
             pr = ilp.replan(self.cfg, self.shape, self.hp, hw_d,
                             options=self.ec.replan_options,
@@ -404,11 +447,20 @@ class ElasticSupervisor:
                     f"{self.topology.n_chips} surviving chips")
             self.replans += 1
             self.plan = new_plan
-            self.log(f"[elastic] replanned after {event.kind}: "
-                     f"{pr.summary()} -> {new_plan.summary()}")
+            dur = time.perf_counter() - t0
+            self.rec.observe("elastic.replan_s", dur, step=event.step)
+            self.rec.event(
+                "elastic.replan", kind=event.kind, step=event.step,
+                dur_s=round(dur, 4), plan=new_plan.summary(),
+                msg=f"[elastic] replanned after {event.kind}: "
+                    f"{pr.summary()} -> {new_plan.summary()}")
         except Exception as e:
-            self.log(f"[elastic] replan failed ({e!r}); degrading to "
-                     f"last-known-good plan")
+            self.rec.observe("elastic.replan_s",
+                             time.perf_counter() - t0, step=event.step)
+            self.rec.event(
+                "elastic.replan_failed", kind=event.kind, step=event.step,
+                msg=f"[elastic] replan failed ({e!r}); degrading to "
+                    f"last-known-good plan")
             self.plan = self._fallback_plan(last_good)
 
     def _fallback_plan(self, last_good: Optional[ParallelPlan]
@@ -438,15 +490,20 @@ class ElasticSupervisor:
         if exported is None:
             return None
         try:
-            state = dst_trainer.import_state(exported)
-            self.log(f"[elastic] carried live state in-memory to step "
-                     f"{exported['step']} "
-                     f"({exported['sig'][0]} -> "
-                     f"{dst_trainer.plan.grouping_signature()[0]})")
+            with self.rec.span("elastic.state_carry_s"):
+                state = dst_trainer.import_state(exported)
+            self.rec.event(
+                "elastic.state_carry", step=exported["step"],
+                msg=f"[elastic] carried live state in-memory to step "
+                    f"{exported['step']} "
+                    f"({exported['sig'][0]} -> "
+                    f"{dst_trainer.plan.grouping_signature()[0]})")
             return state
         except Exception as e:
-            self.log(f"[elastic] in-memory relayout failed ({e!r}); "
-                     f"falling back to checkpoint restore")
+            self.rec.event(
+                "elastic.state_carry_failed",
+                msg=f"[elastic] in-memory relayout failed ({e!r}); "
+                    f"falling back to checkpoint restore")
             return None
 
     # ---- the loop --------------------------------------------------------
@@ -479,13 +536,19 @@ class ElasticSupervisor:
                 ev = e.event
                 self.events.append(ev)
                 losses.extend(trainer.run_losses)
-                self.log(f"[elastic] fault: {ev.describe()}")
+                self.rec.counter("elastic.faults", kind=ev.kind)
+                self.rec.event(
+                    "elastic.fault", kind=ev.kind, step=ev.step,
+                    host=ev.host, slowdown=round(ev.slowdown, 3),
+                    msg=f"[elastic] fault: {ev.describe()}")
                 last_good = self.plan
                 if ev.kind in ("host-loss", "heartbeat-stale"):
                     try:
                         self.topology = self.topology.lose(ev.host or 0)
                     except ValueError as te:
-                        self.log(f"[elastic] unsurvivable: {te}")
+                        self.rec.event(
+                            "elastic.unsurvivable",
+                            msg=f"[elastic] unsurvivable: {te}")
                         raise e from None
                 elif ev.kind == "link-degraded" and ev.link_bw:
                     self.topology = self.topology.degrade_link(ev.link_bw)
@@ -499,21 +562,36 @@ class ElasticSupervisor:
                 losses.extend(trainer.run_losses)
                 self.events.append(FaultEvent("worker-failure",
                                               detail=repr(e)))
+                self.rec.counter("elastic.restarts")
                 if self.restarts > self.ec.max_restarts:
                     raise
                 wait = self.ec.backoff_s * \
                     self.ec.backoff_factor ** (self.restarts - 1)
-                self.log(f"[elastic] worker failed ({e}); restart "
-                         f"{self.restarts}/{self.ec.max_restarts} "
-                         f"after {wait * 1e3:.0f} ms backoff")
+                self.rec.event(
+                    "elastic.restart", attempt=self.restarts,
+                    msg=f"[elastic] worker failed ({e}); restart "
+                        f"{self.restarts}/{self.ec.max_restarts} "
+                        f"after {wait * 1e3:.0f} ms backoff")
                 time.sleep(wait)
                 state = None                 # restore from checkpoint
             if trainer.checkpointer.failed_saves:
                 n_failed = trainer.checkpointer.failed_saves
-                self.log(f"[elastic] note: {n_failed} failed "
-                         f"checkpoint-write attempts so far")
+                self.rec.event(
+                    "elastic.ckpt_write_failures", count=n_failed,
+                    msg=f"[elastic] note: {n_failed} failed "
+                        f"checkpoint-write attempts so far")
 
 
 def heartbeat_path(ckpt_dir: str) -> str:
     """Where a trainer writes its liveness file (atomic tmp+rename)."""
     return os.path.join(ckpt_dir, "heartbeat.json")
+
+
+def read_heartbeat(path: str) -> Optional[dict]:
+    """Parsed heartbeat JSON, or None when missing/half-written (a torn
+    non-atomic write must look stale, not crash the reader)."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None

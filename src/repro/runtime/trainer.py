@@ -27,6 +27,7 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import store
 from repro.configs.base import ArchConfig, TrainHParams
 from repro.core.axes import mesh_info
@@ -149,7 +150,8 @@ class Trainer:
                  injector: Optional[FailureInjector] = None,
                  monitors: Sequence[el.FaultMonitor] = (),
                  log_fn: Callable[[str], None] = print,
-                 degrees=None, plan=None):
+                 degrees=None, plan=None,
+                 telemetry=None, host_id: int = 0):
         from repro.core.plan import ParallelPlan
         from repro.launch.mesh import mesh_signature
         self.cfg = cfg
@@ -180,9 +182,28 @@ class Trainer:
         self.injector = injector or FailureInjector()
         self.monitors = tuple(monitors)
         self.log = log_fn
+        # structured telemetry (repro.obs).  Default: an in-memory recorder
+        # whose console sink is log_fn, so the familiar "[trainer] ..."
+        # lines keep printing while structured payloads ride along; pass
+        # obs.NULL to disable entirely, or a JSONL-sinking Recorder
+        # (launch/train.py --telemetry <dir>) to persist the run.
+        self.rec = (telemetry if telemetry is not None
+                    else obs.Recorder(console=log_fn))
+        self.host_id = host_id
         self.straggler = StragglerDetector()
+        base_save = self.injector.wrap_save()
+
+        def _timed_save(ckpt_dir, step, tree, **kw):
+            # runs on the AsyncCheckpointer worker thread — Recorder's file
+            # buffer is lock-protected for exactly this caller
+            t0 = time.perf_counter()
+            path = base_save(ckpt_dir, step, tree, **kw)
+            self.rec.observe("trainer.ckpt_write_s",
+                             time.perf_counter() - t0, step=step)
+            return path
+
         self.checkpointer = store.AsyncCheckpointer(
-            ckpt_dir, save_fn=self.injector.wrap_save())
+            ckpt_dir, save_fn=_timed_save)
         self.run_losses: list = []       # losses of the current train() call
         self._live_state = None          # (params, opt, next_step) on device
 
@@ -265,19 +286,24 @@ class Trainer:
                     self.ckpt_dir, last, (params, opt),
                     shardings=(psh, osh), remap=remap)
             except store.CorruptCheckpointError as e:
-                self.log(f"[trainer] checkpoint step {last} corrupt "
-                         f"({e}); falling back to previous intact "
-                         f"checkpoint")
+                self.rec.event(
+                    "trainer.ckpt_corrupt", step=last,
+                    msg=f"[trainer] checkpoint step {last} corrupt "
+                        f"({e}); falling back to previous intact "
+                        f"checkpoint")
                 continue
             src = meta.get("mesh_axes")
-            self.log(f"[trainer] restored step {last} "
-                     f"(elastic mesh={tuple(self.mesh.shape.values())}"
-                     f" pp={self.info.pp}"
-                     + (f" <- {src} pp={meta.get('pp', 1)}" if src else "")
-                     + (f", plan relayout {src_sig[0]} -> "
-                        f"{self.plan.grouping_signature()[0]}"
-                        if remap is not None else "")
-                     + ")")
+            self.rec.event(
+                "trainer.restore", step=last,
+                relayout=remap is not None,
+                msg=f"[trainer] restored step {last} "
+                    f"(elastic mesh={tuple(self.mesh.shape.values())}"
+                    f" pp={self.info.pp}"
+                    + (f" <- {src} pp={meta.get('pp', 1)}" if src else "")
+                    + (f", plan relayout {src_sig[0]} -> "
+                       f"{self.plan.grouping_signature()[0]}"
+                       if remap is not None else "")
+                    + ")")
             return params, opt, last
         return params, opt, 0
 
@@ -332,14 +358,57 @@ class Trainer:
         params, opt = jax.tree_util.tree_unflatten(treedef, out)
         return params, opt, exported["step"]
 
-    def _heartbeat(self, step: int):
+    def _heartbeat(self, step: int, dt: Optional[float] = None,
+                   loss: Optional[float] = None):
         """Atomic liveness write: tmp + rename, so a watching supervisor
-        (HeartbeatMonitor) never reads a half-written JSON."""
+        (HeartbeatMonitor) never reads a half-written JSON.
+
+        Beyond liveness the file now carries per-host step metrics
+        (step_time_s / step_time_ewma_s / loss) so a cross-host watcher
+        (elastic.StragglerEscalation with peer heartbeats) can localize
+        WHICH host is slow, not just that somebody is."""
+        hb: Dict = {"step": step, "time": time.time(), "host": self.host_id}
+        if dt is not None:
+            hb["step_time_s"] = dt
+            hb["step_time_ewma_s"] = self.straggler.mean
+        if loss is not None:
+            hb["loss"] = loss
         path = el.heartbeat_path(self.ckpt_dir)
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"step": step, "time": time.time()}, f)
+            json.dump(hb, f)
         os.replace(tmp, path)
+
+    def _overlap_report(self, step: int):
+        """End-of-run overlap-efficiency probe (repro.obs.probe): decompose
+        the median measured step time against the calibrated cost model's
+        per-layer-group prediction and emit overlap.group / residual /
+        calibration_stale telemetry.  Only runs when the recorder has a
+        JSONL sink (--telemetry) — the probe calls calibrated_hw, which
+        micro-benches this host on a cache miss, a cost the default
+        in-memory recorder must never pay."""
+        if getattr(self.rec, "out_dir", None) is None:
+            return
+        h = getattr(self.rec, "hists", {}).get("trainer.step_time_s")
+        if not h or len(h) < 2:
+            return
+        xs = sorted(list(h)[1:])        # drop the compile step
+        med = xs[len(xs) // 2]
+        try:
+            from repro.core.planner.calibrate import calibrated_hw, describe
+            from repro.core.planner.costmodel import ShapeConfig
+            hw = calibrated_hw(n_chips=max(int(self.mesh.devices.size), 1))
+            degrees = [self.info.tp if d is None else d
+                       for d in self.plan.degrees]
+            probe = obs.OverlapProbe.for_run(
+                self.cfg, ShapeConfig("probe", self.seq_len,
+                                      self.global_batch, "train"),
+                self.hp, hw, degrees, list(self.plan.schedules),
+                hw_note=describe(hw))
+            probe.report(med, self.rec, step=step)
+        except Exception as e:   # the probe must never kill a finished run
+            self.rec.event("overlap.error",
+                           msg=f"[overlap] probe failed: {e!r}")
 
     # ---- main loop ----
     def train(self, total_steps: int, *, ckpt_every: int = 50,
@@ -376,15 +445,25 @@ class Trainer:
                 # mid-step reads as a phantom straggler
                 t0 = time.perf_counter()
                 self.injector.check(step)
-                params, opt, metrics = self.step_fn(params, opt, batch)
-                loss = float(metrics["loss"])
+                with obs.trace_annotation("train_step"):
+                    params, opt, metrics = self.step_fn(params, opt, batch)
+                    loss = float(metrics["loss"])
                 dt = time.perf_counter() - t0
+                self.rec.observe("trainer.step_time_s", dt, step=step)
+                self.rec.gauge("trainer.tokens_per_s",
+                               self.global_batch * self.seq_len / dt,
+                               step=step)
+                self.rec.gauge("trainer.loss", loss, step=step)
                 if self.straggler.observe(step, dt):
-                    self.log(f"[straggler] step {step} took {dt:.2f}s "
-                             f"(ewma {self.straggler.mean:.2f}s)")
+                    self.rec.event(
+                        "trainer.straggler", step=step,
+                        dt_s=round(dt, 4),
+                        ewma_s=round(self.straggler.mean, 4),
+                        msg=f"[straggler] step {step} took {dt:.2f}s "
+                            f"(ewma {self.straggler.mean:.2f}s)")
                 losses.append(loss)
                 self._live_state = (params, opt, step + 1)
-                self._heartbeat(step)
+                self._heartbeat(step, dt, loss)
                 for mon in self.monitors:
                     ev = mon.observe_step(step, dt) or mon.poll(step)
                     if ev is not None:
@@ -404,8 +483,11 @@ class Trainer:
                                   "virtual_stages": self.hp.virtual_stages,
                                   "plan": self.plan.to_dict()})
                 if step % 10 == 0:
-                    self.log(f"[trainer] step {step} loss {loss:.4f} "
-                             f"{dt*1e3:.0f} ms")
+                    self.rec.event(
+                        "trainer.step", step=step,
+                        msg=f"[trainer] step {step} loss {loss:.4f} "
+                            f"{dt*1e3:.0f} ms")
+            self._overlap_report(step)
         finally:
             data.close()
             try:
@@ -414,8 +496,12 @@ class Trainer:
                 # an exhausted-retry async write must not mask the loop's
                 # own (more informative) fault — surface it as a log +
                 # counter the supervisor inspects
-                self.log(f"[trainer] checkpoint write failed after "
-                         f"retries: {e}")
+                self.rec.counter("trainer.ckpt_write_failed")
+                self.rec.event(
+                    "trainer.ckpt_write_failed",
+                    msg=f"[trainer] checkpoint write failed after "
+                        f"retries: {e}")
+            self.rec.flush()
         return {"losses": losses, "final_step": step + 1,
                 "slow_steps": self.straggler.slow_steps}
 
@@ -441,19 +527,28 @@ def run_with_restarts(make_trainer: Callable[[], Trainer], total_steps: int,
     attempts = 0
     while True:
         trainer = make_trainer()
+        # duck-typed: FT tests drive this loop with fake trainers that
+        # only expose .train/.log
+        rec = getattr(trainer, "rec", None) \
+            or obs.Recorder(console=trainer.log)
         try:
             return trainer.train(total_steps, ckpt_every=ckpt_every)
         except (KeyboardInterrupt, SystemExit):
             raise
         except el.FaultError as e:
-            trainer.log(f"[supervisor] topology fault ({e}) is not "
-                        f"restartable on the same mesh — use "
-                        f"runtime.elastic.ElasticSupervisor")
+            rec.event(
+                "supervisor.fault", kind=e.event.kind,
+                msg=f"[supervisor] topology fault ({e}) is not "
+                    f"restartable on the same mesh — use "
+                    f"runtime.elastic.ElasticSupervisor")
             raise
         except restartable as e:
             attempts += 1
-            trainer.log(f"[supervisor] worker failed ({e}); "
-                        f"restart {attempts}/{max_restarts}")
+            rec.counter("supervisor.restarts")
+            rec.event(
+                "supervisor.restart", attempt=attempts,
+                msg=f"[supervisor] worker failed ({e}); "
+                    f"restart {attempts}/{max_restarts}")
             if attempts > max_restarts:
                 raise
             if backoff_s > 0:

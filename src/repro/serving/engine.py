@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ArchConfig, TrainHParams
 from repro.models import lm
 from repro.models import params as prm
@@ -62,7 +63,7 @@ class ServingEngine:
     def __init__(self, cfg: ArchConfig, mesh, *, slots: int, max_seq: int,
                  hp: Optional[TrainHParams] = None, eos_id: int = 2,
                  prefill_len: Optional[int] = None, decode_micro: int = 0,
-                 plan=None):
+                 plan=None, telemetry=None):
         self.cfg = cfg
         self.mesh = mesh
         self.plan = plan
@@ -125,6 +126,14 @@ class ServingEngine:
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self.stats = {"decoded_tokens": 0, "steps": 0, "admitted": 0}
+        # None -> resolve the process-global recorder per tick, so
+        # serve.py's --telemetry (obs.configure) reaches a pre-built engine
+        self._telemetry = telemetry
+
+    @property
+    def rec(self):
+        return (self._telemetry if self._telemetry is not None
+                else obs.get_recorder())
 
     def load(self, seed: int = 0, params=None):
         self.params = params if params is not None else prm.init_params(
@@ -145,6 +154,7 @@ class ServingEngine:
                 f"exceeds prefill_len={self.prefill_len} (engine admission "
                 f"contract; raise --prefill-len / max_seq or chunk the "
                 f"prompt)")
+        req._submit_t = time.perf_counter()   # TTFT clock starts here
         self.queue.put(req)
 
     def _admit(self):
@@ -166,13 +176,22 @@ class ServingEngine:
 
     def step(self):
         """One engine iteration: admit, decode one token for all slots."""
+        rec = self.rec
         self._admit()
+        rec.gauge("serving.queue_depth", self.queued)
+        rec.gauge("serving.slot_occupancy",
+                  sum(a is not None for a in self.active) / self.slots)
+        t0 = time.perf_counter()
         tokens = jnp.asarray(self.cur_tok)
         pos = jnp.asarray(self.pos)
-        next_tok, self.state = self.decode_fn(self.params, self.state,
-                                              tokens, pos)
-        next_tok = np.asarray(jax.device_get(next_tok))
+        with obs.trace_annotation("engine_tick"):
+            next_tok, self.state = self.decode_fn(self.params, self.state,
+                                                  tokens, pos)
+            next_tok = np.asarray(jax.device_get(next_tok))
+        now = time.perf_counter()
+        rec.observe("serving.decode_step_s", now - t0)
         self.stats["steps"] += 1
+        decoded = 0
         for s in range(self.slots):
             req = self.active[s]
             if req is None:
@@ -184,14 +203,20 @@ class ServingEngine:
                 req._prompt_cursor = cur + 1
                 continue
             tok = int(next_tok[s])
+            if not req.out_tokens and hasattr(req, "_submit_t"):
+                rec.observe("serving.ttft_s", now - req._submit_t,
+                            rid=req.rid)
             req.out_tokens.append(tok)
             self.stats["decoded_tokens"] += 1
+            decoded += 1
             self.cur_tok[s] = tok
             if (tok == self.eos_id
                     or len(req.out_tokens) >= req.max_new_tokens
                     or self.pos[s] >= self.max_seq - 1):
                 req.done = True
                 self.active[s] = None
+        if decoded:
+            rec.counter("serving.decoded_tokens", decoded)
 
     def run_until_drained(self, max_steps: int = 10_000) -> Dict:
         t0 = time.perf_counter()
@@ -200,5 +225,9 @@ class ServingEngine:
                 break
             self.step()
         dt = time.perf_counter() - t0
+        rec = self.rec
+        rec.gauge("serving.drain_s", dt)
+        rec.gauge("serving.tok_per_s",
+                  self.stats["decoded_tokens"] / max(dt, 1e-9))
         return {**self.stats, "wall_s": dt,
                 "tok_per_s": self.stats["decoded_tokens"] / max(dt, 1e-9)}

@@ -94,6 +94,18 @@ def test_elastic_replan():
 
 @multidevice
 @pytest.mark.slow
+def test_telemetry_end_to_end():
+    """Telemetry tier (PR acceptance): a short TMP training run with a
+    JSONL sink yields a schema-valid trace with step-time histograms,
+    async-checkpoint write latency, the overlap probe's per-layer-group
+    measured-vs-modeled exposed-communication events, and the enriched
+    per-host heartbeat the straggler localizer consumes."""
+    lines = _run("telemetry_run.py")
+    assert len(lines) >= 8
+
+
+@multidevice
+@pytest.mark.slow
 def test_sequence_parallel_equivalence():
     lines = _run("sp_equivalence.py")
     assert len(lines) >= 5
