@@ -207,6 +207,8 @@ class TrainHParams:
     tmp_layout: str = "auto"
     split: int = 2                   # sub-batch split factor (paper: 2)
     seq_parallel: bool = False       # beyond-paper: AG/RS sequence-parallel TMP
+    seq_shard: int = 1               # ring-attention sequence shards (1 = off;
+    #                                  must equal the mesh model-group size)
     remat: bool = True
     learning_rate: float = 3e-4
     weight_decay: float = 0.1
@@ -232,3 +234,9 @@ class TrainHParams:
             raise ValueError(
                 f"unknown tmp_layout {self.tmp_layout!r}: valid layouts "
                 f"are {', '.join(TMP_LAYOUTS)}")
+        s = self.seq_shard
+        if not isinstance(s, int) or isinstance(s, bool) or s < 1 \
+                or s & (s - 1):
+            raise ValueError(
+                f"bad seq_shard {s!r}: ring-attention sequence shards "
+                f"must be a positive power-of-two int (1 = off)")

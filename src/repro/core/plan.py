@@ -71,13 +71,33 @@ def _canon_degree(d: Degree, *, what: str = "degree") -> Degree:
 
 @dataclass(frozen=True)
 class LayerStrategy:
-    """One layer's ``(degree, schedule)`` strategy."""
+    """One layer's ``(degree, schedule, seq)`` strategy.
+
+    ``seq`` is the ring-attention sequence-shard factor (DESIGN.md §12):
+    1 = classic head-sharded TMP; > 1 = the layer keeps activations
+    sequence-sharded through attention with replicated attention weights
+    and a KV ring over the layer's model group.  At runtime ``seq`` must
+    equal the layer's effective TMP group size (checked in models/lm.py —
+    the ring spans exactly the group the heads would have sharded over).
+    """
     degree: Degree = None
     schedule: str = "oases"
+    seq: int = 1
 
     def __post_init__(self):
         object.__setattr__(self, "degree", _canon_degree(self.degree))
         validate_schedule(self.schedule, what="layer schedule")
+        q = self.seq
+        if not isinstance(q, int) or isinstance(q, bool) or q < 1 \
+                or q & (q - 1):
+            raise ValueError(
+                f"bad layer seq {q!r}: ring-attention seq shards must be "
+                f"a positive power-of-two int (1 = off)")
+        if q > 1 and isinstance(self.degree, tuple):
+            raise ValueError(
+                f"seq={q} does not compose with a 2D degree "
+                f"{self.degree!r}: the KV ring is a 1D ring over the "
+                f"layer's model group")
 
 
 # JSON field names = dataclass field names; anything else is rejected.
@@ -104,6 +124,7 @@ class ParallelPlan:
     zero1: bool = True
     grad_compress: bool = False
     seq_parallel: bool = False
+    seq_shard: int = 1
 
     def __post_init__(self):
         layers = tuple(
@@ -129,10 +150,19 @@ class ParallelPlan:
                 f"unknown tmp_layout {self.tmp_layout!r}: valid layouts "
                 f"are {', '.join(TMP_LAYOUTS)}")
         for field, lo in (("pp", 1), ("virtual_stages", 1), ("split", 1),
-                          ("microbatch", 0), ("decode_micro", 0)):
+                          ("microbatch", 0), ("decode_micro", 0),
+                          ("seq_shard", 1)):
             v = getattr(self, field)
             if not isinstance(v, int) or isinstance(v, bool) or v < lo:
                 raise ValueError(f"bad {field} {v!r}: expected int >= {lo}")
+        if self.seq_shard & (self.seq_shard - 1):
+            raise ValueError(f"bad seq_shard {self.seq_shard!r}: expected "
+                             f"a power of two")
+        if self.pp > 1 and (self.seq_shard > 1 or self.has_seq_layers):
+            raise ValueError(
+                "ring-attention sequence sharding does not compose with "
+                "pipeline parallelism yet (stage boundaries ship full "
+                "sequences)")
         if self.pp > 1 and self.is_mixed:
             raise ValueError(
                 "per-layer mixed (degree, schedule) strategies do not "
@@ -154,9 +184,24 @@ class ParallelPlan:
         return tuple(ls.degree for ls in self.layers)
 
     @property
+    def seqs(self) -> Tuple[int, ...]:
+        return tuple(ls.seq for ls in self.layers)
+
+    @property
+    def has_seq_layers(self) -> bool:
+        return any(ls.seq > 1 for ls in self.layers)
+
+    @property
+    def planned_seqs(self) -> Optional[Tuple[int, ...]]:
+        """Per-layer ring-attention seq shards when any layer pins one;
+        None for an all-head-sharded plan."""
+        return self.seqs if self.has_seq_layers else None
+
+    @property
     def is_mixed(self) -> bool:
-        """True when any two layers differ in (degree, schedule)."""
-        return len({(ls.degree, ls.schedule) for ls in self.layers}) > 1
+        """True when any two layers differ in (degree, schedule, seq)."""
+        return len({(ls.degree, ls.schedule, ls.seq)
+                    for ls in self.layers}) > 1
 
     @property
     def uniform_schedule(self) -> Optional[str]:
@@ -190,16 +235,24 @@ class ParallelPlan:
         and the stage stacking.  Checkpoint restores compare signatures
         to decide whether a cross-plan relayout is needed
         (models/params.py::relayout_flat)."""
-        if self.is_mixed or self.planned_degrees is not None:
+        if self.is_mixed or self.planned_degrees is not None \
+                or self.has_seq_layers:
+            if self.has_seq_layers:
+                return ("grouped", tuple((ls.degree, ls.schedule, ls.seq)
+                                         for ls in self.layers))
+            # seq-free plans keep the historical 2-tuple entries so old
+            # checkpoint manifests keep matching
             return ("grouped", tuple((ls.degree, ls.schedule)
                                      for ls in self.layers))
+        if self.seq_shard > 1:
+            return ("stacked", self.pp, 1, self.seq_shard)
         return ("stacked", self.pp, self.virtual_stages if self.pp > 1
                 else 1)
 
     def summary(self) -> str:
         runs: list = []
         for ls in self.layers:
-            key = (ls.degree, ls.schedule)
+            key = (ls.degree, ls.schedule, ls.seq)
             if runs and runs[-1][0] == key:
                 runs[-1][1] += 1
             else:
@@ -212,7 +265,11 @@ class ParallelPlan:
                 return f"{d[0]}x{d[1]}"
             return str(d)
 
-        body = " + ".join(f"[{_deg(d)}/{s}]*{n}" for (d, s), n in runs)
+        body = " + ".join(
+            f"[{_deg(d)}/{s}{f'/seq{q}' if q > 1 else ''}]*{n}"
+            for (d, s, q), n in runs)
+        if self.seq_shard > 1:
+            body += f" seq_shard={self.seq_shard}"
         pp = f" pp={self.pp}x{self.virtual_stages}v" if self.pp > 1 else ""
         mesh = (f" mesh={'x'.join(map(str, self.mesh_shape))}"
                 if self.mesh_shape else "")
@@ -228,38 +285,39 @@ class ParallelPlan:
             split=self.split, microbatch=self.microbatch,
             virtual_stages=self.virtual_stages, zero1=self.zero1,
             grad_compress=self.grad_compress,
-            seq_parallel=self.seq_parallel)
+            seq_parallel=self.seq_parallel, seq_shard=self.seq_shard)
 
     @classmethod
     def from_hparams(cls, hp, num_layers: int, *,
                      degrees: Optional[Sequence[Degree]] = None,
                      schedules: Optional[Sequence[str]] = None,
+                     seqs: Optional[Sequence[int]] = None,
                      mesh_shape: Sequence[int] = (),
                      mesh_axes: Sequence[str] = (),
                      pp: int = 1,
                      decode_micro: int = 0) -> "ParallelPlan":
         """Desugar legacy (hp, degrees) threading into a plan — the one
         place the scattered knobs become a ParallelPlan."""
-        if degrees is not None and len(degrees) != num_layers:
-            raise ValueError(
-                f"per-layer degrees have {len(degrees)} entries for a "
-                f"{num_layers}-layer model")
-        if schedules is not None and len(schedules) != num_layers:
-            raise ValueError(
-                f"per-layer schedules have {len(schedules)} entries for "
-                f"a {num_layers}-layer model")
+        for what, per in (("degrees", degrees), ("schedules", schedules),
+                          ("seqs", seqs)):
+            if per is not None and len(per) != num_layers:
+                raise ValueError(
+                    f"per-layer {what} have {len(per)} entries for a "
+                    f"{num_layers}-layer model")
         degs = list(degrees) if degrees is not None else [None] * num_layers
         scheds = (list(schedules) if schedules is not None
                   else [hp.schedule] * num_layers)
+        sqs = list(seqs) if seqs is not None else [1] * num_layers
         return cls(
-            layers=tuple(LayerStrategy(d, s)
-                         for d, s in zip(degs, scheds)),
+            layers=tuple(LayerStrategy(d, s, q)
+                         for d, s, q in zip(degs, scheds, sqs)),
             mesh_shape=tuple(mesh_shape), mesh_axes=tuple(mesh_axes),
             tmp_layout=hp.tmp_layout, pp=max(pp, 1),
             virtual_stages=max(hp.virtual_stages, 1),
             split=max(hp.split, 1), microbatch=hp.microbatch,
             decode_micro=decode_micro, zero1=hp.zero1,
-            grad_compress=hp.grad_compress, seq_parallel=hp.seq_parallel)
+            grad_compress=hp.grad_compress, seq_parallel=hp.seq_parallel,
+            seq_shard=getattr(hp, "seq_shard", 1))
 
     def validate_for(self, cfg) -> "ParallelPlan":
         """Check the plan against an ArchConfig (layer count)."""
@@ -273,9 +331,15 @@ class ParallelPlan:
     def to_dict(self) -> Dict[str, Any]:
         d = {f.name: getattr(self, f.name)
              for f in dataclasses.fields(self)}
-        d["layers"] = [[list(ls.degree) if isinstance(ls.degree, tuple)
-                        else ls.degree, ls.schedule]
-                       for ls in self.layers]
+        # layers serialize as [degree, schedule] and only grow the third
+        # element when a layer is seq-sharded, so seq-free plan files stay
+        # byte-identical to what older readers expect
+        d["layers"] = [
+            [list(ls.degree) if isinstance(ls.degree, tuple)
+             else ls.degree, ls.schedule] + ([ls.seq] if ls.seq > 1 else [])
+            for ls in self.layers]
+        if self.seq_shard == 1:
+            d.pop("seq_shard")
         d["mesh_shape"] = list(self.mesh_shape)
         d["mesh_axes"] = list(self.mesh_axes)
         return d
@@ -307,21 +371,26 @@ class ParallelPlan:
         parsed = []
         for i, ls in enumerate(layers):
             if isinstance(ls, dict):
-                extra = set(ls) - {"degree", "schedule"}
+                extra = set(ls) - {"degree", "schedule", "seq"}
                 if extra:
                     raise ValueError(
                         f"layer {i}: unknown strategy field(s) "
                         f"{sorted(extra)}")
                 parsed.append(LayerStrategy(ls.get("degree"),
-                                            ls.get("schedule", "oases")))
-            elif isinstance(ls, (list, tuple)) and len(ls) == 2:
-                parsed.append(LayerStrategy(
-                    tuple(ls[0]) if isinstance(ls[0], list) else ls[0],
-                    ls[1]))
+                                            ls.get("schedule", "oases"),
+                                            ls.get("seq", 1)))
+            elif isinstance(ls, (list, tuple)) and len(ls) in (2, 3):
+                try:
+                    parsed.append(LayerStrategy(
+                        tuple(ls[0]) if isinstance(ls[0], list) else ls[0],
+                        ls[1], ls[2] if len(ls) == 3 else 1))
+                except (ValueError, TypeError) as e:
+                    raise ValueError(f"layer {i}: {e}") from None
             else:
                 raise ValueError(
-                    f"layer {i}: expected [degree, schedule] (degree = "
-                    f"null | int | [dx, dy]), got {ls!r}")
+                    f"layer {i}: expected [degree, schedule] or "
+                    f"[degree, schedule, seq] (degree = null | int | "
+                    f"[dx, dy]), got {ls!r}")
         return cls(layers=tuple(parsed), **kw)
 
     @classmethod

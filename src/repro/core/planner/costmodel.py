@@ -316,6 +316,83 @@ def _attn_flops(cfg: ArchConfig, tokens: int, seq: int, window=None) -> float:
     return proj + attn
 
 
+def ring_attn_costs(cfg: ArchConfig, blk: BlockCost, shape: ShapeConfig,
+                    hp: TrainHParams, hw: HWConfig,
+                    options: Sequence) -> NodeCosts:
+    """Ring-attention (seq == degree) node costs of an attention block.
+
+    The sequence axis — not the head axis — is sharded over the group:
+    every chip holds the FULL attention weights (replicated; their grads
+    psum at the shard_map boundary) and 1/n of the sequence.  The block's
+    trailing collective disappears (q/k/v/o are all seq-local, ``wo`` is
+    replicated), and in its place the KV shard circulates the ring, one
+    hop per online-softmax step, each hop issued before the step's block
+    compute so the transfer hides under it (kernels/ring_attention.py).
+    The exposed time is therefore ``max(T_attn_block, T_kv_ring) + fill``
+    — :func:`overlapped_time` with ``n - 1`` ring steps — which the ILP
+    consumes as a per-(layer, degree) constant.
+
+    The memory trade this buys (Eq. 6, ring column): saved tensors shrink
+    to the seq-local shard — the ``(1 - 1/n)`` gathered-residual saving
+    that makes ring win at long context — while the attention weights are
+    charged replicated (×n the head-sharded cost; optimizer state still
+    ZeRO-shards over dp).  2D degrees and n == 1 are not ring-capable and
+    come back as ``inf`` so no consumer can pick them silently.
+
+    Conventions mirror :func:`node_costs`: seconds per iteration (the
+    per-slot costs scaled back by micro), memory bytes per chip.
+    """
+    split = max(hp.split, 1)
+    out = NodeCosts([], [], [], [], [], [])
+    tokens = shape.global_batch * shape.seq_len
+    hd = cfg.resolved_head_dim
+    kv_width = 2.0 * cfg.num_kv_heads * hd          # k + v rows per token
+    for opt in options:
+        dx, dy = _dxy(opt)
+        n = dx * dy
+        if dy > 1 or n <= 1:
+            for lst in (out.d_f, out.c_f, out.d_b, out.c_b,
+                        out.mem_s, out.mem_t, out.c_f_y, out.c_b_y):
+                lst.append(float("inf"))
+            continue
+        dp = max(hw.n_chips // n, 1)
+        t_chip = tokens / dp
+        # same auto-accumulation floor as node_costs: batch rows only
+        rows = max(int(shape.global_batch // dp), 1)
+        micro = hp.microbatch if hp.microbatch > 0 else \
+            min(max(1, int(math.ceil(t_chip / 8192.0))), rows)
+        t_live = t_chip / micro
+        t_loc = t_live / n                 # seq-local tokens per chip
+        # full-width projections on 1/n of the tokens: same flops per chip
+        # as head sharding, but the narrow matmul dim is the token axis
+        eff = _mxu_eff(hw, cfg.num_heads * hd, int(t_loc // split))
+        d_f = blk.flops_fwd / hw.n_chips / (hw.peak_flops * eff) \
+            / split / micro
+        # KV ring: each chip ships its (k, v) shard n-1 times per pass
+        kv_hop = (t_loc / split) * kv_width * hw.bytes_act
+        c_f = (n - 1) * (kv_hop / hw.ring_bw(n) + hw.comm_latency)
+        d_f *= micro
+        c_f *= micro
+        recompute = 1.0 if hp.remat else 0.0
+        d_b = d_f * (2.0 + recompute)
+        # reverse ring rotates the bf16 KV tuple plus f32 (dk, dv) partials
+        c_b = c_f * (hw.bytes_act + 4.0) / hw.bytes_act
+        zdp = dp if hp.zero1 else 1
+        mem_s = blk.params * (2.0 + 12.0 / zdp)
+        mem_t = (t_loc * cfg.d_model * hw.bytes_act
+                 * (1.5 if hp.fine_remat else 0.5)
+                 + 2.0 * t_loc * kv_width * hw.bytes_act)  # 2 in-flight slots
+        out.d_f.append(d_f)
+        out.c_f.append(c_f)
+        out.d_b.append(d_b)
+        out.c_b.append(c_b)
+        out.mem_s.append(mem_s)
+        out.mem_t.append(mem_t)
+        out.c_f_y.append(0.0)
+        out.c_b_y.append(0.0)
+    return out
+
+
 def _block_costs(cfg: ArchConfig, kind: str, tokens: int, seq: int) -> List[BlockCost]:
     """Blocks for one layer; flops are global-batch totals."""
     d = cfg.d_model
@@ -405,8 +482,12 @@ def node_costs(cfg: ArchConfig, blk: BlockCost, shape: ShapeConfig,
         dp = max(hw.n_chips // n, 1)
         t_chip = tokens / dp                    # tokens on this chip / iter
         # gradient accumulation bounds live activations (auto ~8k tok/chip)
+        # — but it splits BATCH ROWS only, so at long sequence the floor is
+        # one full sample per microbatch (the regime where the seq axis /
+        # ring attention is the only remaining activation-memory lever)
+        rows = max(int(shape.global_batch // dp), 1)
         micro = hp.microbatch if hp.microbatch > 0 else \
-            max(1, int(math.ceil(t_chip / 8192.0)))
+            min(max(1, int(math.ceil(t_chip / 8192.0))), rows)
         t_live = t_chip / micro
         # width shards over dx only in 2D (the §5.6 arithmetic-density
         # caveat bites later — one of the 2D layout's selling points)
@@ -496,7 +577,8 @@ def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                        degrees: Sequence, hw: HWConfig = V5E,
                        options: Sequence = (2, 4, 8, 16),
                        stages: int = 1,
-                       schedules: Optional[Sequence[str]] = None) -> Dict:
+                       schedules: Optional[Sequence[str]] = None,
+                       seqs: Optional[Sequence[int]] = None) -> Dict:
     """Evaluate f(s) (Eq. 3–5) for a concrete per-layer strategy (entries
     int or ``(dx, dy)``).  Also the cost model used by benchmarks/fig6
     (Spearman vs measured).  ``stages`` > 1: each chip holds only 1/stages
@@ -512,7 +594,18 @@ def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     is exposed (the next group's schedule gives it nothing to hide
     behind), which is exactly the conservatism the grouped execution
     shows; uniform inputs reproduce the single-schedule estimate
-    bit-for-bit."""
+    bit-for-bit.
+
+    ``seqs``: optional per-layer ring-attention seq shards (the plan's
+    seq axis; 1 = head-sharded).  A ring layer's attention block swaps
+    its AllReduce for the overlapped KV-ring term (ring_attn_costs) —
+    exposed as ``max(T_attn, T_kv_ring) + fill`` regardless of the
+    layer's schedule (the ring is its own schedule) — while its MLP
+    block keeps the layer schedule.  Every seq-axis change between
+    adjacent layers (and a trailing ring layer before the LM head)
+    charges one residual regather: the exit AllGather (or its backward
+    mirror) that the next group's layout cannot hide — the KV-ring
+    exposure at schedule/seq transitions."""
     blocks = layer_blocks(cfg, shape)
     options = list(options)
     for d in degrees:                      # tolerate degrees ∉ options
@@ -521,21 +614,31 @@ def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     opt_index = {_dkey(o): i for i, o in enumerate(options)}
     scheds = (list(schedules) if schedules is not None
               else [hp.schedule] * cfg.num_layers)
-    seq = []   # (NodeCosts, option_idx, degree, schedule)
-    for layer, degree, sched in zip(blocks, degrees, scheds):
+    lseqs = list(seqs) if seqs is not None else [1] * cfg.num_layers
+    seq = []   # (NodeCosts, option_idx, degree, schedule, ring)
+    for layer, degree, sched, sq in zip(blocks, degrees, scheds, lseqs):
         for blk in layer:
-            nc = node_costs(cfg, blk, shape, hp, hw, options)
-            seq.append((nc, opt_index[_dkey(degree)], degree, sched))
+            ring = sq > 1 and blk.name in ("attn", "xattn")
+            nc = (ring_attn_costs(cfg, blk, shape, hp, hw, options)
+                  if ring else node_costs(cfg, blk, shape, hp, hw, options))
+            seq.append((nc, opt_index[_dkey(degree)], degree, sched, ring))
 
     split = max(hp.split, 1)
 
     def pass_time(dkey, ckey, cykey):
         total = 0.0
         prev_c = 0.0
-        for nc, j, n, sched in seq:
+        for nc, j, n, sched, ring in seq:
             d = getattr(nc, dkey)[j]
             c = getattr(nc, ckey)[j]
-            if split > 1 and sched in ("oases", "merak"):
+            if ring:
+                # KV ring overlaps block compute; the pending collective
+                # of a preceding overlap run has nothing to hide behind
+                total += prev_c
+                total += overlapped_time(split * d, split * c,
+                                         _dtot(n) - 1)
+                prev_c = 0.0
+            elif split > 1 and sched in ("oases", "merak"):
                 # Eq. 3: sub-batch 0 compute overlaps previous comm; sub-batch
                 # 1 compute overlaps own sub-batch-0 comm
                 total += max(d, prev_c) + max(d, c)
@@ -572,10 +675,25 @@ def estimate_iteration(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
         if _dkey(n1) != _dkey(n2):
             t_e += edge_cost(cfg, shape, hw, n1, n2, seq[a][0], seq[a][1],
                              seq[a + 1][1]) * 2  # fwd + bwd reshard
+    # seq-axis transitions: entering a ring group slices the residual
+    # locally (free) but leaving one regathers it — and the backward pass
+    # mirrors the pair, so each boundary nets one exposed AllGather of the
+    # per-chip residual over the ring group (incl. the exit before the
+    # LM head when the last layer rides the ring)
+    tokens = shape.global_batch * shape.seq_len
+    for a, sq in enumerate(lseqs + [1]):
+        prev = lseqs[a - 1] if a else 1
+        if sq == prev:
+            continue
+        grp = max(prev, sq)
+        deg = _dtot(degrees[min(a, len(degrees) - 1)])
+        dp_a = max(hw.n_chips // max(deg, 1), 1)
+        res = tokens / dp_a * cfg.d_model * hw.bytes_act
+        t_e += res * (grp - 1) / grp / hw.ring_bw(grp) + hw.comm_latency
     # memory (Eq. 6)
     s_scale, t_scale = pipeline_mem_scales(stages, hp.microbatch)
     mem = 0.0
-    for nc, j, n, _sched in seq:
+    for nc, j, n, _sched, _ring in seq:
         mem += nc.mem_s[j] * s_scale + nc.mem_t[j] * t_scale
     vp = cfg.padded_vocab()
     last = max(_dtot(degrees[-1]), 1)

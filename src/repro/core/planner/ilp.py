@@ -58,13 +58,19 @@ class PlanResult:
     groups: List[Tuple[object, int]]       # (degree, count) runs
     schedules: Optional[List[str]] = None  # per-layer schedule names
     plan: Optional[object] = None          # executable ParallelPlan
+    seqs: Optional[List[int]] = None       # per-layer ring seq shards
 
     def summary(self) -> str:
-        if self.schedules is not None and len(set(self.schedules)) > 1:
+        sq = self.seqs if self.seqs and any(q > 1 for q in self.seqs) \
+            else None
+        if sq or (self.schedules is not None
+                  and len(set(self.schedules)) > 1):
+            scheds = self.schedules or [""] * len(self.degrees)
             runs = " + ".join(
-                f"[{_fmt_degree(d)}/{s}] * {n}"
-                for (d, s), n in _runs(list(zip(self.degrees,
-                                                self.schedules))))
+                f"[{_fmt_degree(d)}{'/' + s if s else ''}"
+                f"{f'/seq{q}' if q > 1 else ''}] * {n}"
+                for (d, s, q), n in _runs(list(zip(
+                    self.degrees, scheds, sq or [1] * len(self.degrees)))))
         else:
             sched = f"/{self.schedules[0]}" if self.schedules else ""
             runs = " + ".join(f"[{_fmt_degree(d)}{sched}] * {n}"
@@ -83,28 +89,36 @@ def _runs(values: Sequence) -> List[Tuple[object, int]]:
     return out
 
 
-def _as_plan(hp, degrees, schedules, *, pp: int = 1, virtual_stages: int = 1,
-             microbatch: Optional[int] = None, decode_micro: int = 0,
-             mesh_shape=(), mesh_axes=()):
+def _as_plan(hp, degrees, schedules, *, seqs=None, pp: int = 1,
+             virtual_stages: int = 1, microbatch: Optional[int] = None,
+             decode_micro: int = 0, mesh_shape=(), mesh_axes=()):
     """Wrap an ILP decision as an executable ParallelPlan.
 
     Under pipeline parallelism the per-stage TMP degree lives in the MESH
     (stage-internal model axes), not in per-layer pinned degrees — the
     grouped layout does not compose with PP — so pp > 1 plans record
     mesh-following (``None``) degrees and should carry the mesh signature
-    instead."""
+    instead.  A seq-sharded decision over a UNIFORM degree likewise
+    records mesh-following degrees: the ring runs on the plain
+    ``(data, model)`` mesh of that degree and the seq axis alone decides
+    per-layer behaviour (lm.build_train_loss's stacked ring fast path /
+    seq-grouped scan both require mesh-following degrees there)."""
     import dataclasses as _dc
 
     from repro.core.plan import ParallelPlan
     if microbatch is not None:
         hp = _dc.replace(hp, microbatch=microbatch)
     hp = _dc.replace(hp, virtual_stages=max(virtual_stages, 1))
+    if seqs is not None and not any(q > 1 for q in seqs):
+        seqs = None
+    follow = pp > 1 or (seqs is not None
+                        and len({cm._dkey(d) for d in degrees}) == 1)
     return ParallelPlan.from_hparams(
         hp, len(degrees),
-        degrees=([None] * len(degrees) if pp > 1
+        degrees=([None] * len(degrees) if follow
                  else [_dkey_plan(d) for d in degrees]),
-        schedules=list(schedules), pp=max(pp, 1),
-        decode_micro=decode_micro,
+        schedules=list(schedules), seqs=list(seqs) if seqs else None,
+        pp=max(pp, 1), decode_micro=decode_micro,
         mesh_shape=mesh_shape, mesh_axes=mesh_axes)
 
 
@@ -179,30 +193,77 @@ def expand_options(cfg: ArchConfig, hw: cm.HWConfig,
     return out
 
 
-def _smooth_schedules(cfg, shape, hp, degrees, lsched, hw, options, scheds):
-    """Post-solve consistency guard for the (degree, schedule) search.
+def _consolidate_seqs(cfg, degrees, lsched, lseqs):
+    """Defragment the ILP's seq axis.  Layers with identical
+    (kind, degree, schedule) are cost-identical columns, so HiGHS
+    scatters a memory-driven ring-layer count arbitrarily among them.
+    Sorting each equivalence class's seq values in place (head-sharded
+    first, ring last) keeps the exact per-class ring count — Eq. 3/6
+    node terms are unchanged — while minimizing seq-axis transitions,
+    each of which estimate_iteration charges a residual regather."""
+    pat = cfg.layer_pattern
+    groups: Dict[tuple, List[int]] = {}
+    for i in range(len(lseqs)):
+        groups.setdefault(
+            (pat[i % len(pat)], cm._dkey(degrees[i]), lsched[i]),
+            []).append(i)
+    out = list(lseqs)
+    for idxs in groups.values():
+        for i, v in zip(idxs, sorted(lseqs[i] for i in idxs)):
+            out[i] = v
+    return out
 
-    The ILP's linearization charges schedule transitions nothing (edge
-    products range over degree pairs only), while ``estimate_iteration``
-    exposes the pending overlap cool-down when leaving an oases/merak
-    run — so a near-tie could fragment schedules into a plan the
-    estimator scores worse than a uniform overlay.  Evaluate the ILP's
-    choice against every uniform-schedule overlay on the SAME degrees
-    and keep the cheapest (the ILP choice wins exact ties), so the
-    returned ``predicted_s`` is always consistent with the returned
-    schedules and never loses to its own uniform overlays."""
-    candidates = [list(lsched)]
+
+def _smooth_schedules(cfg, shape, hp, degrees, lsched, hw, options, scheds,
+                      lseqs=None, ring_ok=None, mem_cap=None):
+    """Post-solve consistency guard for the (degree, schedule[, seq])
+    search.
+
+    The ILP's linearization charges schedule and seq transitions nothing
+    (edge products range over degree pairs only), while
+    ``estimate_iteration`` exposes the pending overlap cool-down when
+    leaving an oases/merak run and the residual regather at every
+    seq-axis boundary — so a near-tie could fragment the stack into a
+    plan the estimator scores worse than a uniform overlay.  Evaluate the
+    ILP's choice against every uniform-schedule overlay on the SAME
+    (degrees, seqs), and — when the seq axis is in play — against the
+    uniform seq overlays (all-off, and all-on where every layer is
+    ring-capable), keeping the cheapest MEMORY-FEASIBLE candidate (seq
+    overlays move Eq. 6, so each one re-checks ``mem_cap``; the ILP
+    choice wins exact ties).  Returns ``(schedules, seqs, estimate)``."""
+    L = len(lsched)
+    lseqs = list(lseqs) if lseqs is not None else [1] * L
+    base = [1] * L
+    seq_cands = [list(lseqs)]
+    if any(q > 1 for q in lseqs):
+        seq_cands.append(base)
+        full = [int(cm._dtot(d)) if (ring_ok is None or ring_ok[i])
+                and not isinstance(degrees[i], (tuple, list))
+                and cm._dtot(degrees[i]) > 1 else 1
+                for i, d in enumerate(degrees)]
+        if full != lseqs and any(q > 1 for q in full):
+            seq_cands.append(full)
+    candidates = [(list(lsched), sq) for sq in seq_cands]
     if len(set(lsched)) > 1:
-        candidates += [[s] * len(lsched) for s in scheds]
+        candidates += [([s] * L, sq) for s in scheds for sq in seq_cands]
+    e0 = cm.estimate_iteration(cfg, shape, hp, degrees, hw, options,
+                               schedules=list(lsched), seqs=list(lseqs))
     best = None
-    for cand in candidates:
+    for cand, sq in candidates:
         e = cm.estimate_iteration(cfg, shape, hp, degrees, hw, options,
-                                  schedules=cand)
+                                  schedules=cand, seqs=sq)
+        # an overlay must not move Eq. 6 the wrong way past the cap (the
+        # estimator's mem includes fixed terms the ILP row does not, so
+        # "no worse than the ILP's own choice" is the consistent bar)
+        if (mem_cap is not None and e["mem_bytes"] > mem_cap
+                and e["mem_bytes"] > e0["mem_bytes"]):
+            continue                      # overlay broke Eq. 6: drop it
         key = (e["iter_s"],
+               sum(a != b for a, b in zip(sq, sq[1:])),
                sum(a != b for a, b in zip(cand, cand[1:])))
         if best is None or key < best[0]:
-            best = (key, cand, e)
-    return best[1], best[2]
+            best = (key, cand, sq, e)
+    return best[1], best[2], best[3]
 
 
 def _pair_pass_bounds(sched: str, split: int, d: float, c: float,
@@ -233,7 +294,8 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
          layout: str = "1d",
          stages: int = 1,
          objective: str = "throughput",
-         schedules: Optional[Sequence[str]] = None
+         schedules: Optional[Sequence[str]] = None,
+         seq: str = "none"
          ) -> "PlanResult | ServingPlanResult":
     """``layout`` is the explicit search-space knob (it deliberately does
     NOT read ``hp.tmp_layout``, which governs the *execution* layout and
@@ -255,7 +317,18 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     the per-layer throughput ILP it runs :func:`plan_serving` — a
     ``(dx, dy, pp)`` mesh search minimizing per-token decode-step latency
     (``costmodel.decode_step_time``) — and returns a
-    :class:`ServingPlanResult`."""
+    :class:`ServingPlanResult`.
+
+    ``seq`` opens the plan's third per-layer axis, ring attention
+    (kernels/ring_attention.py): ``'auto'`` extends every 1D degree
+    option n > 1 on a self/local-attention layer with its seq-sharded
+    variant seq == n — attention weights replicated, sequence sharded,
+    the block collective replaced by the overlapped KV ring
+    (``costmodel.ring_attn_costs``) — so the one-hot ranges over
+    (degree, schedule, seq ∈ {1, degree}) triples.  ``'none'`` (default)
+    keeps the two-axis search exactly.  The seq axis does not compose
+    with pipeline stages (``stages > 1`` forces it off, matching
+    core/plan.py's validation)."""
     if objective == "latency":
         # the serving search defaults to the full layout space ('1d' here
         # is plan()'s paper-faithful TRAINING default, not a user choice;
@@ -285,11 +358,27 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
         if not scheds:
             raise ValueError("schedules must name at least one schedule "
                              "(or be None / 'auto')")
+    if seq not in ("none", "auto"):
+        raise ValueError(f"unknown planner seq axis {seq!r}: expected "
+                         f"'none' (head-sharded only, the default) or "
+                         f"'auto' (offer seq == degree ring attention "
+                         f"per layer)")
     options = expand_options(cfg, hw, options, layout)
     L = cfg.num_layers
     D = len(options)
-    # the per-layer one-hot ranges over (degree, schedule) PAIRS
-    pairs = [(dj, sj) for dj in range(D) for sj in range(len(scheds))]
+    ring_on = seq == "auto" and stages == 1
+    # option/layer ring capability: 1D groups of >= 2 chips, on layers
+    # whose attention is self/local (cross-attn KV comes from the encoder
+    # and stays head-sharded — models/params.py keeps those specs classic)
+    ring_opt = [cm._dxy(o)[1] == 1 and cm._dtot(o) > 1 for o in options]
+    from repro.configs.base import GLOBAL_ATTN, LOCAL_ATTN
+    pat = cfg.layer_pattern
+    ring_layer = [pat[i % len(pat)] in (GLOBAL_ATTN, LOCAL_ATTN)
+                  for i in range(L)]
+    # the per-layer one-hot ranges over (degree, schedule, seq) TRIPLES;
+    # rf == 1 means "ring: seq == this option's degree"
+    pairs = [(dj, sj, rf) for dj in range(D) for sj in range(len(scheds))
+             for rf in ((0, 1) if ring_on and ring_opt[dj] else (0,))]
     P = len(pairs)
     mem_cap = mem_cap if mem_cap is not None else hw.hbm_cap
 
@@ -311,6 +400,19 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     # first and applying max{} after would understate comm-bound layers
     fused_f = np.zeros((L, D))
     fused_b = np.zeros((L, D))
+    # ring-pair cost split: the MLP-side blocks keep the layer schedule
+    # (d/c/fused *_m arrays) while the attention block collapses to the
+    # overlapped ring constant (ring_f/ring_b) with its own Eq. 6 row
+    d_f_m = np.zeros((L, D))
+    c_f_m = np.zeros((L, D))
+    d_b_m = np.zeros((L, D))
+    c_b_m = np.zeros((L, D))
+    mem_m = np.zeros((L, D))
+    fused_f_m = np.zeros((L, D))
+    fused_b_m = np.zeros((L, D))
+    ring_f = np.zeros((L, D))
+    ring_b = np.zeros((L, D))
+    mem_r = np.zeros((L, D))
     s_sc, t_sc = cm.pipeline_mem_scales(stages, hp.microbatch)
     for i, layer in enumerate(blocks):
         for blk in layer:
@@ -331,6 +433,37 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                         split * nc.d_b[j],
                         split * (nc.c_b[j] - nc.c_b_y[j]),
                         split * nc.c_b_y[j], dx_j - 1)
+            if not (ring_on and ring_layer[i]):
+                continue
+            if blk.name == "attn":
+                rc = cm.ring_attn_costs(cfg, blk, shape, hp, hw, options)
+                for j in range(D):
+                    if not ring_opt[j]:
+                        continue
+                    n_j = cm._dtot(options[j])
+                    ring_f[i, j] += cm.overlapped_time(
+                        split * rc.d_f[j], split * rc.c_f[j], n_j - 1)
+                    ring_b[i, j] += cm.overlapped_time(
+                        split * rc.d_b[j], split * rc.c_b[j], n_j - 1)
+                    mem_r[i, j] += rc.mem_s[j] * s_sc + rc.mem_t[j] * t_sc
+            else:
+                d_f_m[i] += nc.d_f
+                c_f_m[i] += nc.c_f
+                d_b_m[i] += nc.d_b
+                c_b_m[i] += nc.c_b
+                mem_m[i] += (np.array(nc.mem_s) * s_sc
+                             + np.array(nc.mem_t) * t_sc)
+                if need_fused:
+                    for j in range(D):
+                        dx_j, _ = cm._dxy(options[j])
+                        fused_f_m[i, j] += cm.overlapped_time_2d(
+                            split * nc.d_f[j],
+                            split * (nc.c_f[j] - nc.c_f_y[j]),
+                            split * nc.c_f_y[j], dx_j - 1)
+                        fused_b_m[i, j] += cm.overlapped_time_2d(
+                            split * nc.d_b[j],
+                            split * (nc.c_b[j] - nc.c_b_y[j]),
+                            split * nc.c_b_y[j], dx_j - 1)
 
     # Eq. 3 per layer, both passes, per (degree, schedule) pair:
     #   overlap (oases/merak, split>1): u >= split*d AND
@@ -370,8 +503,10 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     # All sit well below any real gap (tens of percent in the commodity
     # regime) but above HiGHS's ~1e-7 tolerances, so ties resolve the same
     # way on every solve.
+    # * a ~5e-5-of-compute epsilon prefers the head-sharded (seq == 1)
+    #   variant, so ring only wins a real modeled gap.
     scale = float(np.mean(d_f) + np.mean(c_f)) or 1.0
-    for p, (j, sj) in enumerate(pairs):
+    for p, (j, sj, rf) in enumerate(pairs):
         _, dyj = cm._dxy(options[j])
         for i in range(L):
             cost[i * P + p] += 1e-2 * (c_f[i, j] + c_b[i, j])
@@ -379,6 +514,8 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                 cost[i * P + p] += 3e-4 * scale * (1.0 + np.log2(dyj))
             if sj:
                 cost[i * P + p] += 1e-4 * scale * sj
+            if rf:
+                cost[i * P + p] += 5e-5 * scale
 
     rows = []
     lo = []
@@ -393,18 +530,35 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     for i in range(L):
         add({i * P + p: 1.0 for p in range(P)}, 1.0, 1.0)
 
+    # ring pairs exist only on ring-capable layers: pin the others' s to 0
+    if ring_on:
+        for i in range(L):
+            if ring_layer[i]:
+                continue
+            for p, (_, _, rf) in enumerate(pairs):
+                if rf:
+                    ub[i * P + p] = 0.0
+
     # u constraints: two lower-bound rows per (layer, pass) whenever any
     # pair's bounds differ (the overlap schedules), one otherwise — the
-    # single-schedule default emits exactly the pre-pair rows
+    # single-schedule default emits exactly the pre-pair rows.  Ring
+    # pairs bound u by the MLP-side schedule terms plus the overlapped
+    # ring constant (both bounds shift by the same constant).
     for i in range(L):
-        for off, dk, ck, fk in ((0, d_f, c_f, fused_f),
-                                (L, d_b, c_b, fused_b)):
+        for off, dk, ck, fk, dmk, cmk, fmk, rk in (
+                (0, d_f, c_f, fused_f, d_f_m, c_f_m, fused_f_m, ring_f),
+                (L, d_b, c_b, fused_b, d_b_m, c_b_m, fused_b_m, ring_b)):
             u = nS + off + i
             b1 = np.zeros(P)
             b2 = np.zeros(P)
-            for p, (j, sj) in enumerate(pairs):
-                b1[p], b2[p] = _pair_pass_bounds(
-                    scheds[sj], split, dk[i, j], ck[i, j], fk[i, j])
+            for p, (j, sj, rf) in enumerate(pairs):
+                if rf:
+                    v1, v2 = _pair_pass_bounds(
+                        scheds[sj], split, dmk[i, j], cmk[i, j], fmk[i, j])
+                    b1[p], b2[p] = v1 + rk[i, j], v2 + rk[i, j]
+                else:
+                    b1[p], b2[p] = _pair_pass_bounds(
+                        scheds[sj], split, dk[i, j], ck[i, j], fk[i, j])
             add({u: 1.0, **{i * P + p: -b1[p] for p in range(P)}},
                 0.0, np.inf)
             if np.any(b2 != b1):
@@ -413,7 +567,7 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
 
     # edge products + costs over degree pairs: y_e,dj,dk >= sum_{p in
     # pairs(dj)} s_a,p + sum_{p in pairs(dk)} s_b,p - 1
-    deg_pairs = {j: [p for p, (dj, _) in enumerate(pairs) if dj == j]
+    deg_pairs = {j: [p for p, (dj, _, _) in enumerate(pairs) if dj == j]
                  for j in range(D)}
     for e, (a, b) in enumerate(edges):
         for j in range(D):
@@ -439,8 +593,8 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     max_total = max(cm._dtot(o) for o in options)
     fixed = vp * cfg.d_model * 2.0 / max_total * (2 if not cfg.tie_embeddings else 1)
     fixed *= 7.0  # + f32 optimizer states
-    add({i * P + p: mem[i, j] for i in range(L)
-         for p, (j, _) in enumerate(pairs)},
+    add({i * P + p: (mem_m[i, j] + mem_r[i, j]) if rf else mem[i, j]
+         for i in range(L) for p, (j, _, rf) in enumerate(pairs)},
         -np.inf, mem_cap - fixed)
 
     A = lil_matrix((len(rows), N))
@@ -475,15 +629,19 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
 
     s = res.x[:nS].reshape(L, P)
     chosen = [pairs[int(np.argmax(s[i]))] for i in range(L)]
-    degrees = [options[j] for j, _ in chosen]
-    lsched = [scheds[sj] for _, sj in chosen]
-    lsched, est = _smooth_schedules(cfg, shape, hp, degrees, lsched, hw,
-                                    options, scheds)
+    degrees = [options[j] for j, _, _ in chosen]
+    lsched = [scheds[sj] for _, sj, _ in chosen]
+    lseqs = [int(cm._dtot(options[j])) if rf else 1 for j, _, rf in chosen]
+    if any(q > 1 for q in lseqs):
+        lseqs = _consolidate_seqs(cfg, degrees, lsched, lseqs)
+    lsched, lseqs, est = _smooth_schedules(
+        cfg, shape, hp, degrees, lsched, hw, options, scheds,
+        lseqs=lseqs, ring_ok=ring_layer, mem_cap=mem_cap)
     msh, max_ = _plan_mesh_sig(hw, degrees)
     return _telemetry_plan("plan", PlanResult(
         degrees, est["iter_s"], solve_ms,
-        str(res.status), _runs(degrees), schedules=lsched,
-        plan=_as_plan(hp, degrees, lsched,
+        str(res.status), _runs(degrees), schedules=lsched, seqs=lseqs,
+        plan=_as_plan(hp, degrees, lsched, seqs=lseqs,
                       mesh_shape=msh, mesh_axes=max_)))
 
 

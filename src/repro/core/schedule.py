@@ -44,6 +44,15 @@ class TmpCtx:
     and the block exit reduce-scatters (same link bytes as the AllReduce,
     but rematerialization residuals shrink by tp — see EXPERIMENTS §Perf).
 
+    ``seq_shard`` > 1 (beyond-paper, ring attention — DESIGN.md §12): the
+    attention parts keep activations sequence-sharded *through* the mixer
+    instead of gathering at the block entry.  Attention weights are
+    replicated over the model group (full heads per device) and the KV
+    shards circulate around the TMP ring
+    (:mod:`repro.kernels.ring_attention`); the MLP/recurrent parts still
+    run Megatron-SP.  Requires ``seq_parallel=True`` and
+    ``seq_shard == tp_total``.
+
     ``layout`` selects the partition dimensionality.  ``"auto"`` follows the
     mesh/degree (a ``model_y`` axis or tuple degree activates the 2D hybrid
     layout); ``"1d"`` forces the classic layout, treating a multi-axis model
@@ -58,6 +67,7 @@ class TmpCtx:
     wang_chunks: int = 4
     use_pallas: bool = False
     seq_parallel: bool = False
+    seq_shard: int = 1                # ring-attention seq shards (1 = off)
     layout: str = "auto"              # auto | 1d | 2d
 
     def _axes_xy(self) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:

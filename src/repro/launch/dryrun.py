@@ -48,6 +48,7 @@ def parse_degrees(spec: str):
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              schedule: str = "oases", fine_remat: bool = True,
              planner_degrees=None, seq_parallel: bool = False,
+             seq_shard: int = 1,
              split: int = 2, microbatch: int = 0,
              mesh_shape: str = "", tmp_layout: str = "auto",
              pp: int = 1, virtual_stages: int = 1, hw=None,
@@ -70,7 +71,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     t0 = time.perf_counter()
     hp = TrainHParams(schedule=schedule, fine_remat=fine_remat,
-                      seq_parallel=seq_parallel, split=split,
+                      seq_parallel=seq_parallel, seq_shard=seq_shard,
+                      split=split,
                       microbatch=microbatch, tmp_layout=tmp_layout,
                       virtual_stages=virtual_stages)
     if plan_file or mesh_shape:
@@ -246,6 +248,10 @@ def main():
     ap.add_argument("--no-fine-remat", dest="fine_remat", action="store_false")
     ap.add_argument("--split", type=int, default=2)
     ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--seq-shard", type=int, default=1,
+                    help="ring-attention sequence shards per attention "
+                         "layer (power of two; must equal the mesh model "
+                         "group size — DESIGN.md §12)")
     ap.add_argument("--degrees", default="",
                     help="comma-separated per-layer TMP degrees (planner "
                          "mode); 'AxB' entries are 2D, e.g. 8,4x2,16")
@@ -309,6 +315,7 @@ def main():
                            schedule=args.schedule, fine_remat=args.fine_remat,
                            planner_degrees=degrees, split=args.split,
                            seq_parallel=args.seq_parallel,
+                           seq_shard=args.seq_shard,
                            microbatch=args.microbatch,
                            mesh_shape=args.mesh_shape,
                            tmp_layout=args.tmp_layout,

@@ -55,6 +55,10 @@ def main():
                          "micro-group g while stage s-1 decodes g+1)")
     ap.add_argument("--tmp-layout", default="auto",
                     choices=["auto", "1d", "2d"])
+    ap.add_argument("--seq-shard", type=int, default=1,
+                    help="recorded in the resolved plan for provenance; "
+                         "decode itself always serves head-sharded (the "
+                         "KV ring is a training/prefill layout)")
     ap.add_argument("--decode-micro", type=int, default=0,
                     help="decode micro-group count on a pipeline mesh "
                          "(0 = auto: pp * virtual stages)")
@@ -112,7 +116,8 @@ def main():
                   objective="latency")
         print(f"latency planner ({args.print_plan}): {pr.summary()}")
 
-    hp = TrainHParams(schedule=args.schedule, tmp_layout=args.tmp_layout)
+    hp = TrainHParams(schedule=args.schedule, tmp_layout=args.tmp_layout,
+                      seq_shard=args.seq_shard)
     mesh, pplan, hp = resolve_launch(cfg, hp, mesh=args.mesh, pp=args.pp,
                                      plan_file=args.plan,
                                      save_plan=args.save_plan,

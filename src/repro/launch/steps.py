@@ -61,7 +61,8 @@ def resolve_hp(hp: TrainHParams, shape_kind: str, global_batch: int,
     budget stretches by tp."""
     import dataclasses
     if shape_kind == "train" and hp.microbatch == 0:
-        shard = tp if hp.seq_parallel else 1
+        # ring attention (seq_shard) shards the residuals like SP does
+        shard = tp if (hp.seq_parallel or hp.seq_shard > 1) else 1
         return dataclasses.replace(
             hp, microbatch=auto_microbatch(global_batch, dp, seq_len,
                                            d_model, num_layers,
@@ -118,7 +119,8 @@ def build_train_step(cfg: ArchConfig, mesh, hp: TrainHParams, *,
         if (hp.microbatch > 1 and not pipelined) else global_batch
     loss_fn, specs, _ = lm.build_train_loss(
         cfg, mesh, hp, global_batch=micro_b, seq_len=seq_len,
-        degrees=degrees, schedules=schedules)
+        degrees=degrees, schedules=schedules,
+        seqs=plan.planned_seqs if plan is not None else None)
     ocfg = adamw.AdamWConfig(
         learning_rate=hp.learning_rate, weight_decay=hp.weight_decay,
         warmup_steps=hp.warmup_steps, total_steps=hp.total_steps,
@@ -184,12 +186,18 @@ def train_abstract_inputs(cfg: ArchConfig, mesh, hp: TrainHParams, *,
     info = mesh_info(mesh)
     hp, degrees, schedules = unpack_plan(cfg, hp, plan, degrees, schedules)
     hp = resolve_for_mesh(cfg, info, hp, global_batch, seq_len, degrees)
-    if schedules is not None and len(set(schedules)) > 1 and degrees is None:
-        degrees = [None] * cfg.num_layers   # mirror lm._normalize_strategy
+    # the ONE strategy normalization build_train_loss itself runs, so the
+    # abstract specs agree with the traced step (grouped promotion, ring
+    # seq collapse/expansion) by construction
+    seqs = plan.planned_seqs if plan is not None else None
+    degrees, schedules, seqs, hp = lm._normalize_strategy(
+        cfg, hp, degrees, schedules, seqs)
+    ring = hp.seq_shard > 1 and degrees is None
     specs = prm.model_specs(cfg, info, degrees=degrees, max_pos=seq_len,
                             layout=hp.tmp_layout,
                             virtual_stages=hp.virtual_stages,
-                            schedules=schedules)
+                            schedules=schedules, seqs=seqs,
+                            seq_shard=hp.seq_shard if ring else 1)
     params = prm.abstract_params(specs, mesh)
     opt_state = adamw.abstract_opt_state(specs, info, mesh, zero1=hp.zero1)
     # pipeline meshes take the flat batch; 1F1B slices microbatches itself

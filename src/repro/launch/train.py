@@ -47,6 +47,10 @@ def main():
     ap.add_argument("--microbatch", type=int, default=0,
                     help="1F1B microbatch count / grad-accumulation steps "
                          "(0 = auto)")
+    ap.add_argument("--seq-shard", type=int, default=1,
+                    help="ring-attention sequence shards per attention "
+                         "layer (power of two; must equal the mesh model "
+                         "group size — DESIGN.md §12)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -68,6 +72,11 @@ def main():
                     help="--planner search space: degrees under the "
                          "--schedule ('current') or the full per-layer "
                          "(degree, schedule) space of the paper ('auto')")
+    ap.add_argument("--planner-seq", default="none",
+                    choices=["none", "auto"],
+                    help="--planner seq axis: 'auto' lets the ILP shard "
+                         "long sequences over KV rings per attention "
+                         "layer instead of (only) sharding heads")
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--elastic", action="store_true",
@@ -150,7 +159,8 @@ def main():
                       warmup_steps=max(args.steps // 20, 1),
                       use_planner=args.planner, tmp_layout=args.tmp_layout,
                       microbatch=args.microbatch,
-                      virtual_stages=args.virtual_stages)
+                      virtual_stages=args.virtual_stages,
+                      seq_shard=args.seq_shard)
     # the ONE desugaring path (launch/mesh.py): legacy flags or a --plan
     # file become (mesh, ParallelPlan, projected hp)
     mesh, pplan, hp = resolve_launch(cfg, hp, mesh=args.mesh, pp=args.pp,
@@ -176,9 +186,12 @@ def main():
                          options=tuple(n for n in (2, 4, 8, 16)
                                        if n <= info.tp) or (info.tp,),
                          schedules="auto"
-                         if args.planner_schedules == "auto" else None)
+                         if args.planner_schedules == "auto" else None,
+                         seq=args.planner_seq)
         print(f"planner: {pr.summary()}")
-        if info.factored:
+        if info.factored or pr.plan.planned_degrees is None:
+            # mixed degrees need the factored mesh; a mesh-following plan
+            # (uniform degrees — incl. ring seq-shard plans) runs anywhere
             pplan = dataclasses.replace(pplan, layers=pr.plan.layers)
         else:
             print("planner: mesh is not factored — plan shown for "

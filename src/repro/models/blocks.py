@@ -101,6 +101,40 @@ def make_attn_part(cfg: ArchConfig, ctx: TmpCtx, kind: str) -> Callable:
     # encoder_layer_fn (causal=False) instead.
     window = cfg.window if kind == LOCAL_ATTN else None
 
+    if ctx.seq_shard > 1 and kind in (GLOBAL_ATTN, LOCAL_ATTN):
+        from jax.ad_checkpoint import checkpoint_name
+        from repro.kernels.ring_attention import ring_attention
+
+        def ring_part(p, x, aux):
+            # ring attention (DESIGN.md §12): x stays sequence-sharded
+            # through the mixer.  Weights are replicated (full heads per
+            # device — the shard_map boundary psums their seq-partial
+            # grads, same convention as the norm scales) and the KV
+            # shards circulate around the TMP ring inside the kernel.
+            h = _norm(x, p["ln"], cfg.norm_eps)
+            b, s_loc, _ = h.shape
+            hd = cfg.resolved_head_dim
+            pos = lax.dynamic_slice_in_dim(
+                aux["positions"], tmpc.axes_index(ctx.tp_axes) * s_loc,
+                s_loc, axis=1)
+            q = rope(jnp.dot(h, p["wq"]).reshape(
+                b, s_loc, cfg.num_heads, hd), pos, cfg.rope_theta)
+            k = rope(jnp.dot(h, p["wk"]).reshape(
+                b, s_loc, cfg.num_kv_heads, hd), pos, cfg.rope_theta)
+            v = jnp.dot(h, p["wv"]).reshape(b, s_loc, cfg.num_kv_heads, hd)
+            o = ring_attention(q, k, v, axes=ctx.tp_axes, causal=True,
+                               window=window, softcap=cfg.attn_softcap,
+                               q_positions=pos, kv_positions=pos,
+                               use_pallas=ctx.use_pallas)
+            o = checkpoint_name(o, tmpc.COLLECTIVE_NAME)
+            delta = jnp.dot(o.reshape(b, s_loc, cfg.num_heads * hd),
+                            p["wo"])
+            if cfg.post_norms:
+                delta = _norm(delta, p["pn1"], cfg.norm_eps)
+            return delta, ZERO
+
+        return ring_part
+
     def part(p, x, aux):
         h = ctx.gather_seq(_norm(x, p["ln"], cfg.norm_eps))
         q, k, v, plan = _qkv(cfg, ctx, p, h, aux["positions"])

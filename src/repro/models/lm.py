@@ -37,12 +37,29 @@ def _positions(b, s, dtype=jnp.int32):
     return jnp.broadcast_to(jnp.arange(s, dtype=dtype)[None, :], (b, s))
 
 
+def _sp_degraded(what: str, reasons: Sequence[str]):
+    """Surface an intentional seq-parallel/seq-shard degradation instead
+    of silently dropping the flag (PR 5 rejects unknown schedules at
+    construction; numerics-preserving fallbacks warn + emit telemetry)."""
+    import warnings
+    from repro.obs.recorder import get_recorder
+    msg = f"{what} degraded: {'; '.join(reasons)}"
+    get_recorder().event("parallelism.degraded", msg, what=what)
+    warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
 def _run_encoder(cfg, ctx, params, ctx_embed):
     import dataclasses
     if ctx.seq_parallel:
         # encoder activations are not sequence-sharded (the decoder's cross
-        # attention needs the full encoded sequence on every shard)
-        ctx = dataclasses.replace(ctx, seq_parallel=False)
+        # attention needs the full encoded sequence on every shard) — an
+        # intentional, numerics-preserving degradation, surfaced once at
+        # trace time rather than silently dropped
+        _sp_degraded("seq_parallel", [
+            "encoder blocks run full-sequence (the decoder's cross "
+            "attention needs the whole encoded sequence on every shard)"])
+        ctx = dataclasses.replace(ctx, seq_parallel=False,
+                                  seq_shard=1)
     enc = params["encoder"]
     x = ctx_embed + enc["pos_embed"][None, : ctx_embed.shape[1]].astype(
         ctx_embed.dtype)
@@ -159,7 +176,8 @@ def _pipeline_scan(cfg, ctx, info: MeshInfo, hp, params, x):
 # --------------------------------------------------------------------------
 # planner-mode (mixed per-layer TMP degrees on the factored mesh)
 # --------------------------------------------------------------------------
-def _grouped_scan(cfg, info, hp, params, x, degrees, schedules=None):
+def _grouped_scan(cfg, info, hp, params, x, degrees, schedules=None,
+                  seqs=None):
     """Mixed-strategy forward (planner mode): consecutive layers sharing
     ``(degree, schedule)`` execute as one scan group, each under its own
     ``TmpCtx`` and sub-batch split.
@@ -193,16 +211,32 @@ def _grouped_scan(cfg, info, hp, params, x, degrees, schedules=None):
 
     aux_total = jnp.zeros((1,), jnp.float32)   # rank-1: see _stack_scan NOTE
     for g_params, g in zip(params["groups"],
-                           prm.plan_groups(cfg, degrees, schedules)):
+                           prm.plan_groups(cfg, degrees, schedules, seqs)):
         sched = g.schedule if schedules is not None else hp.schedule
         ctx = TmpCtx(info, degree=g.degree, schedule=sched,
-                     use_pallas=hp.use_pallas, layout=hp.tmp_layout)
+                     use_pallas=hp.use_pallas, layout=hp.tmp_layout,
+                     seq_parallel=g.seq > 1, seq_shard=g.seq)
         x = reshard(x, info.extra_dp_axes(g.degree))
+        s_full = x.shape[1]
+        if g.seq > 1:
+            # ring group (DESIGN.md §12): activations enter seq-sharded
+            # over the group's model axes and leave gathered — the seq
+            # analogue of the batch reshard edges above
+            if g.seq != ctx.tp_total:
+                raise ValueError(
+                    f"layer group seq={g.seq} must equal its model group "
+                    f"size ({ctx.tp_total}) — the KV ring spans exactly "
+                    f"the group the heads would have sharded over")
+            if s_full % g.seq:
+                raise ValueError(
+                    f"seq_len {s_full} is not divisible by the group's "
+                    f"seq={g.seq}")
+            x = tmpc.batch_split(x, ctx.tp_axes, 1)
         parts = blk.train_parts(cfg, ctx, g.kind)
         b = x.shape[0]
         split = effective_split(sched, hp.split, b)
         xs = split_tree(x, split)
-        auxs = [{"positions": _positions(b // split, x.shape[1])}
+        auxs = [{"positions": _positions(b // split, s_full)}
                 for _ in range(split)]
 
         def body(carry, p, parts=parts, auxs=auxs, sched=sched):
@@ -213,6 +247,8 @@ def _grouped_scan(cfg, info, hp, params, x, degrees, schedules=None):
         body = maybe_checkpoint(body, remat=hp.remat, fine=hp.fine_remat)
         (xs, aux_total), _ = lax.scan(body, (xs, aux_total), g_params)
         x = merge_tree(xs) if len(xs) > 1 else xs[0]
+        if g.seq > 1:
+            x = tmpc.sp_all_gather(x, ctx.tp_axes, 1)
     x = reshard(x, ())
     return x, jnp.sum(aux_total)
 
@@ -220,18 +256,31 @@ def _grouped_scan(cfg, info, hp, params, x, degrees, schedules=None):
 # --------------------------------------------------------------------------
 # step builders
 # --------------------------------------------------------------------------
-def _normalize_strategy(cfg, hp, degrees, schedules):
+def _normalize_strategy(cfg, hp, degrees, schedules, seqs=None):
     """One normalization of the per-layer strategy inputs:
 
     * uniform per-layer schedules collapse into ``hp.schedule`` (the
       stacked fast path) when no degrees are pinned;
     * mixed schedules with no pinned degrees promote to the grouped path
       with mesh-following ``degree=None`` groups;
+    * per-layer ring-attention ``seqs`` collapse into ``hp.seq_shard``
+      when uniform over the whole stack (else they ride the grouped
+      path); a uniform ``hp.seq_shard`` over a grouped plan re-expands
+      into per-layer seqs;
     * the grouped path always carries an explicit schedule list so the
       spec grouping (models/params.py) and the execution grouping
       (``_grouped_scan``) agree by construction.
     """
     import dataclasses
+    if seqs is not None:
+        seqs = list(seqs)
+        if len(seqs) != cfg.num_layers:
+            raise ValueError(
+                f"per-layer seqs have {len(seqs)} entries for a "
+                f"{cfg.num_layers}-layer model")
+        if len(set(seqs)) == 1:
+            hp = dataclasses.replace(hp, seq_shard=seqs[0])
+            seqs = None
     if schedules is not None:
         schedules = list(schedules)
         if len(schedules) != cfg.num_layers:
@@ -243,16 +292,25 @@ def _normalize_strategy(cfg, hp, degrees, schedules):
             schedules = None
         elif degrees is None:
             degrees = [None] * cfg.num_layers
+    if seqs is not None and degrees is None:
+        # mixed per-layer seqs always run the grouped path
+        degrees = [None] * cfg.num_layers
     if degrees is not None and schedules is None:
         schedules = [hp.schedule] * cfg.num_layers
-    return degrees, schedules, hp
+    if degrees is not None and seqs is None and hp.seq_shard > 1:
+        # a uniform seq_shard on a grouped plan becomes per-layer seqs so
+        # the spec/execution grouping carries it
+        seqs = [hp.seq_shard] * cfg.num_layers
+        hp = dataclasses.replace(hp, seq_shard=1)
+    return degrees, schedules, seqs, hp
 
 
 
 def build_train_loss(cfg: ArchConfig, mesh, hp: TrainHParams, *,
                      global_batch: int, seq_len: int,
                      degrees: Optional[Sequence[int]] = None,
-                     schedules: Optional[Sequence[str]] = None):
+                     schedules: Optional[Sequence[str]] = None,
+                     seqs: Optional[Sequence[int]] = None):
     """Returns (loss_fn(params, batch) -> (loss, aux), specs, in_specs).
 
     ``degrees``/``schedules`` are the per-layer strategy of an executable
@@ -263,21 +321,57 @@ def build_train_loss(cfg: ArchConfig, mesh, hp: TrainHParams, *,
     groups all follow the mesh model group); mixed DEGREES need the
     factored mesh as before."""
     info = mesh_info(mesh)
-    degrees, schedules, hp = _normalize_strategy(cfg, hp, degrees,
-                                                 schedules)
-    specs = prm.model_specs(cfg, info, degrees=degrees, max_pos=seq_len,
-                            layout=hp.tmp_layout,
-                            virtual_stages=hp.virtual_stages,
-                            schedules=schedules)
+    degrees, schedules, seqs, hp = _normalize_strategy(cfg, hp, degrees,
+                                                       schedules, seqs)
     # SP composes with the 1D layout only: in 2D the block entries/exits
     # are already per-axis collectives, not the SP AG/RS pair.  Under PP
     # the stage boundary ships the full-sequence activation, so SP is off.
-    twod = TmpCtx(info, layout=hp.tmp_layout).is_2d
-    sp = bool(hp.seq_parallel and info.tp > 1 and degrees is None
-              and seq_len % max(info.tp, 1) == 0 and not twod
-              and info.pp == 1)
+    base_ctx = TmpCtx(info, layout=hp.tmp_layout)
+    twod = base_ctx.is_2d
+    blockers = []
+    if info.tp <= 1:
+        blockers.append("the mesh has no model axes (tp=1)")
+    if degrees is not None:
+        blockers.append("per-layer strategies run the grouped path "
+                        "(groups shard their own sequences)")
+    if seq_len % max(info.tp, 1):
+        blockers.append(f"seq_len {seq_len} is not divisible by the "
+                        f"model group size {info.tp}")
+    if twod:
+        blockers.append("the 2D layout's block entries/exits are "
+                        "per-axis collectives, not the SP AG/RS pair")
+    if info.pp > 1:
+        blockers.append("pipeline stage boundaries ship full sequences")
+    ring = hp.seq_shard > 1 and degrees is None
+    if ring:
+        # ring attention is a new, memory/layout-changing mode: an
+        # unsatisfiable --seq-shard is a hard error, not a silent
+        # fallback (satellite of ISSUE 9; cf. PR 5's schedule rejection)
+        ring_blockers = list(blockers)
+        if info.tp > 1 and hp.seq_shard != base_ctx.tp_total:
+            ring_blockers.append(
+                f"seq_shard {hp.seq_shard} != model group size "
+                f"{base_ctx.tp_total} (the KV ring spans exactly the "
+                f"group the heads would have sharded over)")
+        if seq_len % hp.seq_shard:
+            ring_blockers.append(
+                f"seq_len {seq_len} is not divisible by seq_shard "
+                f"{hp.seq_shard}")
+        if ring_blockers:
+            raise ValueError(
+                "seq_shard (ring attention) cannot run here: "
+                + "; ".join(ring_blockers))
+    sp = bool((hp.seq_parallel or ring) and not blockers)
+    if hp.seq_parallel and blockers and not ring:
+        _sp_degraded("seq_parallel", blockers)
+    specs = prm.model_specs(cfg, info, degrees=degrees, max_pos=seq_len,
+                            layout=hp.tmp_layout,
+                            virtual_stages=hp.virtual_stages,
+                            schedules=schedules, seqs=seqs,
+                            seq_shard=hp.seq_shard if ring else 1)
     ctx = TmpCtx(info, schedule=hp.schedule, use_pallas=hp.use_pallas,
-                 seq_parallel=sp, layout=hp.tmp_layout)
+                 seq_parallel=sp, seq_shard=hp.seq_shard if ring else 1,
+                 layout=hp.tmp_layout)
     bspec = batch_pspec(info, global_batch)
     batch_specs = {"tokens": bspec, "labels": bspec}
     if cfg.context_len:
@@ -308,7 +402,7 @@ def build_train_loss(cfg: ArchConfig, mesh, hp: TrainHParams, *,
         positions = _positions(b, s)
         if degrees is not None:
             x, aux = _grouped_scan(cfg, info, hp, params, x, degrees,
-                                   schedules)
+                                   schedules, seqs)
         elif info.pp > 1:
             x, aux = _pipeline_scan(cfg, ctx, info, hp, params, x)
         else:

@@ -94,11 +94,25 @@ def info_xy(info: MeshInfo, degree, layout: str = "auto"):
     return x_ax, y_ax, dx, dy
 
 
-def _attn_specs(cfg, info: MeshInfo, degree, *, prefix="", layout="auto"):
+def _attn_specs(cfg, info: MeshInfo, degree, *, prefix="", layout="auto",
+                seq_shard: int = 1):
     x_ax, y_ax, dx, dy = info_xy(info, degree, layout)
     plan = attn_plan(cfg, dx)
     d, hd = cfg.d_model, cfg.resolved_head_dim
     dt = cfg.dtype
+    if seq_shard > 1:
+        # ring attention (DESIGN.md §12): the sequence shards over the
+        # model group instead of the heads, so every device holds the
+        # FULL attention weights (the planner charges the replication
+        # against the activation/KV savings)
+        rep = P(None, None)
+        return {
+            prefix + "wq": Spec((d, cfg.num_heads * hd), rep, dt),
+            prefix + "wk": Spec((d, cfg.num_kv_heads * hd), rep, dt),
+            prefix + "wv": Spec((d, cfg.num_kv_heads * hd), rep, dt),
+            prefix + "wo": Spec((cfg.num_heads * hd, d), rep, dt,
+                                scale=0.02 / math.sqrt(2 * cfg.num_layers)),
+        }
     # 2D: the contraction (d_model) dim shards over y.  The exit weight's
     # *output* columns may only shard over y when the row-matmul path runs
     # (x-sharded heads, or dx == 1 where the psum_x degenerates).
@@ -204,11 +218,17 @@ def info_tp(info: MeshInfo, degree) -> int:
 
 def layer_specs(cfg: ArchConfig, kind: str, info: MeshInfo,
                 degree=None, *, causal=True,
-                layout: str = "auto") -> Dict[str, Spec]:
+                layout: str = "auto",
+                seq_shard: int = 1) -> Dict[str, Spec]:
     d, dt = cfg.d_model, cfg.dtype
     out: Dict[str, Any] = {"ln": Spec((d,), P(None), jnp.float32, scale=0.0)}
     if kind in (GLOBAL_ATTN, LOCAL_ATTN, CROSS_ATTN):
-        out.update(_attn_specs(cfg, info, degree, layout=layout))
+        # ring mode replicates only the SELF-attention projections; a
+        # cross layer's projections stay head-sharded (the cross part
+        # gathers the sequence and runs the classic path)
+        out.update(_attn_specs(
+            cfg, info, degree, layout=layout,
+            seq_shard=seq_shard if kind != CROSS_ATTN else 1))
         if kind == CROSS_ATTN:
             out["c_ln"] = Spec((d,), P(None), jnp.float32, scale=0.0)
             out.update(_attn_specs(cfg, info, degree, prefix="c_",
@@ -269,7 +289,9 @@ def model_specs(cfg: ArchConfig, info: MeshInfo, *,
                 degrees: Optional[Sequence] = None,
                 max_pos: int = 0, layout: str = "auto",
                 virtual_stages: int = 1,
-                schedules: Optional[Sequence[str]] = None) -> Dict[str, Any]:
+                schedules: Optional[Sequence[str]] = None,
+                seqs: Optional[Sequence[int]] = None,
+                seq_shard: int = 1) -> Dict[str, Any]:
     """degrees: optional per-layer TMP degrees (planner mode); each entry
     may be an int (1D), an ``(dx, dy)`` tuple (2D), or ``None`` (follow
     the whole mesh model group — how a mixed-SCHEDULE plan with uniform
@@ -310,9 +332,11 @@ def model_specs(cfg: ArchConfig, info: MeshInfo, *,
             out["tail"] = []
         else:
             out["blocks"] = [
-                _stack(layer_specs(cfg, k, info, layout=layout), n)
+                _stack(layer_specs(cfg, k, info, layout=layout,
+                                   seq_shard=seq_shard), n)
                 for k in pat] if n else []
-            out["tail"] = [layer_specs(cfg, k, info, layout=layout)
+            out["tail"] = [layer_specs(cfg, k, info, layout=layout,
+                                       seq_shard=seq_shard)
                            for k in tail]
     else:
         if info.pp > 1:
@@ -332,9 +356,10 @@ def model_specs(cfg: ArchConfig, info: MeshInfo, *,
                     f"(launch/mesh.py::make_factored_mesh); on a plain "
                     f"mesh only per-layer SCHEDULES may vary")
         out["groups"] = [
-            _stack(layer_specs(cfg, g.kind, info, g.degree, layout=layout),
+            _stack(layer_specs(cfg, g.kind, info, g.degree, layout=layout,
+                               seq_shard=g.seq),
                    g.count)
-            for g in plan_groups(cfg, degrees, schedules)]
+            for g in plan_groups(cfg, degrees, schedules, seqs)]
 
     if cfg.is_encdec:
         n_enc = cfg.encoder_layers
@@ -350,32 +375,35 @@ def model_specs(cfg: ArchConfig, info: MeshInfo, *,
 @dataclass(frozen=True)
 class PlanGroup:
     """One scan group of the grouped (planner-mode) layout: ``count``
-    consecutive layers sharing (kind, degree, schedule)."""
+    consecutive layers sharing (kind, degree, schedule, seq)."""
     kind: str
     degree: Any              # None | int | (dx, dy)
     schedule: str
     count: int
+    seq: int = 1             # ring-attention seq shards (DESIGN.md §12)
 
 
 def plan_groups(cfg: ArchConfig, degrees: Sequence,
-                schedules: Optional[Sequence[str]] = None):
-    """Group consecutive layers sharing (kind, degree, schedule) into scan
-    groups: the executable unit of a per-layer :class:`ParallelPlan`.  A
-    schedule change breaks the group even at equal degree (each group runs
-    under its own ``TmpCtx``/sub-batch split)."""
+                schedules: Optional[Sequence[str]] = None,
+                seqs: Optional[Sequence[int]] = None):
+    """Group consecutive layers sharing (kind, degree, schedule, seq) into
+    scan groups: the executable unit of a per-layer :class:`ParallelPlan`.
+    A schedule or seq-shard change breaks the group even at equal degree
+    (each group runs under its own ``TmpCtx``/sub-batch split)."""
     pat = cfg.layer_pattern
     scheds = list(schedules) if schedules is not None \
         else [None] * cfg.num_layers
+    sq = list(seqs) if seqs is not None else [1] * cfg.num_layers
     groups = []
     i = 0
     while i < cfg.num_layers:
         j = i
         while (j < cfg.num_layers and degrees[j] == degrees[i]
-               and scheds[j] == scheds[i]
+               and scheds[j] == scheds[i] and sq[j] == sq[i]
                and pat[j % len(pat)] == pat[i % len(pat)]):
             j += 1
         groups.append(PlanGroup(pat[i % len(pat)], degrees[i],
-                                scheds[i] or "oases", j - i))
+                                scheds[i] or "oases", j - i, sq[i]))
         i = j
     return groups
 
@@ -547,6 +575,7 @@ def _layer_key(key: str):
 def split_layer_flat(cfg: ArchConfig, flat: Dict[str, np.ndarray], *,
                      degrees: Optional[Sequence] = None,
                      schedules: Optional[Sequence[str]] = None,
+                     seqs: Optional[Sequence[int]] = None,
                      pp: int = 1, virtual_stages: int = 1):
     """Decompose a flat params-like dict into ``(static, per_layer)``:
     ``static`` keeps the non-layer leaves verbatim; ``per_layer[l]`` maps
@@ -563,7 +592,7 @@ def split_layer_flat(cfg: ArchConfig, flat: Dict[str, np.ndarray], *,
             by_slot.setdefault((coll, idx), {})[name] = arr
     per_layer: list = [dict() for _ in range(cfg.num_layers)]
     if degrees is not None:
-        groups = plan_groups(cfg, degrees, schedules)
+        groups = plan_groups(cfg, degrees, schedules, seqs)
         base = 0
         for g, grp in enumerate(groups):
             leaves = by_slot.get(("groups", g), {})
@@ -609,6 +638,7 @@ def pack_layer_flat(cfg: ArchConfig, static: Dict[str, np.ndarray],
                     per_layer, *,
                     degrees: Optional[Sequence] = None,
                     schedules: Optional[Sequence[str]] = None,
+                    seqs: Optional[Sequence[int]] = None,
                     pp: int = 1,
                     virtual_stages: int = 1) -> Dict[str, np.ndarray]:
     """Inverse of :func:`split_layer_flat`: repack canonical per-layer
@@ -616,7 +646,7 @@ def pack_layer_flat(cfg: ArchConfig, static: Dict[str, np.ndarray],
     flat = dict(static)
     if degrees is not None:
         base = 0
-        for g, grp in enumerate(plan_groups(cfg, degrees, schedules)):
+        for g, grp in enumerate(plan_groups(cfg, degrees, schedules, seqs)):
             for name in per_layer[base]:
                 flat[f"['groups'][{g}]{name}"] = np.stack(
                     [per_layer[base + o][name] for o in range(grp.count)])
@@ -674,9 +704,11 @@ def relayout_flat(cfg: ArchConfig, flat: Dict[str, np.ndarray],
     optional; degrees=None means the stacked layout)."""
     static, per_layer = split_layer_flat(
         cfg, flat, degrees=src.get("degrees"),
-        schedules=src.get("schedules"), pp=src.get("pp", 1),
+        schedules=src.get("schedules"), seqs=src.get("seqs"),
+        pp=src.get("pp", 1),
         virtual_stages=src.get("virtual_stages", 1))
     return pack_layer_flat(
         cfg, static, per_layer, degrees=dst.get("degrees"),
-        schedules=dst.get("schedules"), pp=dst.get("pp", 1),
+        schedules=dst.get("schedules"), seqs=dst.get("seqs"),
+        pp=dst.get("pp", 1),
         virtual_stages=dst.get("virtual_stages", 1))

@@ -294,8 +294,13 @@ def plan_layout(plan: ParallelPlan) -> Dict:
     """The relayout descriptor (models/params.relayout_flat) of the
     parameter-tree layout a plan trains under."""
     if plan.grouping_signature()[0] == "grouped":
-        return {"degrees": list(plan.degrees),
-                "schedules": list(plan.schedules)}
+        layout = {"degrees": list(plan.degrees),
+                  "schedules": list(plan.schedules)}
+        if plan.has_seq_layers:
+            # ring-attention seq shards break scan groups exactly like a
+            # schedule change does (models/params.plan_groups)
+            layout["seqs"] = list(plan.seqs)
+        return layout
     # interleaving depth only stacks the params under a pipe axis —
     # normalize v to 1 at pp == 1, mirroring grouping_signature()
     return {"pp": plan.pp,

@@ -209,7 +209,7 @@ class Trainer:
 
         self.step_fn, self.specs = steps_mod.build_train_step(
             cfg, mesh, self.hp, global_batch=global_batch, seq_len=seq_len,
-            degrees=degrees, schedules=schedules)
+            degrees=degrees, schedules=schedules, plan=self.plan)
         # buffer donation deadlocks XLA:CPU's intra-process collective
         # rendezvous (execution only — the dry-run donates at compile time);
         # enable it on real accelerators.

@@ -96,6 +96,18 @@ class ServingEngine:
             hp = plan.apply(hp or TrainHParams())
             if decode_micro == 0:
                 decode_micro = plan.decode_micro
+            if plan.has_seq_layers or plan.seq_shard > 1:
+                # ring-attention seq shards are a training/prefill layout;
+                # the plan carries them for provenance (checkpoint
+                # manifests, relayout) but decode serves head-sharded —
+                # surface the degradation instead of silently dropping it
+                from repro.obs.recorder import get_recorder
+                get_recorder().event(
+                    "serving.seq_shard_ignored",
+                    f"plan {plan.summary()} carries ring-attention seq "
+                    f"shards; decode serves head-sharded (the KV ring "
+                    f"spans training sequences, not the decode cache)",
+                    seq_shard=plan.seq_shard)
         self.hp = hp or TrainHParams()
         self.slots = slots
         self.max_seq = max_seq

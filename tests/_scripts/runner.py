@@ -86,7 +86,8 @@ def flatten(tree):
 
 def train_loss_and_grads(arch_or_cfg, msh, hp: TrainHParams = None, *,
                          batch: int = 4, seq: int = 64, degrees=None,
-                         schedules=None, seed: int = 0, batch_seed: int = 42,
+                         schedules=None, seqs=None, seed: int = 0,
+                         batch_seed: int = 42,
                          canonical_init: bool = False):
     """(loss, flat-grad dict) of the reduced config on a mesh — the body
     every per-feature script used to duplicate.
@@ -102,15 +103,16 @@ def train_loss_and_grads(arch_or_cfg, msh, hp: TrainHParams = None, *,
     hp = hp or TrainHParams()
     loss_fn, specs, _ = lm.build_train_loss(
         cfg, msh, hp, global_batch=batch, seq_len=seq, degrees=degrees,
-        schedules=schedules)
-    if canonical_init and (degrees is not None or schedules is not None):
+        schedules=schedules, seqs=seqs)
+    if canonical_init and (degrees is not None or schedules is not None
+                           or seqs is not None):
         from repro.core.axes import mesh_info
         base_specs = prm.model_specs(cfg, mesh_info(msh), max_pos=seq,
                                      layout=hp.tmp_layout)
         p0 = prm.init_params(base_specs, jax.random.PRNGKey(seed))
         flat = prm.relayout_flat(
             cfg, prm.tree_to_flat(p0), {},
-            _layout_meta(cfg, degrees, schedules, hp))
+            _layout_meta(cfg, degrees, schedules, hp, seqs))
         p = prm.tree_from_flat(specs, flat)
     else:
         p = prm.init_params(specs, jax.random.PRNGKey(seed))
@@ -121,27 +123,40 @@ def train_loss_and_grads(arch_or_cfg, msh, hp: TrainHParams = None, *,
     return loss, flatten(grads)
 
 
-def _layout_meta(cfg, degrees, schedules, hp):
-    """The relayout descriptor of a (degrees, schedules) run — mirrors
-    lm._normalize_strategy's grouping promotion."""
+def _layout_meta(cfg, degrees, schedules, hp, seqs=None):
+    """The relayout descriptor of a (degrees, schedules, seqs) run —
+    mirrors lm._normalize_strategy's grouping promotion.  A uniform
+    seq_shard on the stacked layout keeps the stacked flat keys, so it
+    needs no relayout; only mixed seqs force the grouped layout."""
+    seq_uniform = 1
+    if seqs is not None and len(set(seqs)) == 1:
+        seq_uniform, seqs = seqs[0], None
     if schedules is not None and len(set(schedules)) == 1:
         schedules = None
-    if degrees is None and schedules is None:
+    if degrees is None and schedules is None and seqs is None:
         return {}
     degs = list(degrees) if degrees is not None \
         else [None] * cfg.num_layers
     scheds = (list(schedules) if schedules is not None
               else [hp.schedule] * cfg.num_layers)
-    return {"degrees": degs, "schedules": scheds}
+    meta = {"degrees": degs, "schedules": scheds}
+    seq_all = seq_uniform if seq_uniform > 1 \
+        else getattr(hp, "seq_shard", 1)
+    if seqs is not None:
+        meta["seqs"] = list(seqs)
+    elif seq_all > 1:
+        meta["seqs"] = [seq_all] * cfg.num_layers
+    return meta
 
 
 def canonical_grads(arch_or_cfg, g: dict, *, degrees=None, schedules=None,
-                    hp: TrainHParams = None) -> dict:
+                    seqs=None, hp: TrainHParams = None) -> dict:
     """Relayout a grouped run's flat grad dict back into the canonical
     stacked layout for oracle comparison."""
     cfg = (reduced_config(arch_or_cfg) if isinstance(arch_or_cfg, str)
            else arch_or_cfg)
-    meta = _layout_meta(cfg, degrees, schedules, hp or TrainHParams())
+    meta = _layout_meta(cfg, degrees, schedules, hp or TrainHParams(),
+                        seqs)
     return prm.relayout_flat(cfg, g, meta, {}) if meta else g
 
 

@@ -113,6 +113,19 @@ def test_sequence_parallel_equivalence():
 
 @multidevice
 @pytest.mark.slow
+def test_ring_attention_equivalence():
+    """Ring attention (PR acceptance, DESIGN.md §12): the 8-way KV-ring
+    kernel matches the 1-device oracle forward AND backward (custom-VJP
+    reverse ring) across fp32/bf16 x causal/sliding-window/GQA/softcap
+    and uneven sequence tiles; the stacked and grouped (mixed per-layer
+    seqs) model paths are loss/grad-identical to the unsharded model;
+    unsatisfiable shard factors raise instead of silently degrading."""
+    lines = _run("ring_equivalence.py", timeout=1800)
+    assert len(lines) >= 18
+
+
+@multidevice
+@pytest.mark.slow
 def test_pipeline_equivalence():
     """Interleaved-1F1B PP x TMP vs the single-device oracle: pp in {2,4}
     x tmp in {1,2} x {megatron,oases,fused}, plus virtual stages, a second

@@ -36,6 +36,30 @@ def test_flash_attention_sweep(dtype, b, s, h, kvh, hd, kwargs):
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("b,s,h,kvh,hd,kwargs", [
+    # seq NOT divisible by the 64-wide blocks: masked tail tiles must not
+    # leak into the online softmax
+    (1, 100, 2, 2, 64, dict(causal=True)),
+    (2, 80, 4, 2, 32, dict(causal=True, window=24)),
+    # sliding window narrower than one KV block: the live band is a
+    # sub-block diagonal strip, so block-skip must keep partial blocks
+    (1, 160, 4, 1, 64, dict(causal=True, window=16)),
+    # logit softcap composed with grouped-query heads
+    (1, 128, 8, 2, 64, dict(causal=True, softcap=30.0)),
+    (2, 96, 8, 2, 32, dict(causal=True, window=48, softcap=30.0)),
+])
+def test_flash_attention_edge_cases(dtype, b, s, h, kvh, hd, kwargs):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd), dtype)
+    kk = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, hd), dtype)
+    o = ops.flash_attention(q, kk, v, interpret=True, block_q=64,
+                            block_k=64, **kwargs)
+    r = ref.attention_ref(q, kk, v, **kwargs)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("rows,d", [(64, 128), (33, 256), (257, 512)])
 def test_rmsnorm_sweep(dtype, rows, d):
     x = jax.random.normal(jax.random.PRNGKey(3), (rows, d), dtype)

@@ -186,6 +186,109 @@ def test_mixed_schedule_estimate_exposes_transition():
 
 
 # --------------------------------------------------------------------------
+# seq axis: ring attention in the per-layer search (seq="auto")
+# --------------------------------------------------------------------------
+# The regime where the plan's THIRD axis pays: long context (32k) on the
+# commodity fixture with the memory cap below every head-sharded option.
+# At one-sample microbatches the gathered-sequence residuals dominate
+# Eq. 6 and no degree can shrink them — head-sharding divides weights,
+# not saved activations — so every degree-only plan is infeasible and the
+# ILP falls back to the NIC-spanning uniform-16 (250 s/iter).  Ring
+# attention shards the sequence itself: the (1 - 1/n) residual saving
+# buys back the replicated attention weights at d_model = 2048, and the
+# KV ring hides under the attention block, so the seq-enabled search
+# keeps the whole stack on fast intra-node degree 8.
+SEQ_ARCH = "internlm2-1.8b"
+SEQ_CAP = 10.8e9
+# (degree, schedule, seq) -> layer count; ring layers consolidated to the
+# tail of the stack (_consolidate_seqs), count set by the memory row
+SEQ_GOLDEN = {(8, "oases", 1): 11, (8, "oases", 8): 13}
+
+
+def _seq_case(seq):
+    cfg = get_config(SEQ_ARCH)
+    return cfg, plan(cfg, SHAPES["prefill_32k"], TrainHParams(),
+                     COMMODITY_25GBE, options=(8, 16), mem_cap=SEQ_CAP,
+                     schedules="auto", seq=seq, time_limit=30.0)
+
+
+def test_seq_axis_plan_pinned():
+    cfg, r = _seq_case("auto")
+    got = {}
+    for d, s, q in zip(r.degrees, r.schedules, r.seqs):
+        key = (d if isinstance(d, int) else tuple(d), s, q)
+        got[key] = got.get(key, 0) + 1
+    assert got == SEQ_GOLDEN, r.summary()
+    assert r.status == "0", r.summary()
+    # ring layers are consolidated into one contiguous tail run
+    assert r.seqs == sorted(r.seqs), r.seqs
+    # the result IS an executable plan: mesh-following degrees on the
+    # plain (data, model) mesh, the seq axis pinned per layer
+    assert r.plan is not None and r.plan.planned_seqs == tuple(r.seqs)
+    assert all(ls.degree is None for ls in r.plan.layers)
+    assert r.plan.mesh_shape and r.plan.mesh_axes[-1] == "model"
+    from repro.core.plan import ParallelPlan
+    assert ParallelPlan.from_json(r.plan.to_json()) == r.plan
+
+
+def test_seq_axis_beats_every_degree_only_plan():
+    """The acceptance shape of the seq axis: under the long-context
+    memory cap the seq-sharded plan is feasible and far cheaper than the
+    best the degree-only search can do (which is infeasible here and
+    falls back to the NIC-spanning uniform max degree)."""
+    cfg, r = _seq_case("auto")
+    assert any(q > 1 for q in r.seqs), r.summary()
+    d = _seq_case("none")[1]
+    assert d.status.startswith("fallback"), d.summary()
+    assert r.predicted_s < 0.5 * d.predicted_s, (r.summary(), d.summary())
+    # and the estimator agrees with the pinned decision's feasibility
+    est = estimate_iteration(cfg, SHAPES["prefill_32k"], TrainHParams(),
+                             r.degrees, COMMODITY_25GBE, options=(8, 16),
+                             schedules=r.schedules, seqs=r.seqs)
+    assert est["iter_s"] == pytest.approx(r.predicted_s, rel=1e-9)
+
+
+def test_seq_axis_idle_on_free_memory():
+    """With the cap lifted, ring stays off: head-sharding is modeled as
+    no slower and the tie-break prefers seq == 1, so seq='auto' must
+    reproduce the degree-only decision exactly."""
+    cfg = get_config(SEQ_ARCH)
+    a = plan(cfg, SHAPES["prefill_32k"], TrainHParams(), COMMODITY_25GBE,
+             options=(8, 16), schedules="auto", time_limit=30.0)
+    b = plan(cfg, SHAPES["prefill_32k"], TrainHParams(), COMMODITY_25GBE,
+             options=(8, 16), schedules="auto", seq="auto",
+             time_limit=30.0)
+    assert (a.degrees, a.schedules) == (b.degrees, b.schedules)
+    assert all(q == 1 for q in b.seqs)
+    assert a.predicted_s == pytest.approx(b.predicted_s, rel=1e-12)
+
+
+def test_seq_transitions_charged():
+    """Every seq-axis boundary costs a residual regather: a fragmented
+    ring assignment must estimate strictly worse than the same ring
+    count consolidated into one run."""
+    cfg = get_config(SEQ_ARCH)
+    L = cfg.num_layers
+    frag = [8 if i % 2 else 1 for i in range(L)]
+    cons = sorted(frag)
+    e_frag = estimate_iteration(cfg, SHAPES["prefill_32k"], TrainHParams(),
+                                [8] * L, COMMODITY_25GBE, options=(8,),
+                                seqs=frag)
+    e_cons = estimate_iteration(cfg, SHAPES["prefill_32k"], TrainHParams(),
+                                [8] * L, COMMODITY_25GBE, options=(8,),
+                                seqs=cons)
+    assert e_cons["iter_s"] < e_frag["iter_s"]
+    assert e_cons["mem_bytes"] == pytest.approx(e_frag["mem_bytes"])
+
+
+def test_seq_axis_param_validation():
+    cfg = get_config(SEQ_ARCH)
+    with pytest.raises(ValueError, match="seq"):
+        plan(cfg, SHAPES["prefill_32k"], TrainHParams(), COMMODITY_25GBE,
+             seq="wat")
+
+
+# --------------------------------------------------------------------------
 # serving latency objective (plan(objective="latency") -> plan_serving)
 # --------------------------------------------------------------------------
 # The latency regime: a handful of concurrent decode slots at moderate KV
