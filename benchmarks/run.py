@@ -214,6 +214,18 @@ def main() -> None:
               f"pp={r.pp};tok_per_s={r.tok_per_s:.0f}")
     report["serving_latency_planner"] = serving
 
+    # serving-path throughput ladder (dense -> paged -> +prefix -> +spec)
+    # on the real engine: deterministic step counts feed the BENCH gate,
+    # wall-clock tokens/s and TTFT stay in the report (host-dependent).
+    # Runs under --dry-run too — the engine ladder is the CI smoke that
+    # keeps the serving path from bit-rotting.
+    from benchmarks import serving_throughput
+    st = serving_throughput.run()
+    report["serving_throughput"] = st
+    for name, row in st["variants"].items():
+        print(f"serve_tp/{name},{row['ttft_ms']*1e3:.0f},"
+              f"steps={row['steps']};tok_s={row['tok_per_s']}")
+
     d = ensure_results_dir()
     with open(os.path.join(d, "bench_report.json"), "w") as f:
         json.dump(report, f, indent=1)
@@ -236,6 +248,7 @@ def main() -> None:
         "joint_pp_planner": joint,
         "serving_latency_planner": serving,
         "mixed_schedule_planner": mixed,
+        "serving_throughput": serving_throughput.bench_fields(st),
     }
     if measured is not None:
         bench["measured"] = measured

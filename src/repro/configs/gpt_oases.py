@@ -39,6 +39,16 @@ PAPER_TABLE5 = {
     "gpt-39.1b": (_gpt("gpt-39.1b", 8192, 48, 64), 4, 8, 1),
 }
 
+# Serving-path fixtures (not in the paper's tables): a deep decode target
+# whose per-layer collective latency floor dominates the step on commodity
+# links, and the small draft model the speculative-decoding planner weighs
+# against it (tests/test_planner_golden.py pins the spec_k choices these
+# produce per cluster fixture).
+SERVING_MODELS = {
+    "gpt-serve-h4096": _gpt("gpt-serve-h4096", 4096, 64, 32),
+    "gpt-draft-h2048": _gpt("gpt-draft-h2048", 2048, 12, 16),
+}
+
 PAPER_SEQ_LEN = 1024
 
 

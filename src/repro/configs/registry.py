@@ -35,6 +35,8 @@ _ARCHS = {
 # The paper's own models are addressable too (benchmarks use them).
 for _k, (_cfg, *_rest) in {**gpt_oases.PAPER_TABLE4, **gpt_oases.PAPER_TABLE5}.items():
     _ARCHS[_cfg.name] = _cfg
+for _cfg in gpt_oases.SERVING_MODELS.values():
+    _ARCHS[_cfg.name] = _cfg
 
 ASSIGNED = [
     "internlm2-20b",

@@ -185,7 +185,7 @@ def pipeline_apply(stage_fn: Callable, x_micro, *, pipe_axis: str, pp: int,
 
 
 def decode_stream(stage_fn: Callable, x_micro, state, *, pipe_axis: str,
-                  pp: int, virtual_stages: int = 1
+                  pp: int, virtual_stages: int = 1, paged: bool = False
                   ) -> Tuple[jax.Array, object]:
     """Stream decode micro-steps through the pipeline stages.
 
@@ -216,6 +216,13 @@ def decode_stream(stage_fn: Callable, x_micro, state, *, pipe_axis: str,
     single-device oracle.  Returns ``(out [n_micro, mb, ...], state)``
     where ``out`` is valid on the last stage's shards (combine with
     :func:`mask_to_last_stage` + a psum over ``pipe`` to broadcast).
+
+    ``paged=True``: cache leaves are page *pools*
+    ``[v, 1, per_stage, pages, ...]`` with no batch axis — every
+    micro-group reads/writes the shared pool through its own block-table
+    rows, so the stage gets the full pool and an out-of-window tick's
+    pool update is discarded wholesale (its gather/scatter targeted live
+    pages of the clipped micro-group).
     """
     v = max(virtual_stages, 1)
     stages = pp * v
@@ -226,12 +233,17 @@ def decode_stream(stage_fn: Callable, x_micro, state, *, pipe_axis: str,
     tmap = jax.tree_util.tree_map
 
     def slice_state(st, c, start):
+        if paged:
+            return tmap(lambda leaf: leaf[c, 0], st)
         return tmap(lambda leaf: lax.dynamic_slice_in_dim(
             leaf[c, 0], start, mb, axis=1), st)
 
     def write_state(st, c, start, new, valid):
         def upd(leaf, nl):
             cur = leaf[c, 0]
+            if paged:
+                return leaf.at[c, 0].set(
+                    jnp.where(valid, nl.astype(leaf.dtype), cur))
             nxt = lax.dynamic_update_slice_in_dim(
                 cur, nl.astype(leaf.dtype), start, axis=1)
             return leaf.at[c, 0].set(jnp.where(valid, nxt, cur))

@@ -751,8 +751,18 @@ def p2p_hop_seconds(cfg: ArchConfig, shape: ShapeConfig, hw: HWConfig,
 # --------------------------------------------------------------------------
 # serving latency model (per-token decode, batch = concurrent slots)
 # --------------------------------------------------------------------------
+def _gather_eff(page_size: int) -> float:
+    """HBM efficiency of reading a KV cache through a block table: each
+    page is a separate (strided) DMA paying a fixed ~2-row startup against
+    ``page_size`` contiguous rows.  0 = dense layout (no discount)."""
+    if page_size <= 0:
+        return 1.0
+    return page_size / (page_size + 2.0)
+
+
 def _decode_layer_time(cfg: ArchConfig, kind: str, hw: HWConfig, degree,
-                       rows: int, kv_len: int, schedule: str) -> float:
+                       rows: int, kv_len: int, schedule: str, *,
+                       q_tokens: int = 1, page_size: int = 0) -> float:
     """One layer's decode-step seconds for ``rows`` slot rows at KV context
     ``kv_len`` under per-stage degree ``(dx, dy)``.
 
@@ -764,24 +774,31 @@ def _decode_layer_time(cfg: ArchConfig, kind: str, hw: HWConfig, degree,
     serial and has nothing to hide behind at single-token shapes — the
     overlap term saturates, which is what pushes the latency planner off
     wide rings (toward 2D splits or pipeline stages) on commodity links.
+
+    ``q_tokens > 1`` models a speculative *verify* forward: flops and
+    collective payloads scale with the extra tokens per row but the weight
+    stream and the KV read do not, and the per-hop latency floor is paid
+    ONCE — that amortization is the entire speculative-decoding win.
+    ``page_size`` applies the paged-cache gather discount to the KV read.
     """
     dx, dy = _dxy(degree)
     n = dx * dy
     total = 0.0
-    for blk in _block_costs(cfg, kind, rows, kv_len):
+    for blk in _block_costs(cfg, kind, rows * q_tokens, kv_len):
         w_bytes = blk.params * hw.bytes_act / n
         kv_bytes = 0.0
         if blk.name in ("attn", "xattn"):
             kv_bytes = (2.0 * rows * kv_len * cfg.num_kv_heads
-                        * cfg.resolved_head_dim * hw.bytes_act / dx)
+                        * cfg.resolved_head_dim * hw.bytes_act / dx
+                        / _gather_eff(page_size))
         width = max(cfg.d_ff, cfg.num_heads * cfg.resolved_head_dim) // dx
-        eff = _mxu_eff(hw, width, rows)
+        eff = _mxu_eff(hw, width, rows * q_tokens)
         d = max((w_bytes + kv_bytes) / hw.hbm_bw,
                 blk.flops_fwd / n / (hw.peak_flops * eff))
         if not blk.n_collectives:
             total += d
             continue
-        k_bytes = rows * cfg.d_model * hw.bytes_act
+        k_bytes = rows * q_tokens * cfg.d_model * hw.bytes_act
         c_bw = c_lat = 0.0
         if dx > 1:
             c_bw += (k_bytes / dy) * 2.0 * (dx - 1) / dx / hw.ring_bw(dx)
@@ -818,7 +835,10 @@ def _decode_head_time(cfg: ArchConfig, hw: HWConfig, rows: int,
 
 def decode_step_time(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                      hw: HWConfig, degree=1, pp: int = 1, *,
-                     virtual_stages: int = 1, n_micro: int = 0) -> Dict:
+                     virtual_stages: int = 1, n_micro: int = 0,
+                     page_size: int = 0, spec_k: int = 0,
+                     spec_accept: float = 0.8,
+                     draft: Optional[ArchConfig] = None) -> Dict:
     """Per-engine-step latency of sharded decode on a ``(dx, dy, pp)``
     serving mesh — one token for every one of ``shape.global_batch``
     concurrent slots at KV context ``shape.seq_len``.
@@ -831,6 +851,18 @@ def decode_step_time(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     on one micro-group — fewer layers per tick, but the stage weights
     re-stream from HBM once per micro-group, which is the latency/
     throughput trade the planner arbitrates.
+
+    ``page_size > 0`` applies the paged-KV gather discount to the cache
+    read.  ``spec_k > 0`` models a speculative round instead of a single
+    step: ``spec_k + 1`` forwards of the (replicated, dense-cache)
+    ``draft`` model plus one ``q_tokens = spec_k + 1`` verify forward of
+    the target, emitting ``E = (1 - a^(k+1)) / (1 - a)`` expected tokens
+    per slot (``a = spec_accept``).  The reported ``step_s`` is the
+    per-emitted-token equivalent ``round_s / E``, directly comparable to
+    the undrafted step — speculative wins exactly where the target step
+    is dominated by the per-layer collective latency floor (commodity
+    links), because the verify pays that floor once per ``E`` tokens
+    while the draft, being replicated, pays none at all.
     """
     batch = max(shape.global_batch, 1)
     kv_len = shape.seq_len
@@ -838,10 +870,21 @@ def decode_step_time(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     v = max(virtual_stages, 1)
     dx, dy = _dxy(degree)
     n_s = dx * dy
+    if spec_k > 0:
+        if draft is None:
+            raise ValueError(
+                "spec_k > 0 needs a draft ArchConfig — the round time is "
+                "(k+1) draft forwards + one verify forward")
+        if pp > 1:
+            raise ValueError(
+                "speculative decoding does not compose with pipeline "
+                "stages (lm.build_verify rejects 'pipe' meshes) — model "
+                "spec_k on pp=1 candidates only")
 
     if pp <= 1:
         layers = sum(_decode_layer_time(cfg, pat[i % len(pat)], hw, degree,
-                                        batch, kv_len, hp.schedule)
+                                        batch, kv_len, hp.schedule,
+                                        page_size=page_size)
                      for i in range(cfg.num_layers))
         total = layers + _decode_head_time(cfg, hw, batch, n_s)
         micro, t_hop = 1, 0.0
@@ -854,7 +897,7 @@ def decode_step_time(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
         mb = batch // micro
         per_tick = sum(
             _decode_layer_time(cfg, pat[i % len(pat)], hw, degree, mb,
-                               kv_len, hp.schedule)
+                               kv_len, hp.schedule, page_size=page_size)
             for i in range(cfg.num_layers)) / pp
         chips = max(hw.n_chips // pp, 1)
         ns = hw.node_size or hw.n_chips
@@ -869,6 +912,27 @@ def decode_step_time(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                   / bw + 2 * (pp - 1) * lat)
         total += _decode_head_time(cfg, hw, batch, n_s)
 
+    e_tokens = 1.0
+    if spec_k > 0:
+        # one round: k+1 draft forwards (replicated — degree 1, dense
+        # cache, no collectives) + one (k+1)-token verify of the target
+        dpat = draft.layer_pattern
+        draft_s = sum(
+            _decode_layer_time(draft, dpat[i % len(dpat)], hw, 1, batch,
+                               kv_len, hp.schedule)
+            for i in range(draft.num_layers))
+        draft_s += _decode_head_time(draft, hw, batch, 1)
+        verify_s = sum(
+            _decode_layer_time(cfg, pat[i % len(pat)], hw, degree, batch,
+                               kv_len, hp.schedule, q_tokens=spec_k + 1,
+                               page_size=page_size)
+            for i in range(cfg.num_layers))
+        verify_s += _decode_head_time(cfg, hw, batch * (spec_k + 1), n_s)
+        a = min(max(spec_accept, 0.0), 0.999)
+        e_tokens = (1.0 - a ** (spec_k + 1)) / (1.0 - a)
+        round_s = (spec_k + 1) * draft_s + verify_s
+        total = round_s / e_tokens
+
     # memory: bf16 weights /(pp * n_s) per chip + the KV cache of the
     # stage's layers, head-sharded over dx
     params = sum(b.params for i in range(cfg.num_layers)
@@ -881,8 +945,21 @@ def decode_step_time(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                                              CROSS_ATTN))
     mem += (kv_layers / pp) * (2.0 * batch * kv_len * cfg.num_kv_heads
                                * cfg.resolved_head_dim * hw.bytes_act / dx)
+    if spec_k > 0:
+        # replicated draft weights + its dense KV cache on every chip
+        dpat = draft.layer_pattern
+        dparams = sum(b.params for i in range(draft.num_layers)
+                      for b in _block_costs(draft, dpat[i % len(dpat)], 1,
+                                            kv_len))
+        mem += dparams * hw.bytes_act
+        mem += (draft.padded_vocab() * draft.d_model * hw.bytes_act
+                + draft.num_layers * 2.0 * batch * kv_len
+                * draft.num_kv_heads * draft.resolved_head_dim
+                * hw.bytes_act)
+    # with spec, step_s is already round_s / E, so batch / step_s IS the
+    # emitted-token throughput
     return {"step_s": total, "tok_per_s": batch / total,
-            "n_micro": micro, "t_hop": t_hop,
+            "n_micro": micro, "t_hop": t_hop, "e_tokens": e_tokens,
             "mem_bytes": mem, "fits": mem < hw.hbm_cap}
 
 

@@ -915,14 +915,17 @@ class ServingPlanResult:
     solve_ms: float
     status: str
     plan: Optional[object] = None          # executable ParallelPlan
+    spec_k: int = 0                        # chosen speculative depth (0 = off)
+    page_size: int = 0                     # paged-KV block size (0 = dense)
 
     @property
     def dxy(self) -> Tuple[int, int]:
         return cm._dxy(self.degree)
 
     def summary(self) -> str:
-        return (f"serve pp={self.pp} x [{_fmt_degree(self.degree)}] "
-                f"m={self.n_micro} predicted "
+        spec = f" spec_k={self.spec_k}" if self.spec_k else ""
+        return (f"serve pp={self.pp} x [{_fmt_degree(self.degree)}]"
+                f"{spec} m={self.n_micro} predicted "
                 f"{self.predicted_s*1e3:.2f} ms/token "
                 f"({self.tok_per_s:.0f} tok/s; tmp-only "
                 f"{self.tmp_only_s*1e3:.2f} ms; {self.status})")
@@ -934,7 +937,11 @@ def plan_serving(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                  mem_cap: Optional[float] = None,
                  layout: str = "auto",
                  pp_options: Optional[Sequence[int]] = None,
-                 virtual_stages: int = 1) -> ServingPlanResult:
+                 virtual_stages: int = 1,
+                 spec_options: Sequence[int] = (0,),
+                 draft: Optional[ArchConfig] = None,
+                 spec_accept: float = 0.8,
+                 page_size: int = 0) -> ServingPlanResult:
     """Search ``(dx, dy, pp)`` serving meshes for minimum per-token decode
     latency (``costmodel.decode_step_time``).
 
@@ -947,11 +954,27 @@ def plan_serving(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
     latency-bound, so on commodity fixtures wide 1D rings that span boxes
     lose to 2D splits or cross-box pipeline stages; on a uniform NVLink
     box the 1D ring stays optimal.  Ties break toward fewer stages, then
-    the 1D layout, then the thinnest y split.
+    the 1D layout, then the thinnest y split, then the smallest spec_k.
+
+    ``spec_options`` adds speculative depths to the search (``draft`` is
+    the proposer ArchConfig, required for any k > 0; ``spec_accept`` is
+    the modeled per-token acceptance rate).  Speculation composes with
+    pp=1 candidates only (``lm.build_verify`` rejects pipe meshes), so a
+    pipeline candidate competes at k=0.  The latency floor the verify
+    amortizes is exactly the per-layer collective latency, so commodity
+    fixtures pick k > 1 while a uniform fast box keeps k at 0 or 1
+    (pinned in tests/test_planner_golden.py).  ``page_size`` threads the
+    paged-KV gather discount into every candidate.
     """
     t0 = time.perf_counter()
     cap = mem_cap if mem_cap is not None else hw.hbm_cap
     v = max(virtual_stages, 1)
+    spec_ks = sorted({int(k) for k in spec_options})
+    if any(k > 0 for k in spec_ks) and draft is None:
+        raise ValueError(
+            f"spec_options {tuple(spec_options)} include k > 0 but no "
+            f"draft model was given — pass draft=<ArchConfig> (e.g. "
+            f"get_config('gpt-draft-h2048'))")
     candidates = []
     for n_total in (int(n) for n in options):
         pps = list(pp_options) if pp_options is not None \
@@ -961,20 +984,26 @@ def plan_serving(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
                 continue
             n_s = n_total // pp
             for deg in expand_options(cfg, hw, [n_s], layout):
-                est = cm.decode_step_time(cfg, shape, hp, hw, deg, pp,
-                                          virtual_stages=v)
-                dx, dy = cm._dxy(deg)
-                fits = est["mem_bytes"] < cap
-                candidates.append((est["step_s"], pp, dy, dx, deg, est,
-                                   fits))
+                for k in spec_ks:
+                    if k > 0 and pp > 1:
+                        continue
+                    est = cm.decode_step_time(
+                        cfg, shape, hp, hw, deg, pp, virtual_stages=v,
+                        page_size=page_size, spec_k=k,
+                        spec_accept=spec_accept,
+                        draft=draft if k > 0 else None)
+                    dx, dy = cm._dxy(deg)
+                    fits = est["mem_bytes"] < cap
+                    candidates.append((est["step_s"], pp, dy, dx, k, deg,
+                                       est, fits))
     if not candidates:
         raise ValueError(
             f"no feasible (degree, pp) serving candidates for {cfg.name} "
             f"on {hw.n_chips} chips with options {tuple(options)}")
-    fitting = [c for c in candidates if c[6]] or candidates
-    best = min(fitting, key=lambda c: c[:4])
-    tmp_only = [c for c in candidates if c[1] == 1]
-    _, pp, _, _, deg, est, fits = best
+    fitting = [c for c in candidates if c[7]] or candidates
+    best = min(fitting, key=lambda c: c[:5])
+    tmp_only = [c for c in candidates if c[1] == 1 and c[4] == 0]
+    _, pp, _, _, spec_k, deg, est, fits = best
     return _telemetry_plan("plan_serving", ServingPlanResult(
         degree=deg, pp=pp, n_micro=est["n_micro"],
         predicted_s=est["step_s"], tok_per_s=est["tok_per_s"],
@@ -982,6 +1011,7 @@ def plan_serving(cfg: ArchConfig, shape: ShapeConfig, hp: TrainHParams,
         tmp_only_s=min(c[0] for c in tmp_only) if tmp_only else float("inf"),
         solve_ms=(time.perf_counter() - t0) * 1e3,
         status="fits" if fits else "over-memory",
+        spec_k=spec_k, page_size=page_size,
         plan=_as_plan(hp, [deg] * cfg.num_layers,
                       [hp.schedule] * cfg.num_layers, pp=pp,
                       virtual_stages=v if pp > 1 else 1,

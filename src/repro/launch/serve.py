@@ -20,6 +20,12 @@ engine, on single-device or TMP / pipeline-parallel meshes.
     # latency planner's .plan) — one file instead of the flag soup
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --reduced --plan plan.json
+
+    # production-throughput path: paged KV blocks + prefix reuse +
+    # speculative decoding (greedy, token-identical to undrafted decode)
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --reduced --paged --page-size 8 --prefix-cache \
+        --draft internlm2-1.8b --spec-k 3
 """
 from __future__ import annotations
 
@@ -73,6 +79,29 @@ def main():
                     help="print the latency-objective serving plan "
                          "(plan(objective='latency')) for this arch on a "
                          "fixture HWConfig before serving")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: fixed-size blocks in a shared "
+                         "page pool with per-slot block tables "
+                         "(serving/paged_cache.py); admission becomes "
+                         "reservation-based with cache-full backpressure")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="physical pages in the pool incl. the null page "
+                         "(0 = auto: every slot can still reach max_seq)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (max_seq must divide evenly)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="reuse cached prompt blocks across requests "
+                         "(block-granular hashing, refcounted pages, COW "
+                         "on first divergent write); requires --paged")
+    ap.add_argument("--draft", default="", metavar="CONFIG",
+                    help="draft model config for speculative decoding "
+                         "(e.g. mamba2-130m; reduced alongside --reduced); "
+                         "pair with --spec-k")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="draft tokens proposed per speculative round "
+                         "(greedy acceptance is token-identical to "
+                         "undrafted decode; plan_serving picks k per "
+                         "cluster fixture)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--telemetry", default="", metavar="DIR",
                     help="write structured telemetry (JSONL) under DIR: "
@@ -122,9 +151,18 @@ def main():
                                      plan_file=args.plan,
                                      save_plan=args.save_plan,
                                      decode_micro=args.decode_micro)
+    draft_cfg = None
+    if args.draft:
+        draft_cfg = get_config(args.draft)
+        if args.reduced:
+            draft_cfg = draft_cfg.reduced().replace(dtype="float32")
     eng = ServingEngine(cfg, mesh, slots=args.slots, max_seq=args.max_seq,
                         hp=hp, prefill_len=args.prefill_len or None,
-                        plan=pplan, telemetry=telemetry)
+                        plan=pplan, telemetry=telemetry,
+                        paged=args.paged, pages=args.pages,
+                        page_size=args.page_size,
+                        prefix_cache=args.prefix_cache,
+                        draft=draft_cfg, spec_k=args.spec_k)
     eng.load(seed=args.seed)
 
     rng = np.random.default_rng(args.seed)

@@ -113,6 +113,69 @@ def chunked_attention(q, k, v, *, causal: bool = True,
     return out.astype(q.dtype)
 
 
+def gather_pages(pages, tables):
+    """Materialize a slot-contiguous KV view from a page pool.
+
+    pages [P, page, kvh, hd]; tables [b, nb] int32 -> [b, nb*page, kvh, hd].
+    With ``max_seq % page == 0`` the gathered view has exactly the dense
+    cache's length, so the masked softmax downstream is bitwise identical
+    to the dense path (unmapped entries read the null page and are masked
+    to NEG_INF either way)."""
+    g = pages[tables]                       # [b, nb, page, kvh, hd]
+    b, nb, page, kvh, hd = g.shape
+    return g.reshape(b, nb * page, kvh, hd)
+
+
+def paged_decode_attention(q, k_pages, v_pages, tables, pos, *,
+                           softcap: float = 0.0,
+                           scale: Optional[float] = None):
+    """Single-token decode attention reading through a block table.
+
+    q [b, 1, h, hd]; k_pages/v_pages [P, page, kvh, hd];
+    tables [b, nb] physical page per logical block.  The reference path:
+    gather pages into the dense layout and reuse :func:`decode_attention`
+    unchanged (global attention only — local ring buffers stay dense)."""
+    k = gather_pages(k_pages, tables)
+    v = gather_pages(v_pages, tables)
+    return decode_attention(q, k, v, pos, window=None, softcap=softcap,
+                            scale=scale)
+
+
+def decode_attention_multi(q, k_cache, v_cache, pos, *, softcap: float = 0.0,
+                           scale: Optional[float] = None):
+    """Multi-token (speculative verify) decode attention over a KV cache.
+
+    q [b, qn, h, hd] carries qn consecutive tokens at absolute positions
+    ``pos + j``; cache entry at slot s is visible to query j iff
+    s <= pos + j (entries for the block itself were written by the caller
+    before attending, mirroring single-token decode's write-then-attend).
+    Returns [b, qn, h, hd]."""
+    b, qn, h, hd = q.shape
+    _, S, kvh, _ = k_cache.shape
+    g = h // kvh
+    scale = scale if scale is not None else hd ** -0.5
+    qf = (q * scale).reshape(b, qn, kvh, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k_cache.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    slots = jnp.arange(S, dtype=jnp.int32)[None, None, :]        # [1, 1, S]
+    qpos = pos[:, None] + jnp.arange(qn, dtype=jnp.int32)[None, :]
+    valid = slots <= qpos[:, :, None]                            # [b, qn, S]
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bkgqh", p, v_cache.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, qn, h, hd).astype(q.dtype)
+
+
+def paged_decode_attention_multi(q, k_pages, v_pages, tables, pos, *,
+                                 softcap: float = 0.0,
+                                 scale: Optional[float] = None):
+    """Multi-token verify attention through a block table (paged cache)."""
+    k = gather_pages(k_pages, tables)
+    v = gather_pages(v_pages, tables)
+    return decode_attention_multi(q, k, v, pos, softcap=softcap, scale=scale)
+
+
 def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int] = None,
                      softcap: float = 0.0, scale: Optional[float] = None,
                      ring: bool = False):

@@ -22,7 +22,10 @@ from repro.core import tmp as tmpc
 from repro.core.schedule import TmpCtx
 from repro.models import rglru as rglru_m
 from repro.models import ssd as ssd_m
-from repro.models.attention import (chunked_attention, decode_attention, rope)
+from repro.models.attention import (chunked_attention, decode_attention,
+                                    decode_attention_multi,
+                                    paged_decode_attention,
+                                    paged_decode_attention_multi, rope)
 from repro.models.params import attn_plan, ssd_dims
 
 ZERO = jnp.float32(0.0)
@@ -384,15 +387,39 @@ def decode_fn(cfg: ArchConfig, ctx: TmpCtx, kind: str) -> Callable:
         if kind in (GLOBAL_ATTN, LOCAL_ATTN, CROSS_ATTN):
             h = _norm(x, p["ln"], cfg.norm_eps)
             q, k, v, plan = _qkv(cfg, ctx, p, h, pos[:, None])
-            S = st["k"].shape[1]
-            slot = (pos % S) if is_local else pos
             bidx = jnp.arange(b, dtype=jnp.int32)
             st = dict(st)
-            st["k"] = st["k"].at[bidx, slot].set(k[:, 0].astype(st["k"].dtype))
-            st["v"] = st["v"].at[bidx, slot].set(v[:, 0].astype(st["v"].dtype))
-            o = decode_attention(q, st["k"], st["v"], pos,
-                                 window=cfg.window if is_local else None,
-                                 softcap=cfg.attn_softcap, ring=is_local)
+            if kind == GLOBAL_ATTN and "tables" in aux:
+                # paged cache: st["k"]/["v"] are page pools
+                # [pages, page, kvh, hd]; the slot's block table maps its
+                # current logical block to a physical page.  Inactive
+                # slots carry all-zero tables and write the null page.
+                tables = aux["tables"]                 # [b, nb] int32
+                page = st["k"].shape[1]
+                phys = tables[bidx, pos // page]
+                off = pos % page
+                st["k"] = st["k"].at[phys, off].set(
+                    k[:, 0].astype(st["k"].dtype))
+                st["v"] = st["v"].at[phys, off].set(
+                    v[:, 0].astype(st["v"].dtype))
+                if ctx.use_pallas and jax.default_backend() == "tpu":
+                    from repro.kernels.flash_attention import \
+                        paged_flash_decode
+                    o = paged_flash_decode(q, st["k"], st["v"], tables, pos,
+                                           softcap=cfg.attn_softcap)
+                else:
+                    o = paged_decode_attention(q, st["k"], st["v"], tables,
+                                               pos, softcap=cfg.attn_softcap)
+            else:
+                S = st["k"].shape[1]
+                slot = (pos % S) if is_local else pos
+                st["k"] = st["k"].at[bidx, slot].set(
+                    k[:, 0].astype(st["k"].dtype))
+                st["v"] = st["v"].at[bidx, slot].set(
+                    v[:, 0].astype(st["v"].dtype))
+                o = decode_attention(q, st["k"], st["v"], pos,
+                                     window=cfg.window if is_local else None,
+                                     softcap=cfg.attn_softcap, ring=is_local)
             delta = _attn_out(cfg, ctx, p, o, plan)
             if cfg.post_norms:
                 delta = _norm(delta, p["pn1"], cfg.norm_eps)
@@ -440,6 +467,65 @@ def decode_fn(cfg: ArchConfig, ctx: TmpCtx, kind: str) -> Callable:
             st = {"S": S, "conv": hist[:, 1:]}
         else:
             raise ValueError(kind)
+        if parts_mlp is not None:
+            d, _ = parts_mlp(p, x, aux)
+            x = x + d
+        return x, st
+
+    return fn
+
+
+def verify_fn(cfg: ArchConfig, ctx: TmpCtx, kind: str) -> Callable:
+    """Multi-token decode step for speculative verification.
+
+    Like :func:`decode_fn` but ``x`` carries ``qn`` consecutive draft
+    tokens at absolute positions ``pos + j``; the layer writes all ``qn``
+    KV entries and attends causally within the block (write-then-attend,
+    same convention as single-token decode, so verifying a draft of 1 is
+    the plain decode step).  Only GLOBAL_ATTN layers support this:
+    skipping ahead through ring buffers or recurrent states would need
+    their intermediate states, which is exactly what verification avoids
+    recomputing."""
+    if kind != GLOBAL_ATTN:
+        raise NotImplementedError(
+            f"speculative verification supports global-attention layers "
+            f"only (got {kind}) — local-window ring buffers and recurrent "
+            f"states cannot absorb multi-token jumps")
+    parts_mlp = make_mlp_part(cfg, ctx) if cfg.d_ff else None
+
+    def fn(p, x, st, aux):
+        pos = aux["pos"]                       # [b]; token j sits at pos+j
+        b, qn, _ = x.shape
+        bidx = jnp.arange(b, dtype=jnp.int32)
+        positions = pos[:, None] + jnp.arange(qn, dtype=jnp.int32)[None, :]
+        h = _norm(x, p["ln"], cfg.norm_eps)
+        q, k, v, plan = _qkv(cfg, ctx, p, h, positions)
+        st = dict(st)
+        if "tables" in aux:
+            tables = aux["tables"]
+            page = st["k"].shape[1]
+            lim = tables.shape[1] * page
+            clamped = jnp.minimum(positions, lim - 1)
+            phys = tables[bidx[:, None], clamped // page]       # [b, qn]
+            st["k"] = st["k"].at[phys, clamped % page].set(
+                k.astype(st["k"].dtype))
+            st["v"] = st["v"].at[phys, clamped % page].set(
+                v.astype(st["v"].dtype))
+            o = paged_decode_attention_multi(q, st["k"], st["v"], tables,
+                                             pos, softcap=cfg.attn_softcap)
+        else:
+            S = st["k"].shape[1]
+            slots = jnp.minimum(positions, S - 1)
+            st["k"] = st["k"].at[bidx[:, None], slots].set(
+                k.astype(st["k"].dtype))
+            st["v"] = st["v"].at[bidx[:, None], slots].set(
+                v.astype(st["v"].dtype))
+            o = decode_attention_multi(q, st["k"], st["v"], pos,
+                                       softcap=cfg.attn_softcap)
+        delta = _attn_out(cfg, ctx, p, o, plan)
+        if cfg.post_norms:
+            delta = _norm(delta, p["pn1"], cfg.norm_eps)
+        x = x + delta
         if parts_mlp is not None:
             d, _ = parts_mlp(p, x, aux)
             x = x + d

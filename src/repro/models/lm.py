@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ArchConfig, TrainHParams
+from repro.configs.base import GLOBAL_ATTN, ArchConfig, TrainHParams
 from repro.core import compat
 from repro.core import tmp as tmpc
 from repro.core.axes import MeshInfo, batch_pspec, mesh_info
@@ -484,6 +484,31 @@ def _decode_embed(cfg, ctx, params, tokens, pos):
     return x
 
 
+def _apply_cow(state, pat, tail, cow_src, cow_dst):
+    """On-device copy-on-write for paged KV pools: copy page ``src`` over
+    page ``dst`` in every GLOBAL_ATTN layer's k/v pool before the step
+    writes.  ``cow_src``/``cow_dst`` are fixed-length int32 arrays padded
+    with (0, 0) no-ops (page 0 is the reserved null page), so COW costs
+    zero extra dispatches and the jitted step shape never changes.  The
+    page axis is always -4 ([..., pages, page, kvh, hd]), which covers
+    both the flat and the pipeline-restacked layouts."""
+    def fix(entry):
+        e = dict(entry)
+        for key in ("k", "v"):
+            leaf = e[key]
+            taken = jnp.take(leaf, cow_src, axis=-4)
+            idx = (Ellipsis, cow_dst) + (slice(None),) * 3
+            e[key] = leaf.at[idx].set(taken)
+        return e
+
+    out = dict(state)
+    out["blocks"] = [fix(ent) if pat[i] == GLOBAL_ATTN else ent
+                     for i, ent in enumerate(state["blocks"])]
+    out["tail"] = [fix(ent) if tail[i] == GLOBAL_ATTN else ent
+                   for i, ent in enumerate(state.get("tail", []))]
+    return out
+
+
 def _no_pipe(info: MeshInfo, what: str):
     if info.pp > 1:
         raise ValueError(
@@ -555,7 +580,8 @@ def build_prefill(cfg: ArchConfig, mesh, hp: TrainHParams, *,
 
 
 def build_decode(cfg: ArchConfig, mesh, hp: TrainHParams, *,
-                 global_batch: int, seq_len: int, n_micro: int = 0):
+                 global_batch: int, seq_len: int, n_micro: int = 0,
+                 paged=None):
     """serve_step(params, state, tokens [b], pos [b]) -> (next [b], state).
 
     Decode runs under the same ``TmpCtx`` schedule machinery as training:
@@ -567,25 +593,37 @@ def build_decode(cfg: ArchConfig, mesh, hp: TrainHParams, *,
     stages as ``n_micro`` micro-groups (``core/pipeline.decode_stream``):
     stage ``s`` decodes micro-group ``g`` while stage ``s-1`` decodes
     ``g+1``, with per-stage KV caches staying put on their stage.
-    """
+
+    ``paged=(pages, page_size)`` switches GLOBAL_ATTN caches to the page
+    pool layout and the step signature to
+    ``(params, state, tokens, pos, tables, cow_src, cow_dst)`` — the
+    engine passes each slot's block table every tick and schedules
+    copy-on-write page copies through the padded cow arrays
+    (:mod:`repro.serving.paged_cache`).  The slot batch runs replicated
+    in paged mode (the pool is shared across slots, so data axes shard
+    requests across engine replicas, not slots within a pool)."""
     info = mesh_info(mesh)
     specs = prm.model_specs(cfg, info, max_pos=seq_len + 8,
                             layout=hp.tmp_layout,
                             virtual_stages=hp.virtual_stages)
     ctx = TmpCtx(info, schedule=hp.schedule, use_pallas=hp.use_pallas,
                  layout=hp.tmp_layout)
-    bspec = batch_pspec(info, global_batch)
+    bspec = P() if paged is not None else batch_pspec(info, global_batch)
     st_specs = prm.cache_specs(cfg, info, batch=global_batch, seq=seq_len,
                                batch_spec=bspec, layout=hp.tmp_layout,
-                               virtual_stages=hp.virtual_stages)
+                               virtual_stages=hp.virtual_stages, paged=paged)
     n, pat, tail = prm.stack_layout(cfg)
     if info.pp > 1:
         return _build_decode_pp(cfg, mesh, hp, info, ctx, specs, st_specs,
-                                bspec, global_batch, n_micro)
+                                bspec, global_batch, n_micro, paged=paged)
 
-    def body(params, state, tokens, pos):
-        x = _decode_embed(cfg, ctx, params, tokens, pos)
+    def body(params, state, tokens, pos, *extra):
         aux = {"pos": pos}
+        if paged is not None:
+            tables, cow_src, cow_dst = extra
+            state = _apply_cow(state, pat, tail, cow_src, cow_dst)
+            aux["tables"] = tables
+        x = _decode_embed(cfg, ctx, params, tokens, pos)
         fns = {k: blk.decode_fn(cfg, ctx, k) for k in set(pat) | set(tail)}
 
         # KV caches ride in the scan CARRY and are updated with in-place
@@ -626,15 +664,16 @@ def build_decode(cfg: ArchConfig, mesh, hp: TrainHParams, *,
         return greedy_token(logits, ctx.tp_axes), new_state
 
     st_ps = prm.pspec_tree(st_specs)
+    extra_ps = (P(), P(), P()) if paged is not None else ()
     sm = compat.shard_map(
         body, mesh=mesh,
-        in_specs=(prm.pspec_tree(specs), st_ps, bspec, bspec),
+        in_specs=(prm.pspec_tree(specs), st_ps, bspec, bspec) + extra_ps,
         out_specs=(bspec, st_ps), check_vma=False)
     return sm, specs, st_specs
 
 
 def _build_decode_pp(cfg, mesh, hp, info, ctx, specs, st_specs, bspec,
-                     global_batch, n_micro):
+                     global_batch, n_micro, paged=None):
     """Pipeline-parallel serve_step: per-stage token micro-step streaming.
 
     Stage ``s = c*pp + d`` holds layers ``[s*n/S, (s+1)*n/S)`` of the
@@ -649,12 +688,18 @@ def _build_decode_pp(cfg, mesh, hp, info, ctx, specs, st_specs, bspec,
     v = max(hp.virtual_stages, 1)
     per = n // (info.pp * v)
     pipe_ax = info.pipe_axes[0]
-    b_local = local_batch(info, global_batch)
+    # paged mode runs the slot batch replicated (shared page pool), so the
+    # stream sees the full batch on every data shard
+    b_local = (global_batch if paged is not None
+               else local_batch(info, global_batch))
     micro = pl.resolve_decode_micro(b_local, info.pp, v, n_micro)
     mb = b_local // micro
 
-    def body(params, state, tokens, pos):
+    def body(params, state, tokens, pos, *extra):
         b = tokens.shape[0]
+        if paged is not None:
+            tables, cow_src, cow_dst = extra
+            state = _apply_cow(state, pat, [], cow_src, cow_dst)
         x = _decode_embed(cfg, ctx, params, tokens, pos)
         fns = {k: blk.decode_fn(cfg, ctx, k) for k in set(pat)}
 
@@ -664,6 +709,9 @@ def _build_decode_pp(cfg, mesh, hp, info, ctx, specs, st_specs, bspec,
                           for bl in params["blocks"])
             aux = {"pos": lax.dynamic_slice_in_dim(pos, mc * mb, mb,
                                                    axis=0)}
+            if paged is not None:
+                aux["tables"] = lax.dynamic_slice_in_dim(tables, mc * mb,
+                                                         mb, axis=0)
 
             def block_body(carry, inp):
                 xc, st_stack = carry
@@ -691,7 +739,7 @@ def _build_decode_pp(cfg, mesh, hp, info, ctx, specs, st_specs, bspec,
         x_mb = x.reshape((micro, mb) + tuple(x.shape[1:]))
         outs, new_blocks = pl.decode_stream(
             stage_fn, x_mb, tuple(state["blocks"]), pipe_axis=pipe_ax,
-            pp=info.pp, virtual_stages=v)
+            pp=info.pp, virtual_stages=v, paged=paged is not None)
         x = outs.reshape((b,) + tuple(x.shape[1:]))
         x = lax.psum(pl.mask_to_last_stage(x, pipe_ax, info.pp), pipe_ax)
         x = tmpc.rms_norm(x, params["final_ln"], cfg.norm_eps)
@@ -700,8 +748,110 @@ def _build_decode_pp(cfg, mesh, hp, info, ctx, specs, st_specs, bspec,
                                                    "tail": []}
 
     st_ps = prm.pspec_tree(st_specs)
+    extra_ps = (P(), P(), P()) if paged is not None else ()
     sm = compat.shard_map(
         body, mesh=mesh,
-        in_specs=(prm.pspec_tree(specs), st_ps, bspec, bspec),
+        in_specs=(prm.pspec_tree(specs), st_ps, bspec, bspec) + extra_ps,
+        out_specs=(bspec, st_ps), check_vma=False)
+    return sm, specs, st_specs
+
+
+def build_verify(cfg: ArchConfig, mesh, hp: TrainHParams, *,
+                 global_batch: int, seq_len: int, paged=None):
+    """verify_step(params, state, tokens [b, qn], pos [b])
+    -> (choices [b, qn], state): the speculative-decoding target forward.
+
+    One batched pass writes KV for all ``qn`` draft tokens (positions
+    ``pos..pos+qn-1``), attends causally within the block and returns the
+    target's greedy choice *after* each token — ``choices[:, j]`` is what
+    undrafted decode would have emitted given ``tokens[:, :j+1]``, so the
+    engine's longest-agreeing-run acceptance is token-identical to the
+    oracle.  Collective latency is paid once per ``qn`` tokens instead of
+    per token: the amortization :func:`costmodel.decode_step_time` models
+    with ``spec_k``.
+
+    With ``paged=(pages, page_size)`` the step takes the same
+    ``(tables, cow_src, cow_dst)`` trailing args as paged
+    :func:`build_decode`.  Requires an all-GLOBAL_ATTN layer pattern and
+    no ``pipe`` mesh axis (drafting across stage boundaries would stall
+    the decode stream it is meant to fill)."""
+    info = mesh_info(mesh)
+    if info.pp > 1:
+        raise ValueError(
+            "speculative verification does not support a 'pipe' mesh axis "
+            "yet — serve spec-decode on a data x model (TMP/2D) mesh, or "
+            "drop --draft/--spec-k on pipeline meshes")
+    n, pat, tail = prm.stack_layout(cfg)
+    other = sorted((set(pat) | set(tail)) - {GLOBAL_ATTN})
+    if other:
+        raise ValueError(
+            f"speculative decoding requires an all-global-attention "
+            f"layer pattern; {cfg.name} mixes in {other} (ring-buffer "
+            f"and recurrent states cannot absorb multi-token jumps)")
+    specs = prm.model_specs(cfg, info, max_pos=seq_len + 8,
+                            layout=hp.tmp_layout)
+    ctx = TmpCtx(info, schedule=hp.schedule, use_pallas=hp.use_pallas,
+                 layout=hp.tmp_layout)
+    bspec = P() if paged is not None else batch_pspec(info, global_batch)
+    st_specs = prm.cache_specs(cfg, info, batch=global_batch, seq=seq_len,
+                               batch_spec=bspec, layout=hp.tmp_layout,
+                               paged=paged)
+
+    def body(params, state, tokens, pos, *extra):
+        b, qn = tokens.shape
+        aux = {"pos": pos}
+        if paged is not None:
+            tables, cow_src, cow_dst = extra
+            state = _apply_cow(state, pat, tail, cow_src, cow_dst)
+            aux["tables"] = tables
+        x = tmpc.vocab_parallel_embed(tokens, params["embed"], ctx.tp_axes)
+        if cfg.name.startswith("gemma") or cfg.name.startswith(
+                "recurrentgemma"):
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if "pos_embed" in params:
+            positions = pos[:, None] + jnp.arange(qn, dtype=jnp.int32)[None]
+            pe = jnp.take(params["pos_embed"], jnp.minimum(
+                positions, params["pos_embed"].shape[0] - 1), axis=0)
+            x = x + pe.astype(x.dtype)
+        fns = {k: blk.verify_fn(cfg, ctx, k) for k in set(pat) | set(tail)}
+
+        def block_body(carry, inp):
+            xc, st_stack = carry
+            layer_params, i = inp
+            st_out = []
+            for p_, kind in enumerate(pat):
+                st_i = jax.tree_util.tree_map(
+                    lambda t: lax.dynamic_index_in_dim(t, i, 0, False),
+                    st_stack[p_])
+                xc, st = fns[kind](layer_params[p_], xc, st_i, aux)
+                st_out.append(st)
+            st_stack = tuple(
+                jax.tree_util.tree_map(
+                    lambda t, s: lax.dynamic_update_index_in_dim(
+                        t, s.astype(t.dtype), i, 0), st_stack[p_], st_out[p_])
+                for p_ in range(len(pat)))
+            return (xc, st_stack), None
+
+        new_state: Dict[str, Any] = {"blocks": [], "tail": []}
+        if n:
+            (x, blocks_st), _ = lax.scan(
+                block_body, (x, tuple(state["blocks"])),
+                (tuple(params["blocks"]), jnp.arange(n, dtype=jnp.int32)))
+            new_state["blocks"] = list(blocks_st)
+        for i, kind in enumerate(tail):
+            st_i = jax.tree_util.tree_map(lambda t: t[0], state["tail"][i])
+            x, st = fns[kind](params["tail"][i], x, st_i, aux)
+            new_state["tail"].append(
+                jax.tree_util.tree_map(lambda t: t[None], st))
+
+        x = tmpc.rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = _last_logits(cfg, params, x.reshape(b * qn, -1), ctx)
+        return greedy_token(logits, ctx.tp_axes).reshape(b, qn), new_state
+
+    st_ps = prm.pspec_tree(st_specs)
+    extra_ps = (P(), P(), P()) if paged is not None else ()
+    sm = compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(prm.pspec_tree(specs), st_ps, bspec, bspec) + extra_ps,
         out_specs=(bspec, st_ps), check_vma=False)
     return sm, specs, st_specs

@@ -413,7 +413,7 @@ def plan_groups(cfg: ArchConfig, degrees: Sequence,
 # --------------------------------------------------------------------------
 def cache_specs(cfg: ArchConfig, info: MeshInfo, *, batch: int, seq: int,
                 batch_spec, layout: str = "auto",
-                virtual_stages: int = 1) -> Dict[str, Any]:
+                virtual_stages: int = 1, paged=None) -> Dict[str, Any]:
     """State tree for serve_step.  Global shapes; kv-head dim sharded when
     the attention plan shards it (replicated+sliced layouts store
     tp*kv_slice).  2D: heads shard over the x-axes only (dx).
@@ -422,7 +422,17 @@ def cache_specs(cfg: ArchConfig, info: MeshInfo, *, batch: int, seq: int,
     stage-sharded ``[v, pp, n/S, ...]`` layout mirroring
     :func:`_stack_pipeline` — each stage owns exactly the cache of the
     layers it holds, so decode state memory shards 1/pp alongside the
-    weights (the serving analogue of the Eq. 6 weight-memory row)."""
+    weights (the serving analogue of the Eq. 6 weight-memory row).
+
+    ``paged=(pages, page_size)`` swaps GLOBAL_ATTN k/v from the dense
+    per-slot ``[n, batch, seq, kvh, hd]`` layout to a shared page pool
+    ``[n, pages, page_size, kvh, hd]`` addressed through a per-slot block
+    table (``serving/paged_cache.py``) — slots no longer reserve
+    ``max_seq`` each, so HBM scales with tokens actually resident.  The
+    pool has no batch dim: the engine runs the slot batch replicated over
+    data axes in paged mode (data parallelism shards *requests across
+    engine replicas*, not slots within one pool).  Local/recurrent/cross
+    states keep their dense layouts."""
     tp_ax, _, tp, _ = info_xy(info, None, layout)
     plan = attn_plan(cfg, tp)
     hd = cfg.resolved_head_dim
@@ -442,13 +452,22 @@ def cache_specs(cfg: ArchConfig, info: MeshInfo, *, batch: int, seq: int,
             "v": Spec((n, batch, s, kv_heads, hd), P(None, bsp, None, kv_sh, None), dt),
         }
 
+    def kv_paged(n):
+        pages, page_size = paged
+        return {
+            "k": Spec((n, pages, page_size, kv_heads, hd),
+                      P(None, None, None, kv_sh, None), dt),
+            "v": Spec((n, pages, page_size, kv_heads, hd),
+                      P(None, None, None, kv_sh, None), dt),
+        }
+
     n, pat, tail = stack_layout(cfg)
     d_inner, nheads, nstate = ssd_dims(cfg)
     w = cfg.rglru_width or cfg.d_model
 
     def state_for(kind, count):
         if kind == GLOBAL_ATTN:
-            return kv(count, seq)
+            return kv_paged(count) if paged is not None else kv(count, seq)
         if kind == LOCAL_ATTN:
             return kv(count, min(seq, cfg.window))
         if kind == CROSS_ATTN:

@@ -11,6 +11,10 @@ Sections:
 * **overlap** — the runtime overlap-efficiency probe's per-layer-group
   events: predicted vs measured exposed-communication fraction and the
   residual against the calibrated cost model;
+* **serving** — the serving path's own dashboard when ``serving.*``
+  metrics are present: throughput, mean/percentile TTFT, prefix-cache hit
+  rate, speculative accept rate, page-pool level and admission
+  backpressure;
 * **counters / gauges** — run totals and last-seen levels;
 * **events** — the notable trail (faults, replans, calibration_stale,
   planner decisions), newest last.
@@ -69,6 +73,50 @@ def _table(headers: List[str], rows: List[List[str]]) -> str:
     return "\n".join(out)
 
 
+def _serving_section(hists: Dict[str, List[float]],
+                     counters: Dict[str, float],
+                     gauges: Dict[str, float]) -> List[List[str]]:
+    """The serving path's dashboard rows (empty when the run emitted no
+    ``serving.*`` metrics): throughput and TTFT from the histograms,
+    cache efficiency and backpressure from the gauges/counters."""
+    if not any(n.startswith("serving.")
+               for n in (*hists, *counters, *gauges)):
+        return []
+    rows: List[List[str]] = []
+    if "serving.tok_per_s" in gauges:
+        rows.append(["throughput (tok/s)",
+                     f"{gauges['serving.tok_per_s']:.1f}"])
+    if "serving.decoded_tokens" in counters:
+        rows.append(["decoded tokens",
+                     f"{counters['serving.decoded_tokens']:g}"])
+    ttft = hists.get("serving.ttft_s")
+    if ttft:
+        rows.append(["TTFT mean / p90",
+                     f"{_fmt_s(sum(ttft) / len(ttft))} / "
+                     f"{_fmt_s(_pct(ttft, 90))}"])
+    steps = hists.get("serving.decode_step_s")
+    if steps:
+        rows.append(["decode step p50 / p99",
+                     f"{_fmt_s(_pct(steps, 50))} / "
+                     f"{_fmt_s(_pct(steps, 99))}"])
+    if "serving.prefix_hit_rate" in gauges:
+        rows.append(["prefix-cache hit rate",
+                     f"{gauges['serving.prefix_hit_rate']:.1%}"])
+    if "serving.spec_accept_rate" in gauges:
+        rows.append(["speculative accept rate",
+                     f"{gauges['serving.spec_accept_rate']:.1%}"])
+    if "serving.free_pages" in gauges:
+        rows.append(["free KV pages (last)",
+                     f"{gauges['serving.free_pages']:g}"])
+    if "serving.admission_deferred" in counters:
+        rows.append(["admissions deferred (cache full)",
+                     f"{counters['serving.admission_deferred']:g}"])
+    if "serving.slot_occupancy" in gauges:
+        rows.append(["slot occupancy (last)",
+                     f"{gauges['serving.slot_occupancy']:.1%}"])
+    return rows
+
+
 def render(records: List[Dict]) -> str:
     hists: Dict[str, List[float]] = {}
     counters: Dict[str, float] = {}
@@ -119,6 +167,10 @@ def render(records: List[Dict]) -> str:
             "== overlap efficiency (exposed-communication fraction) ==\n"
             + _table(["group", "schedule", "layers", "predicted",
                       "measured", "residual"], rows))
+    serving_rows = _serving_section(hists, counters, gauges)
+    if serving_rows:
+        parts.append("== serving ==\n" + _table(["metric", "value"],
+                                                serving_rows))
     if counters:
         rows = [[n, f"{v:g}"] for n, v in sorted(counters.items())]
         parts.append("== counters ==\n" + _table(["counter", "total"], rows))

@@ -32,23 +32,38 @@ MAX_SEQ = 48
 N_REQ = 6          # > SLOTS: exercises slot reuse + admission backlog
 
 
-def decode_all(cfg, mesh, hp, *, slots=SLOTS, decode_micro=0):
+def decode_all(cfg, mesh, hp, *, slots=SLOTS, decode_micro=0, prompts=None,
+               **eng_kw):
     eng = ServingEngine(cfg, mesh, slots=slots, max_seq=MAX_SEQ, hp=hp,
-                        decode_micro=decode_micro)
+                        decode_micro=decode_micro, **eng_kw)
     eng.load(seed=0)
     rng = np.random.default_rng(123)
     reqs = []
     for i in range(N_REQ):
-        plen = int(rng.integers(3, 8))
-        reqs.append(Request(rid=i,
-                            prompt=rng.integers(3, cfg.vocab_size, plen,
-                                                dtype=np.int32),
-                            max_new_tokens=6))
+        if prompts is not None:
+            p = prompts[i]
+        else:
+            plen = int(rng.integers(3, 8))
+            p = rng.integers(3, cfg.vocab_size, plen, dtype=np.int32)
+        reqs.append(Request(rid=i, prompt=p, max_new_tokens=6))
     for r in reqs:
         eng.submit(r)
     stats = eng.run_until_drained()
     assert stats["admitted"] == N_REQ, stats
     return [r.out_tokens for r in reqs]
+
+
+def shared_prefix_prompts(vocab):
+    """Prompts sharing block-aligned and mid-block prefixes (page_size=8):
+    hits shorter and longer than one block, plus mid-block divergence."""
+    rng = np.random.default_rng(7)
+    base = rng.integers(3, vocab, 12, dtype=np.int32)
+    out = []
+    for i in range(N_REQ):
+        keep = (6, 12, 9, 12, 6, 9)[i]          # mid-block + full reuse
+        tail = rng.integers(3, vocab, 3 + (i % 3), dtype=np.int32)
+        out.append(np.concatenate([base[:keep], tail]).astype(np.int32))
+    return out
 
 
 def check_tokens(name, got, ref):
@@ -104,6 +119,63 @@ for name, msh in (("pp2-tmp2", runner.mesh(2, 2, 2,
                                                "model_y")))):
     got = decode_all(gcfg, msh, TrainHParams(schedule="fused"))
     check_tokens(f"serve-gemma2-{name}-fused", got, gref)
+
+# ---- part 6: paged KV decode reads through the block table ---------------
+# page-pool gather must be bitwise-invisible to the token stream on every
+# mesh shape (the pool is replicated; pos/tables drive the gather)
+for name, msh, hp in (
+        ("tmp2-fused", runner.mesh(4, 2), TrainHParams(schedule="fused")),
+        ("2d-2x2-oases", runner.mesh(1, 2, 2,
+                                     axes=("data", "model_x", "model_y")),
+         TrainHParams(schedule="oases")),
+        ("pp2-tmp2-fused", runner.mesh(2, 2, 2,
+                                       axes=("pipe", "data", "model")),
+         TrainHParams(schedule="fused")),
+):
+    got = decode_all(cfg, msh, hp, paged=True, page_size=8)
+    check_tokens(f"serve-paged-{name}", got, ref)
+
+# ---- part 7: prefix reuse (shared blocks + COW) vs dense oracle ----------
+sp = shared_prefix_prompts(cfg.vocab_size)
+spref = decode_all(cfg, runner.mesh(1, 1), TrainHParams(), prompts=sp)
+for name, msh, hp in (
+        ("1dev", runner.mesh(1, 1), TrainHParams()),
+        ("tmp2-fused", runner.mesh(4, 2), TrainHParams(schedule="fused")),
+):
+    got = decode_all(cfg, msh, hp, prompts=sp, paged=True, page_size=8,
+                     prefix_cache=True)
+    check_tokens(f"serve-prefix-{name}", got, spref)
+
+# ---- part 8: speculative decoding vs the undrafted oracle ----------------
+# the draft is the same reduced arch under independent weights (load()
+# seeds it with seed+1), so proposals genuinely diverge from the target;
+# greedy acceptance must still be token-identical to undrafted decode
+for name, msh, hp in (
+        ("1dev", runner.mesh(1, 1), TrainHParams()),
+        ("tmp2-fused", runner.mesh(4, 2), TrainHParams(schedule="fused")),
+        ("2d-2x2-oases", runner.mesh(1, 2, 2,
+                                     axes=("data", "model_x", "model_y")),
+         TrainHParams(schedule="oases")),
+):
+    got = decode_all(cfg, msh, hp, draft=cfg, spec_k=3)
+    check_tokens(f"serve-spec-{name}", got, ref)
+
+# the full production path: paged + prefix reuse + speculative rounds on a
+# TMP mesh, against the plain single-device oracle on the same workload
+got = decode_all(cfg, runner.mesh(4, 2), TrainHParams(schedule="fused"),
+                 prompts=sp, paged=True, page_size=8, prefix_cache=True,
+                 draft=cfg, spec_k=3)
+check_tokens("serve-spec-paged-prefix-tmp2", got, spref)
+
+# ---- part 9: spec verification rejects a pipeline mesh loudly ------------
+try:
+    ServingEngine(cfg, runner.mesh(2, 2, 2, axes=("pipe", "data", "model")),
+                  slots=SLOTS, max_seq=MAX_SEQ,
+                  hp=TrainHParams(schedule="fused"), draft=cfg, spec_k=2)
+    runner.report("serve-spec-rejects-pp", False, "no error raised")
+except ValueError as e:
+    runner.report("serve-spec-rejects-pp", "pipe" in str(e),
+                  str(e)[:70])
 
 import sys  # noqa: E402
 

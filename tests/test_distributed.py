@@ -140,7 +140,10 @@ def test_serving_equivalence():
     """Sharded greedy decode through the continuous-batching engine is
     token-identical to the single-device oracle: pp in {1,2} x tmp in
     {1,2} x {megatron,oases,fused}, plus the 2D hybrid decode layout,
-    explicit micro-group counts, an indivisible slot count, and gemma2
+    explicit micro-group counts, an indivisible slot count, gemma2,
+    and the serving-at-scale grid — paged KV (incl. the pp decode
+    stream), prefix reuse with COW, speculative decoding vs the
+    undrafted oracle, and the combined paged+prefix+spec path
     (PR acceptance)."""
     lines = _run("serving_equivalence.py", timeout=1800)
-    assert len(lines) >= 18
+    assert len(lines) >= 30
